@@ -1,0 +1,35 @@
+"""Fig. 7 reproduction: distribution of Parm speedups over the baseline on
+the Table III grid at N_MP = N_ESP = 4 (the paper's 32-GPU statistic:
+4.91x average, >4x in ~89% of cases)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, table3_grid
+from repro.core.perfmodel import MoELayerShape, speedup_table, tpu_v5e_model
+
+
+def main():
+    speedups = []
+    for c in table3_grid():
+        if not (c["n_mp"] == 4 and c["n_esp"] == 4 and c["P"] == 32):
+            continue
+        m = tpu_v5e_model(c["n_ep"], c["n_esp"], c["n_mp"])
+        s = MoELayerShape(B=c["B"], L=c["L"], M=c["M"], H=c["H"],
+                          E=c["E"], k=c["k"], f=c["f"], n_mp=4, n_esp=4,
+                          n_ep=c["n_ep"])
+        speedups.append(speedup_table(s, m)["speedup_parm"])
+
+    speedups.sort()
+    n = len(speedups)
+    avg = sum(speedups) / n
+    emit("fig7/configs", 0.0, f"n={n}")
+    emit("fig7/avg_speedup", 0.0, f"{avg:.2f}x (paper: 4.91x)")
+    emit("fig7/p10", 0.0, f"{speedups[n // 10]:.2f}x")
+    emit("fig7/p90", 0.0, f"{speedups[9 * n // 10]:.2f}x")
+    frac4 = sum(s > 4 for s in speedups) / n
+    emit("fig7/frac_gt_4x", 0.0, f"{frac4:.2f} (paper: ~0.89)")
+    assert avg > 1.5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline report: read artifacts/dryrun/*.json (the baseline dry-runs)
+and emit one row per (arch x shape x mesh) with the three roofline terms
+and the dominant bottleneck (§Roofline deliverable)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    n = 0
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            emit(f"roofline/{rec['arch']}__{rec['shape']}__{rec['mesh']}",
+                 0.0, "skipped: " + rec["skipped"])
+            continue
+        rl = rec["roofline"]
+        emit(f"roofline/{rec['arch']}__{rec['shape']}__{rec['mesh']}",
+             rl["t_compute_s"] * 1e6,
+             f"mem={rl['t_memory_s'] * 1e6:.1f}us "
+             f"coll={rl['t_collective_s'] * 1e6:.1f}us "
+             f"bound={rl['bottleneck']} "
+             f"useful={rl['useful_flops_ratio']:.2f} "
+             f"sched={rec.get('schedule')}")
+        n += 1
+    emit("roofline/rows", 0.0, f"n={n}")
+
+
+if __name__ == "__main__":
+    main()

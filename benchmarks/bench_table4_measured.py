@@ -1,0 +1,64 @@
+"""Table IV (measured companion): wall-clock MoE-layer iteration time for
+baseline vs S1 vs S2 vs Parm(auto) on a real 8-device (4x2) mesh — actual
+execution of the three schedules, CPU fabric.  Subset of the Table III
+grid scaled to CPU-feasible sizes.
+
+Run via subprocess with 8 fake devices (benchmarks/run.py handles it).
+"""
+
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+
+from benchmarks.common import emit, time_fn             # noqa: E402
+from repro.core.moe import (MoEConfig, apply_moe,       # noqa: E402
+                            init_moe_params)
+from repro.parallel.mesh import ParallelDims, make_mesh  # noqa: E402
+
+CASES = [
+    # (B, L, M, H, E, k, f)
+    (8, 256, 256, 512, 8, 2, 1.2),
+    (8, 256, 256, 512, 8, 2, 2.4),
+    (4, 512, 512, 1024, 8, 2, 1.2),
+    (8, 512, 256, 1024, 8, 1, 1.2),
+    (4, 256, 512, 512, 8, 4, 1.2),
+    (2, 1024, 256, 512, 8, 2, 1.2),
+]
+
+
+def main():
+    mesh = make_mesh((4, 2), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    wins = 0
+    for (B, L, M, H, E, k, f) in CASES:
+        cfg = MoEConfig(d_model=M, d_ff=H, n_experts=E, top_k=k,
+                        capacity_factor=f)
+        params = init_moe_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, L, M))
+        times = {}
+        for sched in ["baseline", "s1", "s2", "auto"]:
+            fn = jax.jit(lambda x, p, s=sched: apply_moe(
+                x, p, mesh=mesh, dims=dims, cfg=cfg, schedule=s)[0])
+            fn(x, params).block_until_ready()
+            times[sched] = time_fn(
+                lambda: fn(x, params).block_until_ready(), iters=7)
+        name = f"B{B}_L{L}_M{M}_H{H}_E{E}_k{k}_f{f}"
+        sp1 = times["baseline"] / times["s1"]
+        sp2 = times["baseline"] / times["s2"]
+        spa = times["baseline"] / times["auto"]
+        emit(f"table4m/{name}", times["baseline"] * 1e6,
+             f"s1={sp1:.2f}x s2={sp2:.2f}x parm={spa:.2f}x")
+        wins += spa > 1.0
+    emit("table4m/parm_wins", 0.0, f"{wins}/{len(CASES)}")
+
+
+if __name__ == "__main__":
+    main()

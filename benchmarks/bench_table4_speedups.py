@@ -1,0 +1,65 @@
+"""Table IV reproduction: average speedups of S1 / S2 / Parm over the
+baseline schedule on the Table III configuration grid, grouped by
+(N_MP, N_ESP) — analytic alpha-beta model with TPU v5e constants.
+
+The paper reports 1.13x-5.77x (avg 2.1x-5.77x per group) on GPU PCIe
+clusters; the structure (monotone in N_MP/N_ESP, Parm >= max(S1, S2))
+must reproduce on any fabric.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import emit, table3_grid
+from repro.core.perfmodel import MoELayerShape, speedup_table, tpu_v5e_model
+
+
+def main():
+    groups = defaultdict(list)
+    n_total = 0
+    all_speedups = []
+    for c in table3_grid():
+        if c["n_mp"] == 1:          # Table IV groups have N_MP in {2, 4}
+            continue
+        m = tpu_v5e_model(c["n_ep"], c["n_esp"], c["n_mp"],
+                          inter_pod=c["P"] > 256)
+        s = MoELayerShape(B=c["B"], L=c["L"], M=c["M"], H=c["H"],
+                          E=c["E"], k=c["k"], f=c["f"], n_mp=c["n_mp"],
+                          n_esp=c["n_esp"], n_ep=c["n_ep"])
+        row = speedup_table(s, m)
+        groups[(c["n_mp"], c["n_esp"])].append(row)
+        all_speedups.append(row["speedup_parm"])
+        n_total += 1
+
+    emit("table4/configs", 0.0, f"n={n_total}")
+    for (n_mp, n_esp), rows in sorted(groups.items()):
+        for key in ("speedup_s1", "speedup_s2", "speedup_parm"):
+            avg = sum(r[key] for r in rows) / len(rows)
+            emit(f"table4/mp{n_mp}_esp{n_esp}_{key}", 0.0, f"{avg:.3f}x")
+        # paper invariant: Parm picks the better of S1/S2 per config
+        for r in rows:
+            assert (r["speedup_parm"]
+                    >= max(r["speedup_s1"], r["speedup_s2"]) - 1e-9)
+            # Eq. (6)/(10) claim S1/S2 always beat the baseline.  That holds
+            # for S1 everywhere; for S2 a handful of alpha-dominated tiny-T
+            # configs dip to ~0.99x because Eq. (10)'s derivation ignores
+            # per-collective startup terms (recorded in EXPERIMENTS.md).
+            assert r["speedup_s1"] > 1.0, r
+            assert r["speedup_s2"] > 0.95, r
+            assert r["speedup_parm"] > 1.0, r
+
+    lo, hi = min(all_speedups), max(all_speedups)
+    emit("table4/range", 0.0, f"{lo:.2f}x..{hi:.2f}x (paper: 1.13x..5.77x)")
+
+    # monotonicity in N_MP (paper: larger N_MP -> larger improvement)
+    m2 = sum(r["speedup_parm"] for r in groups[(2, 2)]) / len(groups[(2, 2)])
+    m4 = sum(r["speedup_parm"] for r in groups[(4, 2)]) / len(groups[(4, 2)])
+    assert m4 > m2, (m2, m4)
+    e2 = sum(r["speedup_parm"] for r in groups[(4, 2)]) / len(groups[(4, 2)])
+    e4 = sum(r["speedup_parm"] for r in groups[(4, 4)]) / len(groups[(4, 4)])
+    assert e4 > e2, (e2, e4)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: the paper's Table III configuration grid,
+timing helpers, and CSV emission."""
+
+from __future__ import annotations
+
+import itertools
+import statistics
+import time
+
+# Paper Table III: candidate values (32-GPU testbed analog).  The paper
+# runs the 1296 valid combinations of these.
+TABLE3 = {
+    "P": [8, 16, 32],
+    "n_mp": [1, 2, 4],
+    "n_esp": [1, 2, 4],
+    "B": [2, 4, 8],
+    "L": [512, 1024, 2048],
+    "MH": [1024, 2048, 4096],   # H/N_ES and M/N_ES candidates
+    "f": [1.2, 2.4],
+}
+
+
+def table3_grid():
+    """Yield valid MoE-layer configs from the Table III grid."""
+    for P, n_mp, n_esp, B, L, MH, f in itertools.product(
+            TABLE3["P"], TABLE3["n_mp"], TABLE3["n_esp"], TABLE3["B"],
+            TABLE3["L"], TABLE3["MH"], TABLE3["f"]):
+        n_ep = P // (n_mp * n_esp) if P % (n_mp * n_esp) == 0 else 0
+        if n_ep < 1:
+            continue
+        M = MH * n_esp
+        H = MH * n_esp
+        E = n_ep                      # one expert per EP rank (paper setup)
+        yield dict(P=P, n_mp=n_mp, n_esp=n_esp, n_ep=n_ep, B=B, L=L,
+                   M=M, H=H, E=E, k=2, f=f)
+
+
+def time_fn(fn, *args, iters=10, warmup=3):
+    """Median wall time per call in seconds (after warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+artifacts/dryrun/*.json.  Usage:
+
+    PYTHONPATH=src:. python -m benchmarks.make_experiments_tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh=None, schedule_suffix=""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if schedule_suffix and (len(parts) < 4 or parts[3] != schedule_suffix):
+            continue
+        if not schedule_suffix and len(parts) != 3:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        recs.append(rec)
+    key = {s: i for i, s in enumerate(SHAPE_ORDER)}
+    recs.sort(key=lambda r: (r["arch"], key.get(r["shape"], 9), r["mesh"]))
+    return recs
+
+
+def fmt_bytes(n):
+    for unit in ["B", "KB", "MB", "GB", "TB"]:
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | sched | compile s | HLO flops/chip |"
+          " coll B/chip | collective mix | arg+tmp mem/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in load():
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — |"
+                  f" — | skipped: {r['skipped']} | — |")
+            continue
+        mem = r.get("memory_analysis") or {}
+        memsum = sum(v for k, v in mem.items()
+                     if v and k in ("argument_size_in_bytes",
+                                    "temp_size_in_bytes"))
+        mix = ",".join(f"{k.split('-')[-1]}:{v}"
+                       for k, v in sorted(
+                           r["collectives"]["counts"].items()))
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+              f" {r['schedule']} | {r['compile_s']:.0f} |"
+              f" {rl['hlo_flops'] / r['chips']:.2e} |"
+              f" {fmt_bytes(rl['collective_bytes_per_chip'])} |"
+              f" {mix} | {fmt_bytes(memsum) if memsum else 'n/a'} |")
+
+
+def roofline_table(mesh="single"):
+    print("| arch | shape | variant | sched | t_comp s | t_mem s |"
+          " t_coll s | bottleneck | useful flops | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in load(mesh=mesh):
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — |"
+                  f" — | {r['skipped']} |")
+            continue
+        rl = r["roofline"]
+        terms = {"compute": rl["t_compute_s"], "memory": rl["t_memory_s"],
+                 "collective": rl["t_collective_s"]}
+        dom = rl["bottleneck"]
+        sub = sorted(terms.values())[-2]
+        note = f"dom/2nd={terms[dom] / max(sub, 1e-12):.1f}x"
+        print(f"| {r['arch']} | {r['shape']} | {r.get('variant', '')} |"
+              f" {r['schedule']} | {rl['t_compute_s']:.3e} |"
+              f" {rl['t_memory_s']:.3e} | {rl['t_collective_s']:.3e} |"
+              f" **{dom}** | {rl['useful_flops_ratio']:.2f} | {note} |")
+
+
+def main():
+    print("### §Dry-run (both meshes)\n")
+    dryrun_table()
+    print("\n### §Roofline (single-pod 16x16 = 256 chips)\n")
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

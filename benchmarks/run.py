@@ -1,0 +1,49 @@
+"""Benchmark runner: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Analytic benches run
+in-process; measured multi-device benches run in subprocesses with 8 fake
+CPU devices (the main process must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+IN_PROCESS = [
+    "benchmarks.bench_fig1_comm_ratio",
+    "benchmarks.bench_table4_speedups",
+    "benchmarks.bench_fig7_stats",
+    "benchmarks.bench_roofline",
+]
+SUBPROCESS = [
+    "benchmarks.bench_fig6_perfmodel",
+    "benchmarks.bench_table4_measured",
+    "benchmarks.bench_table5_realworld",
+]
+
+
+def main() -> None:
+    from importlib import import_module
+    print("name,us_per_call,derived")
+    for mod in IN_PROCESS:
+        import_module(mod).main()
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    for mod in SUBPROCESS:
+        r = subprocess.run([sys.executable, "-m", mod], env=env, cwd=root,
+                           capture_output=True, text=True, timeout=3600)
+        if r.returncode != 0:
+            print(f"{mod},0,FAILED: {r.stderr[-300:]!r}")
+            raise SystemExit(1)
+        for line in r.stdout.splitlines():
+            if "," in line:
+                print(line)
+
+
+if __name__ == '__main__':
+    main()

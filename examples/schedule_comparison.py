@@ -1,0 +1,60 @@
+"""Compare Parm's three schedules on one MoE layer: numerical equivalence,
+communication volume (from compiled HLO), and measured wall time.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/schedule_comparison.py
+
+This is the paper's Fig. 3 in executable form: same math, different
+collective placements, 2-3x less traffic for S1/S2.
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import parse_collectives
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+from repro.parallel.mesh import ParallelDims, make_mesh
+
+
+def main():
+    mesh = make_mesh((4, 2), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    cfg = MoEConfig(d_model=256, d_ff=512, n_experts=8, top_k=2,
+                    capacity_factor=2.0)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 512, 256))
+
+    ref = None
+    print(f"{'schedule':12s} {'coll bytes':>12s} {'collectives':>42s} "
+          f"{'ms/call':>8s} {'max|y-y_base|':>14s}")
+    for sched in ["baseline", "s1", "s2", "s1_seqpar", "auto"]:
+        fn = jax.jit(lambda x, p, s=sched: apply_moe(
+            x, p, mesh=mesh, dims=dims, cfg=cfg, schedule=s)[0])
+        compiled = fn.lower(x, params).compile()
+        stats = parse_collectives(compiled.as_text())
+        y = fn(x, params)
+        y.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            fn(x, params).block_until_ready()
+        dt = (time.perf_counter() - t0) / 5
+        if ref is None:
+            ref = np.asarray(y)
+            err = 0.0
+        else:
+            err = float(np.max(np.abs(np.asarray(y) - ref)))
+        print(f"{sched:12s} {stats.total_bytes:12d} "
+              f"{str(stats.counts):>42s} {dt * 1e3:8.1f} {err:14.2e}")
+
+
+if __name__ == "__main__":
+    main()

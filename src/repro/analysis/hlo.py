@@ -1,0 +1,84 @@
+"""Collective accounting from lowered/compiled HLO text.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+(stable)HLO and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.  This powers both
+the paper's communication-volume validation (Eq. 1/11/14) and the
+roofline collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.  %ag = bf16[16,4096,128]{...} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\])"   # tuple or single shape
+    r"[^=]*?\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    ops: list
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    ``-start``/``-done`` async pairs are counted once (on the start op).
+    """
+    counts = defaultdict(int)
+    nbytes = defaultdict(int)
+    ops = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            size = sum(_shape_bytes(d, s)
+                       for d, s in _SHAPE_RE.findall(tuple_body))
+            if "-start(" in line and kind in ("all-gather", "all-reduce",
+                                              "reduce-scatter"):
+                # start-op tuples carry (input, output); count output only.
+                size //= 2
+        else:
+            size = _shape_bytes(dtype, dims)
+        counts[kind] += 1
+        nbytes[kind] += size
+        ops.append((kind, size))
+    return CollectiveStats(dict(counts), dict(nbytes), ops)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return parse_collectives(hlo_text).total_bytes

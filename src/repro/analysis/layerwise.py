@@ -1,0 +1,182 @@
+"""Layer-wise cost accounting for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``lax.scan`` body once, not
+times its trip count, so whole-program numbers for scanned-layer models
+undercount FLOPs/bytes/collective traffic by ~n_layers.  This module
+lowers ONE block per (run kind) with the production shardings, reads its
+per-device cost, and sums n_r * cost_r over runs plus the embed/head/loss
+cost — giving trip-count-correct roofline terms.
+
+The full-program compile in dryrun.py remains the fits/coherence proof;
+this is the accounting layer on top.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import parse_collectives
+from repro.models import blocks as blk
+from repro.models.layers import apply_norm, unembed
+from repro.parallel.mesh import axis_size
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    ca = ca if isinstance(ca, dict) else (ca[0] if ca else {})
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll.total_bytes),
+            "coll_by_kind": coll.bytes_by_kind}
+
+
+def _acc(total, cost, n):
+    total["flops"] += n * cost["flops"]
+    total["bytes"] += n * cost["bytes"]
+    total["coll"] += n * cost["coll"]
+    for k, v in cost["coll_by_kind"].items():
+        total["coll_by_kind"][k] = total["coll_by_kind"].get(k, 0) + n * v
+
+
+def layerwise_costs(model, cfg, mesh, dims, shape, *, kind: str,
+                    schedule=None) -> dict:
+    """kind: 'train' | 'prefill' | 'decode'. Returns per-device totals."""
+    dtype = jnp.dtype(cfg.dtype)
+    B = shape.global_batch
+    L = shape.seq_len if kind != "decode" else 1
+    M = cfg.d_model
+    baxes = tuple(dims.batch_axes)
+    nb = axis_size(mesh, baxes) if baxes else 1
+    bax = baxes if (baxes and B % nb == 0) else None
+    x_sds = jax.ShapeDtypeStruct((B, L, M), dtype)
+    x_sh = NamedSharding(mesh, P(bax, None, None))
+
+    ctx_sds = ctx_sh = None
+    if model.has_cross:
+        Lctx = cfg.n_ctx_tokens or cfg.encoder_seq
+        ctx_sds = jax.ShapeDtypeStruct((B, Lctx, M), dtype)
+        ctx_sh = NamedSharding(mesh, P(bax, None, None))
+
+    total = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_by_kind": {}}
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def layer_shapes(run_params):
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), run_params)
+
+    for r, (kind_r, n_r) in enumerate(model.runs):
+        specs = blk.block_specs(cfg, kind_r, mesh, dims)
+        p_sh = _named(mesh, specs)
+        p_sds = layer_shapes(p_shapes[f"run{r}"])
+        needs_ctx = blk.base_kind(kind_r) in ("cross", "xdec")
+
+        if kind == "decode":
+            c_one = jax.eval_shape(
+                lambda: blk.init_block_cache(cfg, kind_r, B,
+                                             shape.seq_len, dtype))
+
+            def c_spec(l):
+                sp = [None] * l.ndim
+                if l.ndim >= 1 and l.shape and l.shape[0] == B and bax:
+                    sp[0] = bax
+                return P(*sp)
+            c_sh = jax.tree.map(lambda l: NamedSharding(mesh, c_spec(l)),
+                                c_one)
+            if needs_ctx:
+                def fn(p, c, x, ctx):
+                    kv = {"k": jnp.zeros(
+                        (B, ctx.shape[1], cfg.n_kv_heads, cfg.hd), dtype),
+                        "v": jnp.zeros(
+                        (B, ctx.shape[1], cfg.n_kv_heads, cfg.hd), dtype)}
+                    return blk.decode_block(p, cfg, kind_r, x, c,
+                                            jnp.int32(1), mesh=mesh,
+                                            dims=dims, ctx_kv=kv,
+                                            schedule=schedule)
+                lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, x_sh,
+                                                    ctx_sh)).lower(
+                    p_sds, c_one, x_sds, ctx_sds)
+            else:
+                def fn(p, c, x):
+                    return blk.decode_block(p, cfg, kind_r, x, c,
+                                            jnp.int32(1), mesh=mesh,
+                                            dims=dims, schedule=schedule)
+                lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, x_sh)
+                                  ).lower(p_sds, c_one, x_sds)
+        else:
+            def fwd(p, x, ctx=None):
+                y, aux = blk.apply_block(p, cfg, kind_r, x, mesh=mesh,
+                                         dims=dims, ctx=ctx,
+                                         schedule=schedule)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            if kind == "train":
+                def fn(p, x, ctx=None):
+                    if ctx is not None:
+                        return jax.grad(fwd, argnums=(0, 1))(p, x, ctx)
+                    return jax.grad(lambda p_, x_: fwd(p_, x_),
+                                    argnums=(0, 1))(p, x)
+            else:
+                fn = fwd
+            if needs_ctx:
+                lowered = jax.jit(fn, in_shardings=(p_sh, x_sh, ctx_sh)
+                                  ).lower(p_sds, x_sds, ctx_sds)
+            else:
+                lowered = jax.jit(fn, in_shardings=(p_sh, x_sh)
+                                  ).lower(p_sds, x_sds)
+
+        _acc(total, _cost(lowered.compile()), n_r)
+
+    # whisper encoder (runs once per step, fwd(+bwd in train))
+    if cfg.arch_type == "audio" and cfg.encoder_layers:
+        specs = blk.block_specs(cfg, "encoder", mesh, dims)
+        p_sh = _named(mesh, specs)
+        p_sds = layer_shapes(p_shapes["encoder"])
+        enc_x = jax.ShapeDtypeStruct((B, cfg.encoder_seq, M), dtype)
+
+        def enc_fwd(p, x):
+            y, _ = blk.apply_block(p, cfg, "encoder", x, mesh=mesh,
+                                   dims=dims)
+            return jnp.sum(y.astype(jnp.float32))
+        enc_fn = jax.grad(enc_fwd, argnums=(0, 1)) if kind == "train" \
+            else enc_fwd
+        lowered = jax.jit(enc_fn, in_shardings=(p_sh, x_sh)).lower(
+            p_sds, enc_x)
+        _acc(total, _cost(lowered.compile()), cfg.encoder_layers)
+
+    # embed + final norm + head (+ CE/grad in train)
+    from repro.models.layers import embed as embed_fn
+    emb_specs = model.specs(mesh, dims)
+    head_keys = [k for k in ("embed", "final_norm", "lm_head")
+                 if k in p_shapes]
+    hp_sds = {k: p_shapes[k] for k in head_keys}
+    hp_sh = _named(mesh, {k: emb_specs[k] for k in head_keys})
+    tok_sds = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(bax, None))
+
+    def head_loss(hp, tokens, labels):
+        x = embed_fn(hp["embed"], tokens)
+        x = apply_norm(hp["final_norm"], x, cfg.norm_eps)
+        logits = (unembed(hp["embed"], x) if cfg.tie_embeddings
+                  else x @ hp["lm_head"]["w"])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, labels[..., None], -1)
+        return -jnp.mean(ll)
+
+    if kind == "train":
+        hfn = jax.grad(head_loss)
+        lowered = jax.jit(hfn, in_shardings=(hp_sh, tok_sh, tok_sh)).lower(
+            hp_sds, tok_sds, tok_sds)
+    else:
+        lowered = jax.jit(head_loss,
+                          in_shardings=(hp_sh, tok_sh, tok_sh)).lower(
+            hp_sds, tok_sds, tok_sds)
+    _acc(total, _cost(lowered.compile()), 1)
+    return total

@@ -1,0 +1,76 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * peak FLOP/s)
+  memory     = HLO_bytes / (chips * HBM bandwidth)
+  collective = collective_bytes / (chips * ICI link bandwidth)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program
+totals); collective bytes come from the HLO parse (per-device shapes summed
+over ops, i.e. already per-chip traffic).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclass
+class RooflineTerms:
+    flops: float               # whole-program HLO FLOPs
+    hbm_bytes: float           # whole-program HLO bytes accessed
+    collective_bytes: float    # per-chip collective traffic
+    chips: int
+    model_flops: float = 0.0   # 6*N*D (dense) or 6*N_active*D (MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # collective_bytes is per-chip already (parsed local shapes)
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.hbm_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "chips": self.chips,
+        }
+
+
+def roofline_terms(cost_analysis: dict, collective_bytes: float, chips: int,
+                   model_flops: float = 0.0) -> RooflineTerms:
+    ca = cost_analysis or {}
+    return RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=float(collective_bytes),
+        chips=chips,
+        model_flops=model_flops,
+    )

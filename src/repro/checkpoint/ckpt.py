@@ -1,0 +1,83 @@
+"""Tree-structured npz checkpointing with atomic write and step tracking.
+
+Trees are flattened to ``/``-joined key paths.  On restore, arrays are
+re-laid-out to the requested shardings (device_put with NamedSharding),
+which is the single-host analogue of a sharded restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        out[prefix + "__seq__"] = np.asarray(
+            [len(tree), int(isinstance(tree, tuple))])
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    # rebuild nested dict first
+    root = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        if "__seq__" in node:
+            n, is_tuple = int(node["__seq__"][0]), int(node["__seq__"][1])
+            seq = [rebuild(node[str(i)]) for i in range(n)]
+            return tuple(seq) if is_tuple else seq
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> str:
+    """Atomically write ``tree`` (+ step) to ``path`` (.npz)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    flat = _flatten(jax.tree.map(np.asarray, tree))
+    flat["__step__"] = np.asarray(step)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_checkpoint(path: str, shardings=None):
+    """Load (tree, step); optionally device_put leaves to ``shardings``."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    step = int(flat.pop("__step__", 0))
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s) if s is not None else a,
+            tree, shardings)
+    return tree, step

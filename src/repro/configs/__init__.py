@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    input_specs,
+)
+from repro.configs.registry import ASSIGNED, all_configs, get_config  # noqa: F401

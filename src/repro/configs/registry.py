@@ -1,0 +1,30 @@
+"""Architecture registry: --arch <id> resolution for every launcher."""
+from importlib import import_module
+
+_MODULES = {
+    "yi-9b": "repro.configs.yi_9b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0p5b",
+    # paper §VI-D real-world models
+    "bert-moe": "repro.configs.bert_moe",
+    "gpt2-moe": "repro.configs.gpt2_moe",
+}
+
+ASSIGNED = tuple(_MODULES)[:10]
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return import_module(_MODULES[name]).CONFIG
+
+
+def all_configs():
+    return {name: get_config(name) for name in _MODULES}

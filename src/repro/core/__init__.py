@@ -1,0 +1,19 @@
+# The paper's primary contribution: Parm's dedicated MP+EP+ESP schedules
+# (baseline / S1 / S2), the fused EP&ESP-AlltoAll + SAA collectives, and
+# the alpha-beta Algorithm-1 auto-selector.
+from repro.core.moe import (  # noqa: F401
+    MoEConfig,
+    apply_moe,
+    init_moe_params,
+    moe_param_specs,
+    select_schedule,
+)
+from repro.core.gating import GateConfig, capacity, topk_gate  # noqa: F401
+from repro.core.perfmodel import (  # noqa: F401
+    AlphaBeta,
+    MoELayerShape,
+    PerfModel,
+    fit_alpha_beta,
+    tpu_v5e_model,
+)
+from repro.core.schedules import SCHEDULES, MoEShardInfo  # noqa: F401

@@ -1,0 +1,173 @@
+"""Parm's communication primitives as jax.lax collectives (shard_map-side).
+
+The paper's EP&ESP-AlltoAll (§III-C) is one AlltoAll over the *combined*
+EP x ESP device set, preceded by a local Dump (virtual duplication of the
+dispatch buffer, one copy per expert shard) and followed — on the return
+trip — by a local Combine that sums the ESP shards' partial outputs.
+JAX expresses this directly: ``lax.all_to_all`` accepts a tuple of axis
+names and XLA lowers it to a single fused all-to-all over the combined
+group, which is what gives the simultaneous use of intra- and inter-node
+links the paper argues for (Fig. 4c/d).
+
+Buffer layout convention: combined-group send/recv buffers are
+(G, El, c, M) where G = N_EP * N_ESP is ordered EP-major / ESP-minor —
+matching ``lax.axis_index((ep, esp))`` — El = E / N_EP local experts,
+and c is the per-source capacity.
+
+SAA (§III-D, Fig. 5) — the simultaneous AlltoAll + AllGather used by S2 —
+is re-expressed for TPU: instead of NCCL send/recv on multiple CUDA
+streams, we chunk the combine AlltoAll and issue each chunk's
+MP-AllGather as soon as that chunk lands.  The chunks are independent
+ops in HLO, so the TPU async-collective (latency-hiding) scheduler can
+overlap the AllGather of chunk i with the AlltoAll of chunk i+1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _axes(axes):
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+# --- PauseMP primitives ------------------------------------------------------
+
+def mp_split(x, mp_axes, n_mp: int, axis: int = 0):
+    """MP-Split: take this MP rank's 1/N_MP slice along ``axis`` (free fwd;
+    its transpose is an all-gather, as the paper notes for Split ops)."""
+    if n_mp == 1:
+        return x
+    idx = lax.axis_index(_axes(mp_axes))
+    size = x.shape[axis] // n_mp
+    return lax.dynamic_slice_in_dim(x, idx * size, size, axis)
+
+
+def mp_all_gather(x, mp_axes, n_mp: int, axis: int = 0):
+    """MP-AllGather: restore the full dim along ``axis``."""
+    if n_mp == 1:
+        return x
+    return lax.all_gather(x, _axes(mp_axes), axis=axis, tiled=True)
+
+
+# --- EP&ESP-AlltoAll ---------------------------------------------------------
+
+def dump(d, n_ep: int, n_esp: int):
+    """Local Dump (Fig. 4c): lay out the dispatch buffer for the combined
+    AlltoAll, virtually duplicating each expert's tokens once per shard.
+
+    d: (E, c, M) -> (G, El, c, M); destination g = (i', j') receives the
+    tokens of experts owned by EP rank i' (identical for every shard j').
+    """
+    E, c, M = d.shape
+    El = E // n_ep
+    out = d.reshape(n_ep, 1, El, c, M)
+    out = jnp.broadcast_to(out, (n_ep, n_esp, El, c, M))
+    return out.reshape(n_ep * n_esp, El, c, M)
+
+
+def undump_reduce(r, n_ep: int, n_esp: int):
+    """Local Combine (Fig. 4d): sum the N_ESP shards' partial outputs.
+
+    r: (G, El, c, M) returned partials -> (E, c, M) full outputs in the
+    original dispatch-buffer layout.
+    """
+    G, El, c, M = r.shape
+    r = r.reshape(n_ep, n_esp, El, c, M).sum(axis=1)
+    return r.reshape(n_ep * El, c, M)
+
+
+def to_expert_batch(rb):
+    """(G, El, c, M) received buffer -> (El, G*c, M) per-expert token batch."""
+    G, El, c, M = rb.shape
+    return rb.transpose(1, 0, 2, 3).reshape(El, G * c, M)
+
+
+def from_expert_batch(h, G: int):
+    """(El, G*c, M) expert outputs -> (G, El, c, M) return buffer."""
+    El, Gc, M = h.shape
+    c = Gc // G
+    return h.reshape(El, G, c, M).transpose(1, 0, 2, 3)
+
+
+def ep_esp_all_to_all(x, ep_axes, esp_axes, *, split_axis=0, concat_axis=0):
+    """One fused AlltoAll over the combined (EP, ESP) group (§III-C)."""
+    ep, esp = _axes(ep_axes), _axes(esp_axes)
+    names = ep + tuple(a for a in esp if a not in ep)
+    return lax.all_to_all(x, names, split_axis, concat_axis, tiled=True)
+
+
+def ep_all_to_all(x, ep_axes, *, split_axis=0, concat_axis=0):
+    """Plain EP-AlltoAll (baseline schedule)."""
+    return lax.all_to_all(x, _axes(ep_axes), split_axis, concat_axis,
+                          tiled=True)
+
+
+# --- expert-major buffer layout (§Perf A2) -----------------------------------
+# The (G, El, c, M) layout forces a G<->El transpose of the full combined
+# buffer on each side of the AlltoAll (XLA materializes it).  Keeping El
+# leading — (El, G, c, M), AlltoAll over split_axis=1 — makes the
+# expert-batch view a free reshape; only the Ns-times-smaller (E, c, M)
+# pre-dump buffer is ever transposed.
+
+def dump_em(d, n_ep: int, n_esp: int):
+    """Dump in expert-major layout: (E, c, M) -> (El, G, c, M)."""
+    E, c, M = d.shape
+    El = E // n_ep
+    out = d.reshape(n_ep, El, c, M).transpose(1, 0, 2, 3)   # (El, Ne, c, M)
+    out = jnp.broadcast_to(out[:, :, None], (El, n_ep, n_esp, c, M))
+    return out.reshape(El, n_ep * n_esp, c, M)
+
+
+def undump_reduce_em(r, n_ep: int, n_esp: int):
+    """(El, G, c, M) returned partials -> (E, c, M), summing ESP shards."""
+    El, G, c, M = r.shape
+    r = r.reshape(El, n_ep, n_esp, c, M).sum(axis=2)        # (El, Ne, c, M)
+    return r.transpose(1, 0, 2, 3).reshape(n_ep * El, c, M)
+
+
+def to_expert_batch_em(rb):
+    """(El, G, c, M) -> (El, G*c, M): free reshape (no relayout)."""
+    El, G, c, M = rb.shape
+    return rb.reshape(El, G * c, M)
+
+
+def from_expert_batch_em(h, G: int):
+    """(El, G*c, M) -> (El, G, c, M): free reshape."""
+    El, Gc, M = h.shape
+    return h.reshape(El, G, Gc // G, M)
+
+
+# --- SAA: simultaneous AlltoAll + AllGather (S2 combine path) ---------------
+
+def saa_combine_allgather(y, ep_axes, esp_axes, mp_axes, *, n_ep: int,
+                          n_esp: int, n_mp: int, n_chunks: int = 4):
+    """Chunked overlap of the combine EP&ESP-AlltoAll with MP-AllGather.
+
+    y: (El, G, c, M) partial outputs headed back to their source ranks
+    (expert-major layout, §Perf A2).  Returns (E, c * N_MP, M): combined
+    outputs with the full capacity dim restored across the MP group,
+    slot-ordered (mp_rank, slot) to match the pre-split dispatch buffer.
+    """
+    El, G, c, M = y.shape
+    n_chunks = max(1, min(n_chunks, c))
+    while c % n_chunks:
+        n_chunks -= 1
+    cs = c // n_chunks
+    E = n_ep * El
+    parts = []
+    for i in range(n_chunks):
+        chunk = lax.slice_in_dim(y, i * cs, (i + 1) * cs, axis=2)
+        back = ep_esp_all_to_all(chunk, ep_axes, esp_axes,
+                                 split_axis=1, concat_axis=1)
+        comb = undump_reduce_em(back, n_ep, n_esp)              # (E, cs, M)
+        if n_mp == 1:
+            parts.append(comb[:, None])                         # (E, 1, cs, M)
+        else:
+            # untiled gather -> explicit (E, N_MP, cs, M) so chunk order can
+            # be restored to (mp_rank, chunk, slot) below.
+            parts.append(lax.all_gather(comb, _axes(mp_axes), axis=1,
+                                        tiled=False))
+    stacked = jnp.stack(parts, axis=2)                # (E, N_MP, n_chunks, cs, M)
+    return stacked.reshape(E, n_mp * c, M)

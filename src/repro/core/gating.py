@@ -1,0 +1,129 @@
+"""Top-k gating with expert capacity (GShard-style), plus the scatter
+dispatch / gather combine that move tokens in and out of the per-expert
+capacity buffer.
+
+The dispatch/combine here are the *pure-jnp reference* implementations;
+``repro.kernels.moe_dispatch`` provides the Pallas TPU kernels with these
+as oracles.  Capacity semantics follow the paper: T = k * f * tokens / E,
+and each schedule applies it to the token set it gates (S1 gates each MP
+shard independently, so its per-shard capacity is T / N_MP — see
+DESIGN.md fidelity notes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class GateConfig:
+    n_experts: int
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    normalize_topk: bool = False   # qwen3 norm_topk_prob
+    aux_loss_weight: float = 1e-2
+    z_loss_weight: float = 1e-3
+    gate_dtype: jnp.dtype = jnp.float32
+    # slot assignment implementation: "sort" is O(S*k log S*k) and avoids
+    # materializing the (S*k, E) one-hot cumsum (which dominated the memory
+    # roofline term for fine-grained MoE — see EXPERIMENTS.md §Perf A1);
+    # "cumsum" is the GShard-style reference.  Identical outputs.
+    impl: str = "sort"
+
+
+def capacity(tokens: int, cfg: GateConfig, align: int = 8) -> int:
+    """Per-expert capacity T for a pool of ``tokens`` tokens."""
+    c = int(-(-cfg.top_k * cfg.capacity_factor * tokens // cfg.n_experts))
+    return max(align, -(-c // align) * align)
+
+
+def topk_gate(x, wg, cfg: GateConfig, cap: int):
+    """Route tokens to experts.
+
+    Args:
+      x: (S, M) tokens.
+      wg: (M, E) gate weights.
+      cap: per-expert capacity for this token pool.
+
+    Returns:
+      expert_idx: (S, k) int32 — chosen expert per (token, choice).
+      slot_idx:   (S, k) int32 — position in the expert's capacity buffer;
+                  >= cap means the token was dropped for that choice.
+      weights:    (S, k) f32   — combine weights (0 for dropped).
+      aux:        dict with load-balance loss, z-loss and per-expert load.
+    """
+    S, _ = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.asarray(x, cfg.gate_dtype) @ jnp.asarray(wg, cfg.gate_dtype)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (S, E)
+    gate_w, expert_idx = lax.top_k(probs, k)                     # (S, k)
+    expert_idx = expert_idx.astype(jnp.int32)
+    if cfg.normalize_topk:
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # Capacity assignment with choice-major priority (all 1st choices win
+    # slots before any 2nd choice), GShard semantics.
+    flat_e = expert_idx.T.reshape(-1)                            # (k*S,) choice-major
+    if cfg.impl == "sort":
+        # sort-based: stable argsort groups entries by expert while
+        # preserving the choice-major priority; the slot is the rank
+        # within the expert's run.  O(S*k log S*k) memory/compute — no
+        # (S*k, E) one-hot materialization.
+        order = jnp.argsort(flat_e, stable=True)                 # (k*S,)
+        sorted_e = flat_e[order]
+        first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+        slot_sorted = jnp.arange(k * S, dtype=jnp.int32) - first[sorted_e]
+        slot_flat = jnp.zeros((k * S,), jnp.int32).at[order].set(
+            slot_sorted.astype(jnp.int32))
+        load = jnp.zeros((E,), jnp.float32).at[flat_e].add(
+            1.0, mode="drop")
+    else:
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (k*S, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1                     # slot per entry
+        slot_flat = jnp.take_along_axis(pos, flat_e[:, None],
+                                        axis=1)[:, 0]
+        load = jnp.sum(onehot, axis=0).astype(jnp.float32)
+    slot_idx = slot_flat.reshape(k, S).T.astype(jnp.int32)       # (S, k)
+    kept = slot_idx < cap
+    weights = jnp.where(kept, gate_w, 0.0).astype(jnp.float32)
+
+    # Aux losses (Switch/GShard load balancing + router z-loss).
+    me = jnp.mean(probs, axis=0)                                 # mean prob/expert
+    first_choice = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(first_choice, axis=0)                          # frac tokens/expert
+    aux_loss = cfg.aux_loss_weight * E * jnp.sum(me * ce)
+    z_loss = cfg.z_loss_weight * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"aux_loss": aux_loss, "z_loss": z_loss, "load": load,
+           "drop_frac": 1.0 - jnp.mean(kept.astype(jnp.float32))}
+    return expert_idx, slot_idx, weights, aux
+
+
+def dispatch(x, expert_idx, slot_idx, cap: int, n_experts: int):
+    """Scatter tokens into the (E, cap, M) capacity buffer.
+
+    Dropped tokens (slot >= cap) land in a trash row that is sliced off.
+    """
+    S, M = x.shape
+    k = expert_idx.shape[1]
+    flat = jnp.where(slot_idx < cap, expert_idx * cap + slot_idx,
+                     n_experts * cap)                            # (S, k)
+    buf = jnp.zeros((n_experts * cap + 1, M), x.dtype)
+    src = jnp.broadcast_to(x[:, None, :], (S, k, M)).reshape(S * k, M)
+    buf = buf.at[flat.reshape(-1)].set(src, mode="drop")
+    return buf[:-1].reshape(n_experts, cap, M)
+
+
+def combine(buf, expert_idx, slot_idx, weights, cap: int):
+    """Gather expert outputs back to token order and mix with gate weights."""
+    E = buf.shape[0]
+    M = buf.shape[-1]
+    flat_buf = buf.reshape(E * cap, M)
+    flat = jnp.minimum(expert_idx * cap + slot_idx, E * cap - 1)  # (S, k)
+    vals = flat_buf[flat.reshape(-1)].reshape(*expert_idx.shape, M)
+    return jnp.einsum("sk,skm->sm", weights.astype(buf.dtype), vals)

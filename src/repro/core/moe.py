@@ -1,0 +1,220 @@
+"""The MoE layer: Parm's schedules as a first-class, composable module.
+
+``apply_moe`` is the public entry point used by every model definition.
+It wires the schedule bodies (repro.core.schedules) into a shard_map over
+the caller's mesh, handles the decode-time fallback when the token count
+cannot be sharded over the EP axes, computes capacities, and runs the
+Algorithm-1 auto-selector when ``schedule="auto"``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as coll
+from repro.core.gating import GateConfig, capacity, topk_gate
+from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
+from repro.core.schedules import BODY, MoEShardInfo, expert_ffn
+from repro.parallel.mesh import ParallelDims, axis_size
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                     # per-expert hidden size
+    n_experts: int
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0     # llama4-style shared expert(s)
+    glu: bool = True              # SwiGLU experts
+    normalize_topk: bool = False
+    aux_loss_weight: float = 1e-2
+    z_loss_weight: float = 1e-3
+    schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | auto
+    saa_chunks: int = 4
+
+    def gate_config(self) -> GateConfig:
+        return GateConfig(
+            n_experts=self.n_experts, top_k=self.top_k,
+            capacity_factor=self.capacity_factor,
+            normalize_topk=self.normalize_topk,
+            aux_loss_weight=self.aux_loss_weight,
+            z_loss_weight=self.z_loss_weight)
+
+
+def init_moe_params(key, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    M, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    scale_in = 1.0 / math.sqrt(M)
+    scale_out = 1.0 / math.sqrt(F)
+    p = {
+        "wg": jax.random.normal(ks[0], (M, E), jnp.float32) * scale_in,
+        "w1": jax.random.normal(ks[1], (E, M, F), dtype) * scale_in,
+        "w2": jax.random.normal(ks[2], (E, F, M), dtype) * scale_out,
+    }
+    if cfg.glu:
+        p["w3"] = jax.random.normal(ks[3], (E, M, F), dtype) * scale_in
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["shared_w1"] = jax.random.normal(ks[4], (M, Fs), dtype) * scale_in
+        p["shared_w3"] = jax.random.normal(ks[5], (M, Fs), dtype) * scale_in
+        p["shared_w2"] = (jax.random.normal(key, (Fs, M), dtype)
+                          * (1.0 / math.sqrt(Fs)))
+    return p
+
+
+def moe_param_specs(cfg: MoEConfig, mesh, dims: ParallelDims) -> dict:
+    """PartitionSpecs: experts over EP, hidden over ESP, gate replicated."""
+    def ep_ok(n):
+        return dims.ep and n % axis_size(mesh, dims.ep) == 0
+
+    def esp_ok(n):
+        return dims.esp and n % axis_size(mesh, dims.esp) == 0
+
+    E, F, M = cfg.n_experts, cfg.d_ff, cfg.d_model
+    e_ax = tuple(dims.ep) if ep_ok(E) else None
+    f_ax = tuple(dims.esp) if esp_ok(F) else None
+    specs = {
+        "wg": P(None, None),
+        "w1": P(e_ax, None, f_ax),
+        "w2": P(e_ax, f_ax, None),
+    }
+    if cfg.glu:
+        specs["w3"] = P(e_ax, None, f_ax)
+    if cfg.n_shared_experts:
+        mp_ax = tuple(dims.mp) if dims.mp and (
+            F * cfg.n_shared_experts) % axis_size(mesh, dims.mp) == 0 else None
+        specs["shared_w1"] = P(None, mp_ax)
+        specs["shared_w3"] = P(None, mp_ax)
+        specs["shared_w2"] = P(mp_ax, None)
+    return specs
+
+
+# --- decode fallback ---------------------------------------------------------
+
+def _replicated_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    """All-reduce-based MoE for tiny token counts (decode with B < EP size):
+    tokens stay replicated, each device computes its local experts masked by
+    the routing, and a psum over (EP, ESP) assembles the output."""
+    El = w1.shape[0]
+    gate = info.gate
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(wg, jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, eidx = lax.top_k(probs, gate.top_k)                 # (S, k)
+    if gate.normalize_topk:
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+    ep_idx = lax.axis_index(info.ep_axes) if info.ep_axes else 0
+    gids = ep_idx * El + jnp.arange(El)                         # (El,)
+    sel = (eidx[:, :, None] == gids[None, None, :]).astype(x.dtype)
+    wsel = jnp.einsum("sk,ske->se", gate_w.astype(x.dtype), sel)  # (S, El)
+    xb = jnp.broadcast_to(x[None], (El, *x.shape))              # (El, S, M)
+    h = expert_ffn(xb, w1, w3, w2, info)                        # partial
+    y = jnp.einsum("esm,se->sm", h, wsel)
+    red = tuple(dict.fromkeys(info.ep_axes + info.esp_axes))
+    if red:
+        y = lax.psum(y, red)
+    aux = {"aux_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0),
+           "drop_frac": jnp.float32(0.0)}
+    return y, aux
+
+
+# --- public entry ------------------------------------------------------------
+
+def select_schedule(cfg: MoEConfig, shape: MoELayerShape,
+                    perf_model: Optional[PerfModel] = None) -> str:
+    if cfg.schedule != "auto":
+        return cfg.schedule
+    pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
+    return pm.algorithm1(shape)
+
+
+def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
+              schedule: Optional[str] = None,
+              perf_model: Optional[PerfModel] = None):
+    """Run one MoE layer under the configured Parm schedule.
+
+    x: (B, L, M) activations; replicated over MP axes (or MP-split over
+    them under the ``s1_seqpar`` contract).  Returns (y, aux).
+    """
+    B, L, M = x.shape
+    sizes = dims.sizes(mesh)
+    n_ep, n_esp, n_mp = sizes["ep"], sizes["esp"], sizes["mp"]
+    gate_cfg = cfg.gate_config()
+
+    if n_ep > 1 and cfg.n_experts % n_ep:
+        raise ValueError(f"E={cfg.n_experts} not divisible by EP={n_ep}")
+    if n_esp > 1 and cfg.d_ff % n_esp:
+        raise ValueError(f"d_ff={cfg.d_ff} not divisible by ESP={n_esp}")
+
+    tokens_global = B * L
+    batch_ax = dims.batch_axes
+    n_batch = axis_size(mesh, batch_ax)
+
+    sched = schedule or cfg.schedule
+    seqpar = sched == "s1_seqpar"
+    token_shard = batch_ax + (dims.mp if seqpar else ())
+    n_token_shard = axis_size(mesh, token_shard)
+
+    s_local = tokens_global // max(n_token_shard, 1)
+    divisible = (tokens_global % max(n_token_shard, 1) == 0
+                 and (seqpar or s_local % max(n_mp, 1) == 0)
+                 and s_local > 0)
+    use_fallback = (not divisible) or s_local < n_mp
+
+    if use_fallback:
+        sched = "dense_decode"
+    elif sched == "auto":
+        shape = MoELayerShape(
+            B=max(s_local // max(L, 1), 1), L=min(L, s_local), M=M,
+            H=cfg.d_ff, E=cfg.n_experts, k=cfg.top_k,
+            f=cfg.capacity_factor, n_mp=n_mp, n_esp=n_esp, n_ep=n_ep)
+        sched = select_schedule(cfg, shape, perf_model)
+
+    # Capacity for an s_local-token pool, divisible by N_MP (for the S1/S2
+    # splits) and 8-aligned.
+    align = max(8, n_mp)
+    cap = max(align, -(-capacity(max(s_local, 1), gate_cfg) // align) * align)
+
+    info = MoEShardInfo(
+        ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
+        mp_axes=tuple(dims.mp), n_ep=n_ep, n_esp=n_esp, n_mp=n_mp,
+        tokens=s_local, cap=cap, gate=gate_cfg, glu=cfg.glu,
+        saa_chunks=cfg.saa_chunks)
+
+    body = _replicated_body if sched == "dense_decode" else BODY[sched]
+    w3 = params.get("w3")
+
+    x_spec = (P(tuple(token_shard) or None, None) if not use_fallback
+              else P(None, None))
+    pspecs = moe_param_specs(cfg, mesh, dims)
+    in_specs = (x_spec, pspecs["wg"], pspecs["w1"],
+                pspecs.get("w3", P(None, None)), pspecs["w2"])
+    out_specs = (x_spec, {k: P() for k in
+                          ("aux_loss", "z_loss", "drop_frac")})
+
+    def shard_body(xt, wg, w1, w3_, w2):
+        y, aux = body(xt, wg, w1, w3_ if cfg.glu else None, w2, info)
+        aux = {k: aux[k] for k in ("aux_loss", "z_loss", "drop_frac")}
+        return y.astype(x.dtype), aux
+
+    xt = x.reshape(tokens_global, M)
+    y, aux = jax.shard_map(
+        shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(xt, params["wg"], params["w1"],
+                         w3 if w3 is not None else params["w1"],
+                         params["w2"])
+    y = y.reshape(B, L, M)
+
+    if cfg.n_shared_experts:
+        h = jnp.einsum("blm,mf->blf", x, params["shared_w1"])
+        h = jax.nn.silu(h) * jnp.einsum("blm,mf->blf", x, params["shared_w3"])
+        y = y + jnp.einsum("blf,fm->blm", h, params["shared_w2"])
+    return y, aux

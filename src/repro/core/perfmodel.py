@@ -1,0 +1,160 @@
+"""The alpha-beta collective performance model and Algorithm 1 (§V).
+
+``t = alpha + beta * x`` per collective, with (alpha, beta) either fitted
+by least squares from measured latencies (paper §VI-B / Fig. 6) or derived
+analytically from fabric constants (TPU v5e: ~50 GB/s/link ICI).
+
+The closed forms reproduce Eq. (1), (13), (14) and the schedule selector
+reproduces Algorithm 1 line-by-line.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class AlphaBeta:
+    alpha: float  # startup seconds
+    beta: float   # seconds per element
+
+    def __call__(self, n_elements: float) -> float:
+        return self.alpha + self.beta * max(n_elements, 0.0)
+
+
+@dataclass(frozen=True)
+class MoELayerShape:
+    """Notation of Table I: per-rank quantities."""
+    B: int           # samples per rank
+    L: int           # tokens per sample
+    M: int           # embedding size
+    H: int           # expert hidden size
+    E: int           # total experts
+    k: int = 1
+    f: float = 1.2
+    n_mp: int = 1
+    n_esp: int = 1
+    n_ep: int = 1
+
+    @property
+    def T(self) -> float:
+        return self.k * self.f * self.B * self.L / self.E
+
+    @property
+    def blm(self) -> float:
+        return self.B * self.L * self.M
+
+    @property
+    def etm(self) -> float:
+        return self.E * self.T * self.M
+
+
+@dataclass(frozen=True)
+class PerfModel:
+    a2a_ep_esp: AlphaBeta        # fused EP&ESP-AlltoAll
+    a2a_ep: AlphaBeta            # plain EP-AlltoAll (baseline)
+    ag_esp: AlphaBeta            # ESP-AllGather (baseline)
+    ar_esp: AlphaBeta            # ESP-AllReduce (baseline)
+    ag_mp: AlphaBeta             # MP-AllGather
+    overlap: AlphaBeta           # overlapped EP&ESP-A2A + MP-AG (SAA phase)
+
+    # --- closed forms ------------------------------------------------------
+    def t_baseline(self, s: MoELayerShape) -> float:
+        """Eq. (1)."""
+        return (self.ag_esp(s.blm * s.n_esp)
+                + self.ar_esp(s.etm * s.n_esp)
+                + 2 * self.a2a_ep(s.etm * s.n_esp))
+
+    def t_s1(self, s: MoELayerShape) -> float:
+        """Eq. (11)/(13)."""
+        return (2 * self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
+                + self.ag_mp(s.blm))
+
+    def t_s2(self, s: MoELayerShape) -> float:
+        """Eq. (14)."""
+        return (self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
+                + self.overlap(s.etm * s.n_esp / s.n_mp)
+                + self.ag_mp(s.etm))
+
+    # --- Algorithm 1 --------------------------------------------------------
+    def algorithm1(self, s: MoELayerShape) -> str:
+        """Faithful transcription of Algorithm 1 (lines 1-9)."""
+        x = s.B * s.L * s.M                                  # line 1
+        T = s.k * s.f * s.B * s.L / s.E                      # line 2 (T)
+        y = s.E * T * s.M * s.n_esp                          # line 3
+        t_d1 = (2 * (self.a2a_ep_esp.alpha
+                     + self.a2a_ep_esp.beta * y / s.n_mp)
+                + self.ag_mp.alpha + self.ag_mp.beta * x)    # line 4
+        t_d2 = (self.a2a_ep_esp.alpha
+                + self.a2a_ep_esp.beta * y / s.n_mp
+                + self.overlap.alpha + self.overlap.beta * y / s.n_mp
+                + self.ag_mp.alpha + self.ag_mp.beta * T * s.E * s.M)  # line 5 + AG_MP(ETM) of Eq. 14
+        return "s1" if t_d1 <= t_d2 else "s2"                # lines 6-9
+
+    def pick(self, s: MoELayerShape) -> str:
+        return self.algorithm1(s)
+
+
+def fit_alpha_beta(sizes, times) -> AlphaBeta:
+    """Least-squares fit of t = alpha + beta*x (paper §V-A)."""
+    n = len(sizes)
+    sx = sum(sizes)
+    sy = sum(times)
+    sxx = sum(x * x for x in sizes)
+    sxy = sum(x * y for x, y in zip(sizes, times))
+    denom = n * sxx - sx * sx
+    if denom == 0:
+        return AlphaBeta(alpha=sy / max(n, 1), beta=0.0)
+    beta = (n * sxy - sx * sy) / denom
+    alpha = (sy - beta * sx) / n
+    return AlphaBeta(alpha=max(alpha, 0.0), beta=max(beta, 0.0))
+
+
+# --- analytic TPU v5e fabric model ------------------------------------------
+
+ICI_LINK_BW = 50e9        # bytes/s per link (v5e)
+HBM_BW = 819e9            # bytes/s
+PEAK_FLOPS_BF16 = 197e12  # per chip
+ALPHA_ICI = 1e-6          # per-collective startup, seconds
+DCI_BW = 6.25e9           # inter-pod data-center interconnect per chip (est.)
+
+
+def tpu_v5e_model(n_ep: int, n_esp: int, n_mp: int, bytes_per_el: int = 2,
+                  inter_pod: bool = False) -> PerfModel:
+    """Analytic alpha-beta constants for a v5e mesh.
+
+    MP/ESP map to the innermost mesh axis (fastest, all-ICI); EP spans the
+    outer axis (and the DCI when ``inter_pod``).  Ring/bidirectional
+    collectives move (g-1)/g of the payload through a chip's ~link_bw.
+    """
+    def coll(bw, g):
+        frac = (g - 1) / g if g > 1 else 0.0
+        return AlphaBeta(ALPHA_ICI * max(g, 1), bytes_per_el * frac / bw)
+
+    bw_outer = DCI_BW if inter_pod else ICI_LINK_BW
+    a2a_combined = coll(min(ICI_LINK_BW, bw_outer), n_ep * n_esp)
+    return PerfModel(
+        a2a_ep_esp=a2a_combined,
+        a2a_ep=coll(bw_outer, n_ep),
+        ag_esp=coll(ICI_LINK_BW, n_esp),
+        ar_esp=AlphaBeta(2 * ALPHA_ICI * n_esp,
+                         2 * bytes_per_el * (n_esp - 1) / max(n_esp, 1)
+                         / ICI_LINK_BW),
+        ag_mp=coll(ICI_LINK_BW, n_mp),
+        # SAA hides the faster of the two transfers; model the overlapped
+        # phase as the a2a beta alone (AllGather rides in its shadow).
+        overlap=a2a_combined,
+    )
+
+
+def speedup_table(shape: MoELayerShape, model: PerfModel) -> dict:
+    """Analytic reproduction row: baseline vs S1 vs S2 vs Parm (auto)."""
+    tb = model.t_baseline(shape)
+    t1 = model.t_s1(shape)
+    t2 = model.t_s2(shape)
+    pick = model.algorithm1(shape)
+    tp = t1 if pick == "s1" else t2
+    return {"t_baseline": tb, "t_s1": t1, "t_s2": t2, "pick": pick,
+            "speedup_s1": tb / t1, "speedup_s2": tb / t2,
+            "speedup_parm": tb / tp}

@@ -1,0 +1,168 @@
+"""The three MP+EP+ESP communication schedules of the Parm paper.
+
+Each schedule is a shard_map body operating on this device's local slice
+of the MoE-layer input tokens.  All three compute the same mathematical
+function (verified by tests/test_moe_schedules.py); they differ only in
+where communication happens and how much of it there is:
+
+  baseline (Fig. 3a):  ESP-AllGather -> Gate -> EP-AlltoAll -> Experts
+                       -> ESP-AllReduce -> EP-AlltoAll -> ESP-Split
+  S1       (Fig. 3b):  MP-Split -> Gate -> EP&ESP-AlltoAll -> Experts
+                       -> EP&ESP-AlltoAll(+Combine) -> MP-AllGather(BLM)
+  S2       (Fig. 3c):  Gate -> MP-Split -> EP&ESP-AlltoAll -> Experts
+                       -> SAA{EP&ESP-AlltoAll + MP-AllGather(ETM)} -> Un-dispatch
+
+Plus a beyond-paper ``s1_seqpar`` variant: under a sequence-parallel
+activation contract the MoE boundary is already MP-split, so S1's final
+MP-AllGather disappears entirely (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.gating import GateConfig, combine, dispatch, topk_gate
+
+SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "auto")
+
+
+@dataclass(frozen=True)
+class MoEShardInfo:
+    """Static shard_map-side description of the MoE parallel layout."""
+    ep_axes: tuple
+    esp_axes: tuple
+    mp_axes: tuple
+    n_ep: int
+    n_esp: int
+    n_mp: int
+    tokens: int          # S: tokens per device at the MoE boundary
+    cap: int             # T: per-expert capacity for an S-token pool
+    gate: GateConfig
+    act: Callable = jax.nn.silu
+    glu: bool = True     # SwiGLU experts (w1 gate + w3 up) vs 2-layer GELU
+    saa_chunks: int = 4  # SAA pipeline depth (1 = no overlap, AAS)
+
+    @property
+    def combined_group(self):
+        return self.n_ep * self.n_esp
+
+
+def expert_ffn(xb, w1, w3, w2, info: MoEShardInfo):
+    """Per-expert FFN on this device's (El, t, M) batch.
+
+    Weights are the local ESP shard (hidden dim sliced N_ESP ways), so the
+    output is a *partial sum* that the caller reduces across the ESP group
+    (psum in the baseline, the combine-AlltoAll's local reduction in S1/S2).
+    """
+    h = jnp.einsum("etm,emh->eth", xb, w1)
+    if info.glu:
+        h = info.act(h) * jnp.einsum("etm,emh->eth", xb, w3)
+    else:
+        h = info.act(h)
+    return jnp.einsum("eth,ehm->etm", h, w2)
+
+
+def _aux_mean(aux, info):
+    axes = tuple(dict.fromkeys(info.ep_axes + info.esp_axes + info.mp_axes))
+    return {k: (lax.pmean(v, axes) if v.ndim == 0 else v)
+            for k, v in aux.items()}
+
+
+# --- baseline ----------------------------------------------------------------
+
+def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    """DeepSpeed-MoE's schedule. In the merged (MP==ESP) production mapping
+    the ESP-AllGather materializes N_MP identical token copies, and every
+    expert shard then computes them all — the redundancy Parm removes."""
+    Ne, Ns = info.n_ep, info.n_esp
+    E = info.gate.n_experts
+    # ESP-AllGather of the raw input (cost AG(B*L*M*N_ESP), Eq. 1).
+    g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)       # (S*Ns, M)
+    cap_g = info.cap * Ns
+    eidx, slot, w, aux = topk_gate(g, wg, info.gate, cap_g)
+    d = dispatch(g, eidx, slot, cap_g, E)                      # (E, T*Ns, M)
+    # EP-AlltoAll dispatch (cost A2A(E*T*M*N_ESP)).
+    sb = d.reshape(Ne, E // Ne, cap_g, -1)
+    rb = coll.ep_all_to_all(sb, info.ep_axes)                  # (Ne, El, T*Ns, M)
+    xb = coll.to_expert_batch(rb)                              # (El, Ne*T*Ns, M)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    # ESP-AllReduce of partial sums (cost AR(E*T*M*N_ESP)).
+    h = lax.psum(h, info.esp_axes)
+    # EP-AlltoAll combine (cost A2A(E*T*M*N_ESP)).
+    back = coll.ep_all_to_all(coll.from_expert_batch(h, Ne), info.ep_axes)
+    out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g)
+    # ESP-Split: free forward, AllGather in backward (paper Fig. 3 note).
+    y = coll.mp_split(out, info.esp_axes, Ns, axis=0)          # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+# --- S1 ----------------------------------------------------------------------
+
+def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
+    """PauseMP before the gate; restore with MP-AllGather(B*L*M) after the
+    combine.  With ``seqpar=True`` the boundary contract is already
+    MP-split, so both the entry split and the exit gather vanish."""
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
+    # Under the seqpar contract info.tokens/info.cap already describe the
+    # MP-split pool; otherwise the per-shard capacity is T / N_MP.
+    c1 = info.cap if seqpar else info.cap // Nm
+    eidx, slot, w, aux = topk_gate(xs, wg, info.gate, c1)
+    d = dispatch(xs, eidx, slot, c1, E)                        # (E, T/Nm, M)
+    # EP&ESP-AlltoAll dispatch (Dump + fused AlltoAll; cost A2A(ETM*Ns/Nm)).
+    # Expert-major (El, G, c, M) buffers: the expert-batch view is a free
+    # reshape instead of a full-buffer relayout (§Perf A2).
+    sb = coll.dump_em(d, Ne, Ns)                               # (El, G, c1, M)
+    rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                split_axis=1, concat_axis=1)
+    xb = coll.to_expert_batch_em(rb)                           # (El, G*c1, M)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    # EP&ESP-AlltoAll combine + local ESP reduction (cost A2A(ETM*Ns/Nm)).
+    back = coll.ep_esp_all_to_all(
+        coll.from_expert_batch_em(h, info.combined_group),
+        info.ep_axes, info.esp_axes, split_axis=1, concat_axis=1)
+    mine = coll.undump_reduce_em(back, Ne, Ns)                 # (E, c1, M)
+    y = combine(mine, eidx, slot, w, c1)                       # (S/Nm, M)
+    if not seqpar:
+        # MP-AllGather to restore the replicated contract (cost AG(BLM)).
+        y = coll.mp_all_gather(y, info.mp_axes, Nm, axis=0)
+    return y, _aux_mean(aux, info)
+
+
+# --- S2 ----------------------------------------------------------------------
+
+def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    """Gate on the full input, PauseMP on the capacity dim, and overlap the
+    combine EP&ESP-AlltoAll with the MP-AllGather(ETM) via SAA."""
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    eidx, slot, w, aux = topk_gate(x, wg, info.gate, info.cap)
+    d = dispatch(x, eidx, slot, info.cap, E)                   # (E, T, M)
+    ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)            # (E, T/Nm, M)
+    sb = coll.dump_em(ds, Ne, Ns)                              # (El, G, c, M)
+    rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                split_axis=1, concat_axis=1)
+    xb = coll.to_expert_batch_em(rb)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    y4 = coll.from_expert_batch_em(h, info.combined_group)     # (El, G, T/Nm, M)
+    # SAA: combine-AlltoAll chunks overlapped with MP-AllGather (Fig. 5).
+    full = coll.saa_combine_allgather(
+        y4, info.ep_axes, info.esp_axes, info.mp_axes,
+        n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks)  # (E, T, M)
+    y = combine(full, eidx, slot, w, info.cap)                 # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+BODY = {
+    "baseline": baseline_body,
+    "s1": s1_body,
+    "s2": s2_body,
+    "s1_seqpar": lambda *a, **k: s1_body(*a, seqpar=True, **k),
+}

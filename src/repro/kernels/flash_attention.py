@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (GQA-aware, causal + sliding window).
+
+Grid (B, H, nq, nk) with the KV-block index innermost; online-softmax
+running stats (m, l) and the output accumulator live in VMEM scratch and
+carry across the nk iterations.  KV is consumed in its native
+(B, L, K, hd) GQA layout — the index map folds the query-head -> kv-head
+mapping, so no head replication ever hits HBM.
+
+Block shapes default to (128, 128): MXU-aligned on the (q, k) tile and
+sized so q/k/v tiles + accumulator fit comfortably in ~16 MB VMEM for
+head dims up to 256.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, causal, window, block_q, block_k, n_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q: (B, Lq, H, hd); k, v: (B, Lk, K, hd) with H % K == 0."""
+    B, Lq, H, hd = q.shape
+    _, Lk, K, _ = k.shape
+    assert H % K == 0, (H, K)
+    rep = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    while Lq % block_q:
+        block_q //= 2
+    while Lk % block_k:
+        block_k //= 2
+    n_q, n_k = Lq // block_q, Lk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik, rep=rep: (b, ik, h // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik, rep=rep: (b, ik, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

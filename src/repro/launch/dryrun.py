@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  REPRO_DRYRUN_DEVICES overrides for scaled-down CI.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+# The dry-run needs the *SPMD-partitioned program* (shardings, collectives,
+# memory), not fast host code: turning LLVM codegen effort down makes the
+# 512-device CPU-emulated compiles tractable without changing the HLO-level
+# analyses this harness records.  Disable with REPRO_DRYRUN_FULL_OPT=1.
+if not os.environ.get("REPRO_DRYRUN_FULL_OPT"):
+    os.environ["XLA_FLAGS"] += " --xla_backend_optimization_level=0"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) combination, lower + compile
+the appropriate step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct stand-ins (no allocation), then record:
+
+  * memory_analysis()  — proves the program fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the compiled HLO per §Roofline.
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>[__<sched>].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import parse_collectives
+from repro.analysis.layerwise import layerwise_costs
+from repro.analysis.roofline import roofline_terms
+from repro.configs import INPUT_SHAPES, get_config, input_specs
+from repro.configs.registry import ASSIGNED
+from repro.core.moe import select_schedule
+from repro.core.perfmodel import MoELayerShape
+from repro.launch.mesh import dims_for, make_production_mesh, make_test_mesh
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, opt_state_specs
+from repro.parallel.mesh import axis_size
+from repro.train.loop import (cache_specs, make_prefill_fn, make_serve_step,
+                              make_train_step, named_tree)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def count_params(shapes) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg, shapes) -> float:
+    """Active params per token: full count minus inactive expert fraction."""
+    total = count_params(shapes)
+    if cfg.moe is None:
+        return float(total)
+    moe = cfg.moe
+    n_moe_layers = sum(1 for k in cfg.layer_kinds() if k.startswith("moe"))
+    per_expert = moe.d_model * moe.d_ff * (3 if moe.glu else 2)
+    inactive = n_moe_layers * per_expert * (moe.n_experts - moe.top_k)
+    return float(total - inactive)
+
+
+def variant_config(cfg, shape_name: str):
+    """Apply the SWA variant for long_500k on full-attention archs."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name != "long_500k" or cfg.sub_quadratic:
+        return cfg, ""
+    if cfg.arch_type == "audio":
+        return None, "skip: enc-dec audio arch, 500k decode not meaningful"
+    return replace(cfg, attn_window=8192), "swa"
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              schedule: str = None, dtype: str = "bfloat16",
+              save_hlo: bool = False, cache_seq_shard: bool = False,
+              saa_chunks: int = None, seq_parallel: bool = False) -> dict:
+    cfg = get_config(arch)
+    cfg, variant = variant_config(cfg, shape_name)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": variant}
+    cfg = replace(cfg, dtype=dtype)
+    if cache_seq_shard:
+        cfg = replace(cfg, context_parallel_decode=True)
+    if seq_parallel:
+        cfg = replace(cfg, seq_parallel=True)
+    if saa_chunks is not None and cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe, saa_chunks=saa_chunks))
+    shape = INPUT_SHAPES[shape_name]
+    n_dev = int(os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+    mesh = (make_production_mesh(multi_pod=multi_pod) if n_dev >= 512
+            else make_test_mesh(multi_pod=multi_pod))
+    dims = dims_for(cfg, multi_pod)
+    model = build_model(cfg)
+
+    pspecs = model.specs(mesh, dims)
+    p_sh = named_tree(mesh, pspecs)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    batch = input_specs(cfg, shape)
+    baxes = tuple(dims.batch_axes)
+    nb = axis_size(mesh, baxes) if baxes else 1
+
+    def bshard(leaf):
+        if leaf.ndim >= 1 and leaf.shape and leaf.shape[0] == shape.global_batch \
+                and shape.global_batch % nb == 0 and baxes:
+            return named_tree(mesh, jax.sharding.PartitionSpec(
+                baxes, *([None] * (leaf.ndim - 1))))
+        return named_tree(mesh, jax.sharding.PartitionSpec(
+            *([None] * leaf.ndim)))
+    b_sh = jax.tree.map(bshard, batch)
+
+    sched = schedule
+    if cfg.moe is not None and not sched:
+        s_local = max(shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1) // max(nb, 1), 1)
+        sizes = dims.sizes(mesh)
+        sched_pick = select_schedule(cfg.moe, MoELayerShape(
+            B=1, L=s_local, M=cfg.d_model, H=cfg.moe.d_ff,
+            E=cfg.moe.n_experts, k=cfg.moe.top_k,
+            f=cfg.moe.capacity_factor, n_mp=sizes["mp"],
+            n_esp=sizes["esp"], n_ep=sizes["ep"]))
+    else:
+        sched_pick = sched or "n/a"
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        # ZeRO-1 (production default): shard optimizer moments' leading dim
+        # over the pure-DP axes. For dense archs that's `data` (+`pod`);
+        # for MoE archs `data` serves EP, so only `pod` remains multi-pod.
+        zero_axes = tuple(dims.dp) + (
+            () if cfg.moe is not None else tuple(dims.ep))
+        if not zero_axes and cfg.moe is None and not multi_pod:
+            zero_axes = ("data",)
+        o_sh = named_tree(mesh, opt_state_specs(
+            pspecs, mesh=mesh, dp_axes=zero_axes, zero1=bool(zero_axes),
+            params_shape=p_shapes))
+        fn = make_train_step(model, mesh, dims, opt_cfg, schedule)
+        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None))
+        lowered = jitted.lower(p_shapes, o_shapes, batch)
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 3.0   # fwd + bwd
+    elif shape.kind == "prefill":
+        fn = make_prefill_fn(model, mesh, dims, schedule)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(p_shapes, batch)
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 1.0
+    else:  # decode: one token against a seq_len cache
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     jnp.dtype(cfg.dtype)))
+        c_specs = cache_specs(model, mesh, dims, shape.global_batch,
+                              shape.seq_len, seq_shard=cache_seq_shard)
+        c_sh = named_tree(mesh, c_specs)
+        fn = make_serve_step(model, mesh, dims, schedule)
+        if model.has_cross:
+            # per-request precomputed cross-attention K/V (image/audio ctx)
+            kv_shapes = jax.eval_shape(
+                lambda p, b: model.ctx_kv(p, b, mesh=mesh, dims=dims),
+                p_shapes, batch)
+            kv_specs = jax.tree.map(
+                lambda l: jax.sharding.PartitionSpec(
+                    None, baxes if (l.ndim >= 2 and baxes and
+                                    l.shape[1] % nb == 0) else None,
+                    *([None] * (l.ndim - 2))),
+                kv_shapes)
+            kv_sh = named_tree(mesh, kv_specs)
+            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh, kv_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shapes, c_shapes, batch, kv_shapes)
+        else:
+            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shapes, c_shapes, batch)
+        tokens = shape.global_batch
+        flops_mult = 1.0
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, None)
+    ca_list = compiled.cost_analysis()
+    ca = ca_list if isinstance(ca_list, dict) else (
+        ca_list[0] if ca_list else {})
+    hlo = compiled.as_text()
+    stats = parse_collectives(hlo)
+
+    chips = mesh.devices.size
+    n_params = count_params(p_shapes)
+    n_active = active_param_count(cfg, p_shapes)
+    model_flops = flops_mult * 2.0 * n_active * tokens  # 6ND = 3 * 2ND
+
+    # Trip-count-correct accounting: XLA cost_analysis counts scan bodies
+    # once, so roofline terms come from the layer-wise sums (x n_layers),
+    # while the full-program compile above remains the fits/coherence proof.
+    # The roofline table is single-pod only (§Roofline), so multi-pod combos
+    # skip the extra per-block compiles and report raw program costs.
+    if not multi_pod:
+        lw = layerwise_costs(model, cfg, mesh, dims, shape, kind=shape.kind,
+                             schedule=schedule)
+        # lw is per-device; model_flops is whole-program -> per-chip ratio
+        # uses chips inside roofline_terms, so scale up to whole-program.
+        rl = roofline_terms({"flops": lw["flops"] * chips,
+                             "bytes accessed": lw["bytes"] * chips},
+                            lw["coll"], chips, model_flops)
+    else:
+        rl = roofline_terms(ca, stats.total_bytes, chips, model_flops)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant, "schedule": sched_pick,
+        "chips": chips, "dtype": dtype,
+        "n_params": n_params, "n_active_params": n_active,
+        "tokens_per_step": tokens,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory_analysis": mem_d,
+        "cost_flops": float(ca.get("flops", 0.0)),
+        "cost_bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": {"counts": stats.counts,
+                        "bytes": stats.bytes_by_kind,
+                        "total_bytes": stats.total_bytes},
+        "roofline": rl.as_dict(),
+        "hlo_lines": hlo.count("\n"),
+    }
+    if save_hlo:
+        os.makedirs(ART_DIR, exist_ok=True)
+        with open(os.path.join(
+                ART_DIR, f"{arch}__{shape_name}__"
+                f"{'multi' if multi_pod else 'single'}.hlo"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def save(rec: dict, suffix: str = ""):
+    os.makedirs(ART_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    with open(os.path.join(ART_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--schedule", default=None,
+                    help="force a Parm schedule (baseline/s1/s2/s1_seqpar)")
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip combos whose artifact JSON already exists")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-SP residual stream (§Perf B2)")
+    ap.add_argument("--cache-seq-shard", action="store_true",
+                    help="shard attention KV caches along the length dim "
+                         "over MP (context-parallel decode; §Perf lever)")
+    ap.add_argument("--saa-chunks", type=int, default=None,
+                    help="override SAA pipeline depth (1 = AAS, no overlap)")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for perf iterations")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                if args.skip_existing:
+                    sfx = f"__{args.schedule}" if args.schedule else ""
+                    fname = os.path.join(
+                        ART_DIR, f"{arch}__{shape}__"
+                        f"{'multi' if mp else 'single'}{sfx}.json")
+                    if os.path.exists(fname):
+                        print(f"[have] {tag}", flush=True)
+                        continue
+                try:
+                    rec = lower_one(arch, shape, mp, args.schedule,
+                                    args.dtype, args.save_hlo,
+                                    cache_seq_shard=args.cache_seq_shard,
+                                    saa_chunks=args.saa_chunks,
+                                    seq_parallel=args.seq_parallel)
+                    sfx = f"__{args.schedule}" if args.schedule else ""
+                    if args.tag:
+                        sfx += f"__{args.tag}"
+                    save(rec, sfx)
+                    if rec.get("skipped"):
+                        print(f"[skip] {tag}: {rec['skipped']}", flush=True)
+                        continue
+                    rl = rec["roofline"]
+                    print(f"[ok]   {tag} sched={rec['schedule']} "
+                          f"compile={rec['compile_s']:.1f}s "
+                          f"flops={rec['cost_flops']:.3g} "
+                          f"coll={rec['collectives']['total_bytes']:.3g}B "
+                          f"bound={rl['bottleneck']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: "
+                         + "; ".join(t for t, _ in failures))
+    print("dry-run complete: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS *before* any jax
+initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.mesh import ParallelDims, make_mesh, production_dims
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Scaled-down mesh with the same axis structure (8 fake devices)."""
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def dims_for(cfg, multi_pod: bool = False) -> ParallelDims:
+    """Logical parallel dims for an architecture on the production mesh."""
+    return production_dims(multi_pod=multi_pod, moe=cfg.moe is not None)

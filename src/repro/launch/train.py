@@ -1,0 +1,87 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-moe --reduced \
+      --steps 200 --seq 256 --batch 8 --schedule auto
+
+Full-size configs target the production mesh (real TPU pods); --reduced
+runs the smoke-scale variant on whatever devices are present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import replace
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import dims_for, make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default=None,
+                    help="Parm schedule override (baseline/s1/s2/auto)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-json", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.layers or 2,
+                          d_model=args.d_model or 256)
+    elif args.layers or args.d_model:
+        cfg = replace(cfg, n_layers=args.layers or cfg.n_layers,
+                      d_model=args.d_model or cfg.d_model)
+
+    n_dev = jax.device_count()
+    if n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        dims = dims_for(cfg, args.multi_pod)
+    else:
+        # fold whatever devices exist into (data, model)
+        d = max(1, n_dev // 2) if n_dev > 1 else 1
+        mesh = make_mesh((d, n_dev // d), ("data", "model"))
+        dims = (ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+                if cfg.moe is not None
+                else ParallelDims(dp=("data",), mp=("model",)))
+
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps)
+    tr = Trainer(model, mesh, dims, opt, schedule=args.schedule,
+                 ckpt_path=args.ckpt)
+    params, opt_state = tr.setup(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch))
+    params, opt_state, hist = tr.run(params, opt_state, data, args.steps,
+                                     ckpt_every=args.steps // 2 if args.ckpt
+                                     else 0)
+    if args.log_json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.log_json)),
+                    exist_ok=True)
+        with open(args.log_json, "w") as f:
+            json.dump(hist, f, indent=1)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

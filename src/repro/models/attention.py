@@ -1,0 +1,326 @@
+"""Attention: GQA / MHA, causal, sliding-window, chunked-local and cross.
+
+Two execution paths share one parameter layout:
+  * full einsum attention for short sequences (and as the oracle),
+  * a flash-style KV-block scan (online softmax, pure jnp + lax.scan) for
+    long sequences — memory O(L * block) instead of O(L^2), lowerable on
+    any backend; the Pallas TPU kernel (repro.kernels.flash_attention)
+    implements the same contract with explicit VMEM tiling.
+
+Decode: one query token against a KV cache; sliding-window caches are
+ring buffers of size ``window``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import apply_rope, dense_init
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    causal: bool = True
+    window: int | None = None     # sliding window (tokens), None = full
+    chunk: int | None = None      # llama4-style chunked local attention
+    qkv_bias: bool = False
+    softmax_scale: float | None = None
+    flash_block: int = 512        # KV block for the scan path
+    flash_threshold: int = 2048   # use scan path above this seq length
+    masked_cache_update: bool = False  # elementwise cache write (§Perf C2)
+    context_parallel: bool = False     # shard scores over cache length (§Perf C3)
+
+    @property
+    def scale(self):
+        return self.softmax_scale or 1.0 / math.sqrt(self.head_dim)
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, K * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, K * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, D), fan_in=H * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def attn_specs(mesh, mp_axes, cfg: AttnConfig):
+    from repro.parallel.mesh import axis_size
+    n_mp = axis_size(mesh, mp_axes) if mp_axes else 1
+    q_ax = tuple(mp_axes) if mp_axes and (cfg.n_heads * cfg.head_dim) % n_mp == 0 \
+        else None
+    kv_ax = tuple(mp_axes) if mp_axes and cfg.n_kv_heads % n_mp == 0 else None
+    kv_sp = tuple(mp_axes) if kv_ax else None
+    p = {"wq": P(None, q_ax), "wk": P(None, kv_sp), "wv": P(None, kv_sp),
+         "wo": P(q_ax, None)}
+    if cfg.qkv_bias:
+        p["bq"] = P(q_ax)
+        p["bk"] = P(kv_sp)
+        p["bv"] = P(kv_sp)
+    return p
+
+
+def _mask_bias(cfg: AttnConfig, q_pos, k_pos):
+    """Additive mask from query/key absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones_like(d, dtype=bool)
+    if cfg.causal:
+        ok &= d >= 0
+    if cfg.window is not None:
+        ok &= d < cfg.window
+    if cfg.chunk is not None:
+        ok &= (q_pos[:, None] // cfg.chunk) == (k_pos[None, :] // cfg.chunk)
+    # finite mask constant: fully-masked KV blocks stay NaN-free in the
+    # online softmax (exp(-inf - -inf) is NaN; -1e30 self-corrects via the
+    # running-max rescale) and give exactly-zero probabilities in the
+    # recompute backward.
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def sdpa_full(q, k, v, bias, scale):
+    """q: (B,Lq,H,hd)  k,v: (B,Lk,H,hd)  bias: (Lq,Lk) or (B,1,Lq,Lk)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = s + (bias if bias.ndim == 4 else bias[None, None])
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def sdpa_flash_scan(q, k, v, cfg: AttnConfig, q_pos, k_pos):
+    """Online-softmax attention scanning KV blocks; O(L*block) memory in
+    BOTH directions: a recompute-based custom_vjp stores only (out, lse)
+    and rebuilds each block's probabilities in the backward pass — the
+    flash-attention backward.  (Scan's default AD saved every block's
+    probability tile + f32 accumulator carry: ~130 GB/chip for command-r
+    train_4k — EXPERIMENTS.md §Perf D3/D4.)"""
+    blk = min(cfg.flash_block, k.shape[1])
+    while k.shape[1] % blk:
+        blk //= 2
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, k_pos):
+        out, lse = _flash_fwd_scan(q, k, v, cfg, q_pos, k_pos, blk)
+        return out
+
+    def fwd(q, k, v, q_pos, k_pos):
+        out, lse = _flash_fwd_scan(q, k, v, cfg, q_pos, k_pos, blk)
+        return out, (q, k, v, out, lse, q_pos, k_pos)
+
+    def bwd(res, dout):
+        *res5, q_pos, k_pos = res
+        dq, dk, dv = _flash_bwd_scan(tuple(res5), dout, cfg, q_pos,
+                                     k_pos, blk)
+        return dq, dk, dv, None, None
+
+    attn.defvjp(fwd, bwd)
+    return attn(q, k, v, q_pos, k_pos)
+
+
+def _flash_fwd_scan(q, k, v, cfg: AttnConfig, q_pos, k_pos, blk):
+    B, Lq, H, hd = q.shape
+    n_blocks = k.shape[1] // blk
+    qf = q.astype(jnp.float32) * cfg.scale
+
+    def step(carry, blk_idx):
+        m, l, acc = carry
+        ks = lax.dynamic_slice_in_dim(k, blk_idx * blk, blk, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, blk_idx * blk, blk, axis=1)
+        kp = lax.dynamic_slice_in_dim(k_pos, blk_idx * blk, blk, axis=0)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, ks.astype(jnp.float32))
+        s = s + _mask_bias(cfg, q_pos, kp)[None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Lq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Lq), jnp.float32)
+    a0 = jnp.zeros((B, H, Lq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), jnp.arange(n_blocks))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(l)                                  # (B, H, Lq)
+    return out, lse
+
+
+def _flash_bwd_scan(res, dout, cfg: AttnConfig, q_pos, k_pos, blk):
+    q, k, v, out, lse = res
+    B, Lq, H, hd = q.shape
+    n_blocks = k.shape[1] // blk
+    qf = q.astype(jnp.float32) * cfg.scale
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B, H, Lq, hd)
+    of = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    D = jnp.sum(do * of, axis=-1)                         # (B, H, Lq)
+
+    def step(dq, blk_idx):
+        ks = lax.dynamic_slice_in_dim(k, blk_idx * blk, blk, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, blk_idx * blk, blk, axis=1)
+        kp = lax.dynamic_slice_in_dim(k_pos, blk_idx * blk, blk, axis=0)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, ks.astype(jnp.float32))
+        s = s + _mask_bias(cfg, q_pos, kp)[None, None]
+        p = jnp.exp(s - lse[..., None])                   # (B, H, Lq, blk)
+        dv_b = jnp.einsum("bhqk,bhqd->bkhd", p, do)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do, vs.astype(jnp.float32))
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                             ks.astype(jnp.float32)) * cfg.scale
+        dk_b = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, Lq, H, hd), jnp.float32)
+    dq, (dks, dvs) = lax.scan(step, dq0, jnp.arange(n_blocks))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(k.shape)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(v.shape)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+def apply_attn(p, cfg: AttnConfig, x, *, positions=None, kv_x=None,
+               kv_positions=None, use_pallas=False):
+    """Training/prefill forward. kv_x != None = cross attention."""
+    B, L, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = kv_x if kv_x is not None else x
+    Lk = src.shape[1]
+    q = (x @ p["wq"]).reshape(B, L, H, hd)
+    k = (src @ p["wk"]).reshape(B, Lk, K, hd)
+    v = (src @ p["wv"]).reshape(B, Lk, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(K, hd)
+        v = v + p["bv"].reshape(K, hd)
+    if positions is None:
+        positions = jnp.arange(L)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Lk)
+    if cfg.use_rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    k = _repeat_kv(k, H // K)
+    v = _repeat_kv(v, H // K)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=cfg.causal,
+                                   window=cfg.window, scale=cfg.scale)
+    elif max(L, Lk) > cfg.flash_threshold:
+        out = sdpa_flash_scan(q, k, v, cfg, positions, kv_positions)
+    else:
+        bias = _mask_bias(cfg, positions, kv_positions) if (
+            cfg.causal or cfg.window or cfg.chunk) else jnp.zeros(
+                (L, Lk), jnp.float32)
+        out = sdpa_full(q, k, v, bias, cfg.scale)
+    return out.reshape(B, L, H * hd) @ p["wo"]
+
+
+# --- decode with KV cache -----------------------------------------------------
+
+def init_cache(cfg: AttnConfig, batch, max_len, dtype=jnp.float32):
+    W = cfg.window if cfg.window is not None else max_len
+    W = min(W, max_len)
+    return {
+        "k": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((W,), jnp.int32) - 1,   # absolute position per slot
+    }
+
+
+def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
+                mesh=None, mp_axes=None):
+    """One-token decode. x: (B, 1, D); ``step`` scalar absolute position.
+
+    Full-attention caches are length max_len; sliding-window caches are
+    ring buffers of size ``window`` (slot = pos % window).
+    """
+    B, _, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    if kv_cache_static is not None:
+        # cross-attention: static precomputed K/V (e.g. image/audio context)
+        k, v = kv_cache_static["k"], kv_cache_static["v"]
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(H, hd)
+        k = _repeat_kv(k, H // K)
+        v = _repeat_kv(v, H // K)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * cfg.scale
+        pr = jax.nn.softmax(s, -1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+        return out.reshape(B, 1, H * hd) @ p["wo"], cache
+
+    k = (x @ p["wk"]).reshape(B, 1, K, hd)
+    v = (x @ p["wv"]).reshape(B, 1, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(K, hd)
+        v = v + p["bv"].reshape(K, hd)
+    if cfg.use_rope:
+        pos = jnp.full((1,), step)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    W = cache["k"].shape[1]
+    slot = step % W
+    if cfg.masked_cache_update:
+        # elementwise masked write: partitions cleanly when the cache
+        # length dim is sharded (context-parallel decode), unlike a
+        # dynamic-update-slice at a data-dependent offset which makes
+        # GSPMD all-gather the cache (§Perf C2).
+        onehot = (jnp.arange(W) == slot)
+        ck = jnp.where(onehot[None, :, None, None],
+                       k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(onehot[None, :, None, None],
+                       v.astype(cache["v"].dtype), cache["v"])
+        cpos = jnp.where(onehot, step, cache["pos"])
+    else:
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        cpos = cache["pos"].at[slot].set(step)
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    kk = _repeat_kv(ck, H // K)
+    vv = _repeat_kv(cv, H // K)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * cfg.scale
+    if mesh is not None and mp_axes and cfg.context_parallel \
+            and W % math.prod(mesh.shape[a] for a in mp_axes) == 0:
+        # context-parallel decode (§Perf C3): keep scores sharded along the
+        # cache-length dim so GSPMD reshards the tiny query instead of
+        # all-gathering the multi-GB K/V cache.
+        from jax.sharding import NamedSharding
+        s = lax.with_sharding_constraint(
+            s, NamedSharding(mesh, P(None, None, None, tuple(mp_axes))))
+    valid = (cpos >= 0) & (cpos <= step)
+    if cfg.window is not None:
+        valid &= cpos > step - cfg.window
+    if cfg.chunk is not None:
+        valid &= (cpos // cfg.chunk) == (step // cfg.chunk)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, -1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vv)
+    return out.reshape(B, 1, H * hd) @ p["wo"], new_cache

@@ -1,0 +1,288 @@
+"""Model assembly: embedding -> run-partitioned scanned blocks -> head.
+
+Layers are grouped into maximal consecutive same-kind runs; each run's
+parameters are stacked with a leading layer axis and executed with
+``lax.scan`` so the lowered HLO stays compact for 40+-layer models (the
+multi-pod dry-run compiles every architecture at full size).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.attention import AttnConfig
+from repro.models.layers import (apply_norm, embed, embedding_specs,
+                                 init_embedding, init_norm, norm_specs,
+                                 sinusoidal_positions, unembed)
+from repro.parallel.mesh import ParallelDims, axis_size as _axis_size
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.runs = cfg.runs()
+        self.has_cross = any(
+            blk.base_kind(k) in ("cross", "xdec") for k, _ in self.runs)
+
+    # --- params -----------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, len(self.runs) + 4)
+        params = {"embed": init_embedding(keys[0], cfg.vocab_size,
+                                          cfg.d_model, dtype),
+                  "final_norm": init_norm(cfg.d_model, cfg.norm_type)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                                       dtype) / math.sqrt(cfg.d_model)}
+        for r, (kind, n) in enumerate(self.runs):
+            ks = jax.random.split(keys[2 + r], n)
+            stacked = jax.vmap(
+                lambda k: blk.init_block(k, cfg, kind, dtype))(ks)
+            params[f"run{r}"] = stacked
+        if cfg.arch_type == "audio" and cfg.encoder_layers:
+            ks = jax.random.split(keys[-1], cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: blk.init_block(k, cfg, "encoder", dtype))(ks)
+            params["enc_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+        return params
+
+    def specs(self, mesh, dims: ParallelDims) -> dict:
+        cfg = self.cfg
+        specs = {"embed": embedding_specs(mesh, dims.mp, cfg.vocab_size),
+                 "final_norm": norm_specs(cfg.norm_type)}
+        if not cfg.tie_embeddings:
+            v_ax = embedding_specs(mesh, dims.mp, cfg.vocab_size)["table"][0]
+            specs["lm_head"] = {"w": P(None, v_ax)}
+
+        def add_layer_dim(spec):
+            return P(*((None,) + tuple(spec)))
+
+        for r, (kind, n) in enumerate(self.runs):
+            s = blk.block_specs(cfg, kind, mesh, dims)
+            specs[f"run{r}"] = jax.tree.map(
+                add_layer_dim, s, is_leaf=lambda x: isinstance(x, P))
+        if cfg.arch_type == "audio" and cfg.encoder_layers:
+            s = blk.block_specs(cfg, "encoder", mesh, dims)
+            specs["encoder"] = jax.tree.map(
+                add_layer_dim, s, is_leaf=lambda x: isinstance(x, P))
+            specs["enc_norm"] = norm_specs(cfg.norm_type)
+        return specs
+
+    # --- forward ------------------------------------------------------------
+    def _encode_ctx(self, params, batch):
+        """Context tokens for cross-attention: VLM image embeds (stub
+        frontend) or the whisper encoder run over stub audio frames."""
+        cfg = self.cfg
+        ctx = batch.get("ctx_embeds")
+        if ctx is None:
+            return None
+        if cfg.arch_type == "audio":
+            x = ctx + sinusoidal_positions(ctx.shape[1],
+                                           cfg.d_model).astype(ctx.dtype)
+
+            def enc_step(h, layer_params):
+                h, _ = blk.apply_block(layer_params, cfg, "encoder", h,
+                                       mesh=self._mesh, dims=self._dims)
+                return h, None
+
+            x, _ = lax.scan(enc_step, x, params["encoder"])
+            return apply_norm(params["enc_norm"], x, cfg.norm_eps)
+        return ctx
+
+    def forward(self, params, batch, *, mesh, dims: ParallelDims,
+                schedule: Optional[str] = None):
+        """Full-sequence forward (train / prefill). Returns (logits, aux)."""
+        x, aux = self._backbone(params, batch, mesh=mesh, dims=dims,
+                                schedule=schedule)
+        return self._head(params, x), aux
+
+    def _backbone(self, params, batch, *, mesh, dims: ParallelDims,
+                  schedule: Optional[str] = None):
+        """Embedding -> blocks -> final norm (no LM head)."""
+        cfg = self.cfg
+        self._mesh, self._dims = mesh, dims
+        tokens = batch["tokens"]
+        B, L = tokens.shape
+        x = embed(params["embed"], tokens)
+        if not cfg.use_rope and cfg.arch_type not in ("ssm",):
+            x = x + sinusoidal_positions(L, cfg.d_model).astype(x.dtype)
+        ctx = self._encode_ctx(params, batch)
+        positions = jnp.arange(L)
+        aux_total = jnp.float32(0.0)
+
+        seq_spec = None
+        if cfg.seq_parallel and dims.mp and L % max(
+                1, _axis_size(mesh, dims.mp)) == 0:
+            # Megatron-SP (§Perf B2): keep the residual stream sequence-
+            # sharded over MP between blocks; GSPMD turns the per-layer
+            # AllReduces into ReduceScatter+AllGather and runs the norms /
+            # residual adds on L/N_MP tokens.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            baxes = tuple(dims.batch_axes) or None
+            seq_spec = NamedSharding(mesh, P(baxes, tuple(dims.mp), None))
+
+        for r, (kind, n) in enumerate(self.runs):
+            def step(h, layer_params, kind=kind):
+                h2, aux = blk.apply_block(
+                    layer_params, cfg, kind, h, mesh=mesh, dims=dims,
+                    ctx=ctx, positions=positions, schedule=schedule)
+                if seq_spec is not None:
+                    h2 = jax.lax.with_sharding_constraint(h2, seq_spec)
+                return h2, aux
+
+            if cfg.remat:
+                step = jax.checkpoint(step)
+            x, auxs = lax.scan(step, x, params[f"run{r}"])
+            aux_total = aux_total + jnp.sum(auxs)
+
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return x, {"aux_loss": aux_total}
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = x @ params["lm_head"]["w"]
+        return logits * cfg.logit_scale
+
+    def loss(self, params, batch, *, mesh, dims, schedule=None):
+        cfg = self.cfg
+        self._mesh, self._dims = mesh, dims
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        B, L = tokens.shape
+
+        # run the backbone once; compute CE in sequence chunks so the
+        # (B, L, V) f32 logits are never materialized (134 GB/chip for
+        # command-r train_4k otherwise — see EXPERIMENTS.md §Perf).
+        hidden, aux = self._backbone(params, batch, mesh=mesh,
+                                     dims=dims, schedule=schedule)
+        logits_fn_input = hidden
+        b_local = max(B // max(_axis_size(mesh, dims.batch_axes), 1), 1)
+        chunk = L
+        while b_local * chunk * cfg.vocab_size > (1 << 28) and chunk % 2 == 0:
+            chunk //= 2
+        n_chunks = L // chunk if L % chunk == 0 else 1
+        if n_chunks <= 1:
+            logits = self._head(params, logits_fn_input)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, labels[..., None],
+                                     axis=-1)[..., 0]
+            mask = (labels >= 0).astype(jnp.float32)
+            ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            def chunk_ce(x_c, y_c):
+                logits = self._head(params, x_c)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                ll = jnp.take_along_axis(logp, y_c[..., None], -1)[..., 0]
+                m = (y_c >= 0).astype(jnp.float32)
+                return jnp.sum(-ll * m), jnp.sum(m)
+
+            def step(carry, idx):
+                x_c = lax.dynamic_slice_in_dim(logits_fn_input,
+                                               idx * chunk, chunk, 1)
+                y_c = lax.dynamic_slice_in_dim(labels, idx * chunk,
+                                               chunk, 1)
+                s, n = jax.checkpoint(chunk_ce)(x_c, y_c)
+                return (carry[0] + s, carry[1] + n), None
+
+            (tot, n), _ = lax.scan(step, (jnp.float32(0.0),
+                                          jnp.float32(0.0)),
+                                   jnp.arange(n_chunks))
+            ce = tot / jnp.maximum(n, 1.0)
+        total = ce + aux["aux_loss"]
+        return total, {"ce": ce, "aux": aux["aux_loss"],
+                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # --- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        cache = {}
+        for r, (kind, n) in enumerate(self.runs):
+            one = blk.init_block_cache(cfg, kind, batch, max_len, dtype)
+            cache[f"run{r}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+        return cache
+
+    def ctx_kv(self, params, batch, *, mesh=None, dims=None):
+        """Precompute static cross-attention K/V per run (serving-side)."""
+        cfg = self.cfg
+        if mesh is not None:
+            self._mesh, self._dims = mesh, dims
+        ctx = self._encode_ctx(params, batch)
+        if ctx is None:
+            return None
+        out = {}
+        for r, (kind, n) in enumerate(self.runs):
+            base = blk.base_kind(kind)
+            if base not in ("cross", "xdec"):
+                continue
+            acfg = blk.attn_config(cfg, kind, cross=True)
+            K, hd = acfg.n_kv_heads, acfg.head_dim
+
+            def kv_one(p):
+                k = (ctx @ p["xattn"]["wk"]).reshape(
+                    ctx.shape[0], ctx.shape[1], K, hd)
+                v = (ctx @ p["xattn"]["wv"]).reshape(
+                    ctx.shape[0], ctx.shape[1], K, hd)
+                return {"k": k, "v": v}
+
+            out[f"run{r}"] = jax.vmap(kv_one)(params[f"run{r}"])
+        return out
+
+    def decode_step(self, params, cache, batch, *, mesh, dims,
+                    schedule=None, ctx_kv=None):
+        """One serve step: (B, 1) token -> (B, 1, V) logits + new cache."""
+        cfg = self.cfg
+        self._mesh, self._dims = mesh, dims
+        tokens = batch["tokens"]
+        step = batch["step"]
+        x = embed(params["embed"], tokens)
+        if not cfg.use_rope and cfg.arch_type not in ("ssm",):
+            pe = sinusoidal_positions(2048, cfg.d_model)
+            x = x + lax.dynamic_index_in_dim(
+                pe, jnp.minimum(step, 2047), keepdims=True).astype(x.dtype)
+        new_cache = {}
+        for r, (kind, n) in enumerate(self.runs):
+            ckv = ctx_kv.get(f"run{r}") if ctx_kv else None
+
+            def step_fn(h, scanned, kind=kind):
+                layer_params, layer_cache, layer_ckv = scanned
+                h2, c2 = blk.decode_block(
+                    layer_params, cfg, kind, h, layer_cache, step,
+                    mesh=mesh, dims=dims, ctx_kv=layer_ckv,
+                    schedule=schedule)
+                return h2, c2
+
+            scanned = (params[f"run{r}"], cache[f"run{r}"], ckv)
+            if ckv is None:
+                def step_fn2(h, sc, kind=kind):
+                    lp, lc = sc
+                    h2, c2 = blk.decode_block(lp, cfg, kind, h, lc, step,
+                                              mesh=mesh, dims=dims,
+                                              schedule=schedule)
+                    return h2, c2
+                x, new_cache[f"run{r}"] = lax.scan(
+                    step_fn2, x, (params[f"run{r}"], cache[f"run{r}"]))
+            else:
+                x, new_cache[f"run{r}"] = lax.scan(step_fn, x, scanned)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return self._head(params, x), new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,341 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (Hymba's
+parallel heads), and xLSTM's mLSTM / sLSTM cells.
+
+Training uses chunked scans (outer lax.scan over time chunks, parallel
+math within a chunk) so the lowered HLO is compact and the working set
+is O(chunk), matching how these cells are executed efficiently on TPU.
+Decode carries the recurrent state (O(1) per token) — this is what makes
+the ``long_500k`` shape tractable for the SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init
+
+
+# =============================== Mamba ========================================
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    chunk: int = 128
+
+
+def init_mamba(key, cfg: MambaConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    Di, N = cfg.d_inner, cfg.d_state
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * Di), dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, Di), dtype) * 0.1,
+        "conv_b": jnp.zeros((Di,), dtype),
+        "w_bc": dense_init(ks[2], (Di, 2 * N), dtype=dtype),
+        "w_dt": dense_init(ks[3], (Di, Di), dtype=dtype) * 0.1,
+        "b_dt": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (Di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))),
+        "d_skip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (Di, cfg.d_model), fan_in=Di,
+                               dtype=dtype),
+    }
+
+
+def mamba_specs(mesh, mp_axes, cfg: MambaConfig):
+    from repro.parallel.mesh import axis_size
+    n = axis_size(mesh, mp_axes) if mp_axes else 1
+    di_ax = tuple(mp_axes) if mp_axes and cfg.d_inner % n == 0 else None
+    return {
+        "in_proj": P(None, di_ax), "conv_w": P(None, di_ax),
+        "conv_b": P(di_ax), "w_bc": P(di_ax, None), "w_dt": P(None, di_ax),
+        "b_dt": P(di_ax), "a_log": P(di_ax, None), "d_skip": P(di_ax),
+        "out_proj": P(di_ax, None),
+    }
+
+
+def _mamba_chunk(h0, xs, cfg):
+    """Parallel in-chunk selective scan.  xs: dict of (B, c, Di[/N]) slices;
+    h0: (B, Di, N) carried state.  Returns (h_c, y)."""
+    dt, Bm, Cm, xin = xs["dt"], xs["B"], xs["C"], xs["x"]
+    a = -jnp.exp(xs["a_log"])                                   # (Di, N)
+    dA = jnp.exp(dt[..., None] * a)                             # (B,c,Di,N)
+    dBx = (dt * xin)[..., None] * Bm[:, :, None, :]             # (B,c,Di,N)
+    # associative scan over the chunk: h_t = dA_t h_{t-1} + dBx_t
+
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    pA, pH = lax.associative_scan(comb, (dA, dBx), axis=1)
+    h = pA * h0[:, None] + pH                                   # (B,c,Di,N)
+    y = jnp.einsum("bcdn,bcn->bcd", h, Cm)
+    return h[:, -1], y
+
+
+def apply_mamba(p, cfg: MambaConfig, x, state=None):
+    """x: (B, L, D).  state=None -> training (returns y only);
+    state=(conv_buf, h) -> single-token decode (L==1), returns (y, state)."""
+    B, L, D = x.shape
+    Di, N, C = cfg.d_inner, cfg.d_state, cfg.d_conv
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                          # (B, L, Di)
+
+    if state is None:
+        pad = jnp.pad(xin, ((0, 0), (C - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + L] * p["conv_w"][i] for i in range(C))
+        conv = jax.nn.silu(conv + p["conv_b"])
+        dt = jax.nn.softplus(conv @ p["w_dt"] + p["b_dt"])
+        bc = conv @ p["w_bc"]
+        Bm, Cm = jnp.split(bc, 2, axis=-1)                      # (B, L, N)
+        chunk = min(cfg.chunk, L)
+        while L % chunk:
+            chunk //= 2
+        n_chunks = L // chunk
+
+        def step(h, idx):
+            sl = lambda t: lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+            h2, y = _mamba_chunk(
+                h, {"dt": sl(dt), "B": sl(Bm), "C": sl(Cm), "x": sl(conv),
+                    "a_log": p["a_log"]}, cfg)
+            return h2, y
+
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+        _, ys = lax.scan(step, h0, jnp.arange(n_chunks))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, L, Di)
+        y = y + conv * p["d_skip"]
+        return (y * jax.nn.silu(z)).astype(x.dtype) @ p["out_proj"]
+
+    # ---- decode: one step ----
+    conv_buf, h = state                                          # (B,C,Di), (B,Di,N)
+    conv_buf = jnp.concatenate([conv_buf[:, 1:], xin], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum("bcd,cd->bd", conv_buf, p["conv_w"]) + p["conv_b"])
+    dt = jax.nn.softplus(conv @ p["w_dt"] + p["b_dt"])           # (B, Di)
+    bc = conv @ p["w_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt[..., None] * a)
+    h = dA * h + (dt * conv)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + conv * p["d_skip"]
+    y = (y * jax.nn.silu(z[:, 0])).astype(x.dtype) @ p["out_proj"]
+    return y[:, None], (conv_buf, h)
+
+
+def init_mamba_state(cfg: MambaConfig, batch, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.d_conv, cfg.d_inner), dtype),
+            jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32))
+
+
+# =============================== mLSTM ========================================
+
+@dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 64
+
+    @property
+    def d_inner(self):
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self):
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, cfg: MLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    D, Di = cfg.d_model, cfg.d_inner
+    return {
+        "up_proj": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "wq": dense_init(ks[1], (Di, Di), dtype=dtype),
+        "wk": dense_init(ks[2], (Di, Di), dtype=dtype),
+        "wv": dense_init(ks[3], (Di, Di), dtype=dtype),
+        "w_if": dense_init(ks[4], (Di, 2 * cfg.n_heads), dtype=dtype) * 0.1,
+        "b_i": jnp.zeros((cfg.n_heads,), jnp.float32) - 3.0,
+        "b_f": jnp.zeros((cfg.n_heads,), jnp.float32) + 3.0,
+        "down_proj": dense_init(ks[5], (Di, D), fan_in=Di, dtype=dtype),
+    }
+
+
+def mlstm_specs(mesh, mp_axes, cfg: MLSTMConfig):
+    from repro.parallel.mesh import axis_size
+    n = axis_size(mesh, mp_axes) if mp_axes else 1
+    ax = tuple(mp_axes) if mp_axes and cfg.d_inner % n == 0 else None
+    return {"up_proj": P(None, ax), "wq": P(None, ax), "wk": P(None, ax),
+            "wv": P(None, ax), "w_if": P(None, None), "b_i": P(None),
+            "b_f": P(None), "down_proj": P(ax, None)}
+
+
+def _mlstm_chunk(carry, qkvif, cfg):
+    """Stabilized chunkwise mLSTM (matrix memory + normalizer).
+
+    carry: C (B,H,dk,dv), n (B,H,dk), m (B,H).
+    qkvif: q,k,v (B,c,H,hd); logi, logf (B,c,H).
+    """
+    C, nrm, m = carry
+    q, k, v, logi, logf = qkvif
+    B, c, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    cum_f = jnp.cumsum(logf, axis=1)                            # (B,c,H)
+    # stabilizer: m_t = cum_f_t + max(m_prev, runmax_{j<=t}(logi_j - cum_f_j))
+    a = logi - cum_f
+    m_step = cum_f + jnp.maximum(m[:, None], lax.cummax(a, axis=1))
+    m_new = m_step[:, -1]
+    # inter-chunk: decayed previous state
+    decay_q = jnp.exp(m[:, None] + cum_f - m_step)              # (B,c,H)
+    y_inter = jnp.einsum("bchd,bhde->bche", q, C) * decay_q[..., None]
+    n_inter = jnp.einsum("bchd,bhd->bch", q, nrm) * decay_q
+    # intra-chunk: masked decayed attention
+    cf = cum_f
+    dmat = cf[:, :, None] - cf[:, None, :] + logi[:, None]      # (B,ci,cj,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    dmat = jnp.exp(dmat - m_step[:, :, None])
+    s = jnp.einsum("bihd,bjhd->bijh", q, k) * scale * dmat
+    y_intra = jnp.einsum("bijh,bjhd->bihd", s, v)
+    n_intra = jnp.sum(s, axis=2)
+    y = (y_inter + y_intra)
+    denom = jnp.maximum(jnp.abs(n_inter + n_intra),
+                        jnp.exp(-m_step))[..., None]
+    y = y / denom
+    # state update
+    decay_k = jnp.exp(cf[:, -1:] - cf + logi - m_new[:, None])  # (B,c,H)
+    kv = jnp.einsum("bchd,bche,bch->bhde", k * scale, v, decay_k)
+    ksum = jnp.einsum("bchd,bch->bhd", k * scale, decay_k)
+    decay_C = jnp.exp(m[:, None] + cf[:, -1:] - m_new[:, None])[:, 0]
+    C_new = C * decay_C[..., None, None] + kv
+    n_new = nrm * decay_C[..., None] + ksum
+    return (C_new, n_new, m_new), y
+
+
+def apply_mlstm(p, cfg: MLSTMConfig, x, state=None):
+    """x: (B, L, D) train (state=None) or (B, 1, D) decode."""
+    B, L, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    up = x @ p["up_proj"]
+    xi, z = jnp.split(up, 2, axis=-1)                           # (B,L,Di)
+    q = (xi @ p["wq"]).reshape(B, L, H, hd).astype(jnp.float32)
+    k = (xi @ p["wk"]).reshape(B, L, H, hd).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(B, L, H, hd).astype(jnp.float32)
+    gif = (xi @ p["w_if"]).reshape(B, L, H, 2).astype(jnp.float32)
+    logi = gif[..., 0] + p["b_i"]
+    logf = jax.nn.log_sigmoid(gif[..., 1] + p["b_f"])
+
+    if state is None:
+        chunk = min(cfg.chunk, L)
+        while L % chunk:
+            chunk //= 2
+        nc = L // chunk
+
+        def step(carry, i):
+            sl = lambda t: lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
+            carry, y = _mlstm_chunk(
+                carry, (sl(q), sl(k), sl(v), sl(logi), sl(logf)), cfg)
+            return carry, y
+
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+        _, ys = lax.scan(step, (C0, n0, m0), jnp.arange(nc))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H * hd)
+        out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["down_proj"]
+        return out
+
+    (C, nrm, m) = state
+    carry, y = _mlstm_chunk((C, nrm, m),
+                            (q, k, v, logi, logf), cfg)
+    y = y.reshape(B, 1, H * hd)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["down_proj"]
+    return out, carry
+
+
+def init_mlstm_state(cfg: MLSTMConfig, batch):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.zeros((batch, H), jnp.float32))
+
+
+# =============================== sLSTM ========================================
+
+@dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+
+
+def init_slstm(key, cfg: SLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    hd = D // cfg.n_heads
+    return {
+        "w_x": dense_init(ks[0], (D, 4 * D), dtype=dtype),
+        # block-diagonal recurrent weights: (heads, hd, 4*hd)
+        "r_h": jax.random.normal(ks[1], (cfg.n_heads, hd, 4 * hd),
+                                 dtype) / math.sqrt(hd),
+        "bias": jnp.concatenate([jnp.zeros((D,)), jnp.zeros((D,)) + 3.0,
+                                 jnp.zeros((2 * D,))]).astype(jnp.float32),
+        "out_proj": dense_init(ks[2], (D, D), dtype=dtype),
+    }
+
+
+def slstm_specs(mesh, mp_axes, cfg: SLSTMConfig):
+    return {"w_x": P(None, None), "r_h": P(None, None, None),
+            "bias": P(None), "out_proj": P(None, None)}
+
+
+def _slstm_step(p, cfg, carry, gx):
+    """One sLSTM step. carry: (c, n, h, m) each (B, D); gx: (B, 4D)."""
+    c, n, h, m = carry
+    B, D = c.shape
+    H = cfg.n_heads
+    hd = D // H
+    hh = h.reshape(B, H, hd)
+    gr = jnp.einsum("bhd,hde->bhe", hh, p["r_h"]).reshape(B, 4 * D)
+    g = (gx + gr + p["bias"]).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def apply_slstm(p, cfg: SLSTMConfig, x, state=None):
+    B, L, D = x.shape
+    gx = x @ p["w_x"]                                           # (B, L, 4D)
+    if state is None:
+        z0 = jnp.zeros((B, D), jnp.float32)
+        carry0 = (z0, z0, z0, z0)
+
+        def step(carry, g):
+            carry = _slstm_step(p, cfg, carry, g)
+            return carry, carry[2]
+
+        _, hs = lax.scan(step, carry0, gx.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2).astype(x.dtype)
+        return y @ p["out_proj"]
+    carry = _slstm_step(p, cfg, state, gx[:, 0])
+    y = carry[2][:, None].astype(x.dtype) @ p["out_proj"]
+    return y, carry
+
+
+def init_slstm_state(cfg: SLSTMConfig, batch):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return (z, z, z, z)

@@ -1,0 +1,6 @@
+from repro.parallel.mesh import (  # noqa: F401
+    ParallelDims,
+    axis_size,
+    make_mesh,
+)
+from repro.parallel import sharding  # noqa: F401

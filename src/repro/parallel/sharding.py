@@ -1,0 +1,83 @@
+"""PartitionSpec rules for parameters and activations.
+
+Dense (non-MoE) parts of every model are parallelized GSPMD-style:
+attention heads and FFN hidden dims over the MP axes (Megatron), batch
+over DP(+EP) axes.  MoE expert parameters are sharded E-over-EP and
+hidden-over-ESP and consumed inside the explicit shard_map region.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.mesh import ParallelDims, axis_size
+
+
+def maybe(axes):
+    """Return axes tuple for a PartitionSpec entry, or None if empty."""
+    axes = tuple(axes)
+    return axes if axes else None
+
+
+def divisible(n: int, mesh, axes) -> bool:
+    return n % max(axis_size(mesh, axes), 1) == 0
+
+
+class ShardingRules:
+    """Derive PartitionSpecs for a model family given mesh + ParallelDims.
+
+    Falls back to replication whenever a dim is not divisible by the axis
+    size (e.g. GQA kv_heads=4 on a 16-way model axis).
+    """
+
+    def __init__(self, mesh, dims: ParallelDims):
+        self.mesh = mesh
+        self.dims = dims
+
+    def _mp(self, dim_size: int):
+        mp = self.dims.mp
+        if mp and dim_size % axis_size(self.mesh, mp) == 0:
+            return maybe(mp)
+        return None
+
+    # --- activations ---------------------------------------------------
+    def act_tokens(self):
+        """(B, L, M) activations: batch over DP+EP, replicated over MP."""
+        return P(maybe(self.dims.batch_axes), None, None)
+
+    def act_kv_cache(self, n_kv: int):
+        """(B, n_kv, L, hd) decode cache."""
+        return P(maybe(self.dims.batch_axes), self._mp(n_kv), None, None)
+
+    # --- dense params ----------------------------------------------------
+    def dense(self, shape, mp_dim: int | None):
+        """Generic dense weight; shard dim ``mp_dim`` over MP if divisible."""
+        spec = [None] * len(shape)
+        if mp_dim is not None:
+            ax = self._mp(shape[mp_dim])
+            spec[mp_dim] = ax
+        return P(*spec)
+
+    # --- expert params --------------------------------------------------
+    def expert(self, shape_e_first, esp_dim: int):
+        """Stacked expert weight (E, ...): E over EP, ``esp_dim`` over ESP."""
+        spec = [None] * len(shape_e_first)
+        ep = self.dims.ep
+        if ep and shape_e_first[0] % axis_size(self.mesh, ep) == 0:
+            spec[0] = maybe(ep)
+        esp = self.dims.esp
+        if esp and shape_e_first[esp_dim] % axis_size(self.mesh, esp) == 0:
+            spec[esp_dim] = maybe(esp)
+        return P(*spec)
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, mesh, spec: P):
+    """Sharding constraint helper (no-op outside jit on a 1-device mesh)."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

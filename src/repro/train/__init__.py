@@ -1,0 +1,8 @@
+from repro.train.loop import (  # noqa: F401
+    Trainer,
+    cache_specs,
+    make_prefill_fn,
+    make_serve_step,
+    make_train_step,
+    named_tree,
+)

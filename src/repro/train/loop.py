@@ -1,0 +1,171 @@
+"""Train / prefill / serve step factories + the Trainer driver.
+
+These are the functions the multi-pod dry-run lowers and the launchers
+execute: ``train_step`` (fwd+bwd+AdamW), ``prefill_fn`` (full-sequence
+forward) and ``serve_step`` (one token against a KV cache, with greedy
+sampling).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_specs)
+from repro.parallel.mesh import ParallelDims, axis_size
+
+
+def named_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(model: Model, mesh, dims: ParallelDims, kind: str) -> dict:
+    """PartitionSpecs for a batch dict (dim 0 over batch axes if divisible)."""
+    axes = dims.dp + dims.ep if (dims.merged or not dims.esp) \
+        else dims.dp + dims.ep + dims.esp
+
+    def bspec(ndim, batch_size=None):
+        ax = tuple(axes) if axes and (
+            batch_size is None or batch_size % axis_size(mesh, axes) == 0) \
+            else None
+        return P(*((ax,) + (None,) * (ndim - 1)))
+    return bspec
+
+
+def cache_specs(model: Model, mesh, dims: ParallelDims, batch: int,
+                max_len: int, *, seq_shard: bool = False):
+    """Specs for the decode cache: batch dim (axis 1, after the layer-stack
+    axis) sharded over the batch axes when divisible.
+
+    ``seq_shard=True`` additionally shards attention K/V caches along the
+    cache-length dim over the MP axes (context-parallel decode — the
+    beyond-paper §Perf lever for collective/memory-bound decode shapes)."""
+    axes = tuple(dims.batch_axes)
+    n = axis_size(mesh, axes) if axes else 1
+    mp = tuple(dims.mp)
+    n_mp = axis_size(mesh, mp) if mp else 1
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+    def rule(leaf):
+        spec = [None] * leaf.ndim
+        batch_shardable = batch % n == 0 and batch >= n and axes
+        if leaf.ndim >= 2 and leaf.shape[1] == batch and batch_shardable:
+            spec[1] = axes
+        if seq_shard and mp and leaf.ndim == 5:
+            # (layers, B, W, K, hd) attention cache: shard W over MP, and
+            # when the batch axes are idle (B < their size, e.g. B=1
+            # long-context serving) over those too — full context
+            # parallelism across the pod (§Perf C6).
+            waxes = mp if batch_shardable else tuple(axes) + tuple(mp)
+            nw = axis_size(mesh, waxes)
+            if leaf.shape[2] % nw == 0 and leaf.shape[2] >= 16 * nw:
+                spec[2] = waxes
+        return P(*spec)
+
+    return jax.tree.map(rule, shapes)
+
+
+# --- step factories -----------------------------------------------------------
+
+def make_train_step(model: Model, mesh, dims: ParallelDims,
+                    opt_cfg: AdamWConfig, schedule: Optional[str] = None):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, mesh=mesh, dims=dims,
+                              schedule=schedule)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        return params2, opt_state2, {**metrics, **om, "loss": loss}
+    return train_step
+
+
+def make_prefill_fn(model: Model, mesh, dims: ParallelDims,
+                    schedule: Optional[str] = None):
+    def prefill(params, batch):
+        logits, aux = model.forward(params, batch, mesh=mesh, dims=dims,
+                                    schedule=schedule)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(model: Model, mesh, dims: ParallelDims,
+                    schedule: Optional[str] = None, greedy: bool = True):
+    """Cross-attention archs (VLM/audio) take the per-request precomputed
+    context K/V as a fourth argument (built once via model.ctx_kv)."""
+    if model.has_cross:
+        def serve_step(params, cache, batch, ctx_kv):
+            logits, cache2 = model.decode_step(
+                params, cache, batch, mesh=mesh, dims=dims,
+                schedule=schedule, ctx_kv=ctx_kv)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok[:, None], cache2
+        return serve_step
+
+    def serve_step(params, cache, batch):
+        logits, cache2 = model.decode_step(params, cache, batch,
+                                           mesh=mesh, dims=dims,
+                                           schedule=schedule)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache2
+
+    return serve_step
+
+
+# --- driver ---------------------------------------------------------------------
+
+@dataclass
+class Trainer:
+    """End-to-end training driver (used by examples/ and launch/train.py)."""
+    model: Model
+    mesh: object
+    dims: ParallelDims
+    opt_cfg: AdamWConfig
+    schedule: Optional[str] = None
+    ckpt_path: Optional[str] = None
+
+    def setup(self, key):
+        m, mesh, dims = self.model, self.mesh, self.dims
+        pspecs = m.specs(mesh, dims)
+        p_sh = named_tree(mesh, pspecs)
+        params = jax.jit(m.init, out_shardings=p_sh)(key)
+        opt_state = jax.jit(adamw_init,
+                            out_shardings=named_tree(
+                                mesh, opt_state_specs(pspecs)))(params)
+        step_fn = make_train_step(m, mesh, dims, self.opt_cfg, self.schedule)
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        return params, opt_state
+
+    def run(self, params, opt_state, data, n_steps: int, log_every: int = 10,
+            ckpt_every: int = 0):
+        history = []
+        bx = tuple(self.dims.batch_axes)
+        t0 = time.perf_counter()
+        for step in range(n_steps):
+            batch = data.sharded_batch(step, self.mesh, bx)
+            params, opt_state, metrics = self._step(params, opt_state, batch)
+            if step % log_every == 0 or step == n_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                      f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "
+                      f"lr {m['lr']:.2e}", flush=True)
+            if ckpt_every and self.ckpt_path and step and \
+                    step % ckpt_every == 0:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(self.ckpt_path,
+                                {"params": params, "opt": opt_state}, step)
+        return params, opt_state, history

@@ -1,0 +1,23 @@
+"""Test config. NOTE: no global XLA_FLAGS here — smoke tests and benches
+must see 1 device; multi-device tests spawn subprocesses (tests/helpers/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+def subprocess_env(n_devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return env
+
+
+@pytest.fixture
+def helpers_dir():
+    return os.path.join(os.path.dirname(__file__), "helpers")

@@ -1,0 +1,89 @@
+"""Subprocess helper: verify baseline/S1/S2 equivalence on fake devices.
+
+Run as:  python tests/helpers/run_schedule_equiv.py <mode>
+  mode = merged   : mesh (ep=4, model=2), MP==ESP (production mapping)
+  mode = distinct : mesh (ep=2, esp=2, mp=2), N_MP != N_ESP exercised
+Prints "OK" on success; asserts otherwise.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+from repro.parallel.mesh import ParallelDims, make_mesh
+
+
+def reference_moe(x, p, cfg: MoEConfig):
+    """Single-device oracle: same gate + dense per-expert compute."""
+    from repro.core.gating import capacity, combine, dispatch, topk_gate
+    B, L, M = x.shape
+    xt = x.reshape(B * L, M)
+    # must match apply_moe's capacity computation for the sharded pool
+    return None  # computed in main via schedule cross-check instead
+
+
+def main(mode: str):
+    if mode == "merged":
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    else:
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+
+    cfg = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                    capacity_factor=8.0, schedule="baseline")
+    key = jax.random.PRNGKey(0)
+    params = init_moe_params(key, cfg)
+    B, L = 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, L, 32))
+
+    outs, auxes = {}, {}
+    scheds = ["baseline", "s1", "s2"] + (["s1_seqpar"] if mode == "merged" else [])
+    for sched in scheds:
+        f = jax.jit(lambda x, p, s=sched: apply_moe(
+            x, p, mesh=mesh, dims=dims, cfg=cfg, schedule=s))
+        y, aux = f(x, params)
+        assert y.shape == x.shape, (sched, y.shape)
+        assert not np.isnan(np.asarray(y)).any(), sched
+        outs[sched] = np.asarray(y)
+        auxes[sched] = {k: float(v) for k, v in aux.items()}
+        assert auxes[sched]["drop_frac"] == 0.0, (sched, auxes[sched])
+
+    for sched in scheds[1:]:
+        np.testing.assert_allclose(outs[sched], outs["baseline"],
+                                   rtol=2e-4, atol=2e-5, err_msg=sched)
+
+    # gradient equivalence
+    grads = {}
+    for sched in ["baseline", "s1", "s2"]:
+        def loss(p, x, s=sched):
+            y, aux = apply_moe(x, p, mesh=mesh, dims=dims, cfg=cfg, schedule=s)
+            return jnp.sum(y ** 2) + aux["aux_loss"] + aux["z_loss"]
+        g = jax.jit(jax.grad(loss))(params, x)
+        grads[sched] = jax.tree.map(np.asarray, g)
+    for sched in ["s1", "s2"]:
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-4),
+            grads[sched], grads["baseline"])
+
+    # auto selection runs end-to-end
+    y, _ = jax.jit(lambda x, p: apply_moe(
+        x, p, mesh=mesh, dims=dims, cfg=cfg, schedule="auto"))(x, params)
+    np.testing.assert_allclose(np.asarray(y), outs["baseline"],
+                               rtol=2e-4, atol=2e-5)
+
+    # decode fallback: tiny batch
+    xd = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 32))
+    yd, _ = jax.jit(lambda x, p: apply_moe(
+        x, p, mesh=mesh, dims=dims, cfg=cfg, schedule="s1"))(xd, params)
+    assert yd.shape == xd.shape and not np.isnan(np.asarray(yd)).any()
+    print("OK", mode)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "merged")

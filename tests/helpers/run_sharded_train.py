@@ -1,0 +1,61 @@
+"""Subprocess helper: MoE training on a real 8-device (4x2) mesh — params
+actually sharded (EP over data, ESP==MP over model), loss finite and
+decreasing, and per-schedule losses equal step-by-step."""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.train import Trainer
+
+
+def losses_for(schedule, n_steps=8):
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    model = build_model(cfg)
+    tr = Trainer(model, mesh, dims,
+                 AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=40),
+                 schedule=schedule)
+    params, opt = tr.setup(jax.random.PRNGKey(0))
+    # check actual sharding of an expert weight
+    w1 = None
+    for r, (kind, n) in enumerate(model.runs):
+        if kind.startswith("moe"):
+            w1 = params[f"run{r}"]["moe"]["w1"]
+            break
+    assert w1 is not None
+    assert len(w1.sharding.device_set) == 8
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=8))
+    losses = []
+    for step in range(n_steps):
+        batch = data.sharded_batch(step, mesh, dims.batch_axes)
+        params, opt, metrics = tr._step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def main():
+    lb = losses_for("baseline")
+    l1 = losses_for("s1")
+    l2 = losses_for("s2")
+    assert all(np.isfinite(lb)), lb
+    assert lb[-1] < lb[0], lb
+    # schedules are numerically equivalent -> same training trajectory
+    np.testing.assert_allclose(lb, l1, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(lb, l2, rtol=2e-3, atol=2e-3)
+    print("losses:", [round(x, 4) for x in lb])
+    print("SHARDED TRAIN OK")
+
+
+if __name__ == "__main__":
+    main()

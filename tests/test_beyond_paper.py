@@ -1,0 +1,35 @@
+"""Beyond-paper feature tests: sequence-parallel S1 contract and
+context-parallel decode cache sharding (the §Perf levers)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import subprocess_env
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+
+def test_cache_seq_shard_decode_exact():
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, "run_cache_seqshard.py")],
+        env=subprocess_env(8), capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "CACHE SEQSHARD OK" in r.stdout
+
+
+def test_s1_seqpar_equivalent_and_minimal():
+    """covered numerically by run_schedule_equiv (merged includes
+    s1_seqpar) and volume-wise by run_comm_volume; this asserts both
+    helpers agree end-to-end in one process."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, "run_comm_volume.py")],
+        env=subprocess_env(8), capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    lines = dict(l.split()[:2] for l in r.stdout.splitlines()
+                 if l and l.split()[0] in ("baseline", "s1", "s2",
+                                           "s1_seqpar"))
+    assert int(lines["s1_seqpar"]) < int(lines["s1"]) \
+        < int(lines["baseline"])

@@ -1,0 +1,76 @@
+"""Dry-run machinery tests on a scaled (8 fake device) mesh: the same
+lower+compile path as the production 512-chip run, per arch family."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import subprocess_env
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _dryrun(arch, shape, mesh="single", schedule=None, timeout=900):
+    env = subprocess_env(8)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh]
+    if schedule:
+        cmd += ["--schedule", schedule]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=timeout, cwd=os.path.dirname(SRC))
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen1.5-0.5b", "train_4k"),          # dense
+    ("qwen3-moe-30b-a3b", "train_4k"),     # fine-grained MoE
+    ("xlstm-350m", "decode_32k"),          # recurrent decode
+    ("whisper-tiny", "decode_32k"),        # enc-dec cross-attn decode
+    ("hymba-1.5b", "long_500k"),           # hybrid long-context decode
+])
+def test_scaled_dryrun_compiles(arch, shape):
+    out = _dryrun(arch, shape)
+    assert "dry-run complete" in out
+
+
+def test_multi_pod_axis_shards():
+    out = _dryrun("qwen3-moe-30b-a3b", "train_4k", mesh="multi")
+    assert "dry-run complete" in out
+
+
+def test_schedule_override_changes_collectives():
+    """baseline must emit an all-reduce (ESP-AllReduce); s1 must not."""
+    _dryrun("qwen3-moe-30b-a3b", "prefill_32k", schedule="baseline")
+    _dryrun("qwen3-moe-30b-a3b", "prefill_32k", schedule="s1")
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+    with open(os.path.join(
+            art, "qwen3-moe-30b-a3b__prefill_32k__single__baseline.json")) \
+            as f:
+        base = json.load(f)
+    with open(os.path.join(
+            art, "qwen3-moe-30b-a3b__prefill_32k__single__s1.json")) as f:
+        s1 = json.load(f)
+    assert base["collectives"]["counts"].get("all-reduce", 0) > 0
+    base_a2a = base["collectives"]["bytes"]["all-to-all"]
+    s1_a2a = s1["collectives"]["bytes"]["all-to-all"]
+    assert s1_a2a < base_a2a  # PauseMP divides dispatch volume by N_MP
+    assert (s1["collectives"]["total_bytes"]
+            < base["collectives"]["total_bytes"])
+
+
+def test_long500k_skips_whisper():
+    env = subprocess_env(8)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "long_500k"],
+        env=env, capture_output=True, text=True, timeout=300,
+        cwd=os.path.dirname(SRC))
+    assert r.returncode == 0
+    assert "[skip]" in r.stdout

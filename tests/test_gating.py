@@ -1,0 +1,147 @@
+"""Property + unit tests for the top-k gate, dispatch and combine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gating import (GateConfig, capacity, combine, dispatch,
+                               topk_gate)
+
+
+def _gate(S=64, M=16, E=8, k=2, f=2.0, seed=0, cap=None):
+    cfg = GateConfig(n_experts=E, top_k=k, capacity_factor=f)
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (S, M))
+    wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, E)) * 0.5
+    cap = cap or capacity(S, cfg)
+    return cfg, x, wg, cap, topk_gate(x, wg, cfg, cap)
+
+
+class TestGateInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(S=st.sampled_from([8, 32, 64, 128]),
+           E=st.sampled_from([2, 4, 8, 16]),
+           k=st.integers(1, 4),
+           seed=st.integers(0, 10_000))
+    def test_invariants(self, S, E, k, seed):
+        k = min(k, E)
+        cfg, x, wg, cap, (eidx, slot, w, aux) = _gate(
+            S=S, E=E, k=k, seed=seed)
+        eidx, slot, w = map(np.asarray, (eidx, slot, w))
+        # every chosen expert id is valid
+        assert ((eidx >= 0) & (eidx < E)).all()
+        # per-(token) choices are distinct experts
+        for s in range(S):
+            assert len(set(eidx[s])) == k
+        # per-expert slot occupancy: kept slots are unique and < cap
+        kept = slot < cap
+        pairs = set()
+        for s in range(S):
+            for j in range(k):
+                if kept[s, j]:
+                    assert 0 <= slot[s, j] < cap
+                    pair = (int(eidx[s, j]), int(slot[s, j]))
+                    assert pair not in pairs, "slot collision"
+                    pairs.add(pair)
+        # dropped choices have zero combine weight
+        assert (np.asarray(w)[~kept] == 0).all()
+        # weights are softmax probs: within [0, 1]
+        assert (w >= 0).all() and (w <= 1.0 + 1e-6).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(S=st.sampled_from([32, 64, 256]), E=st.sampled_from([4, 16, 128]),
+           k=st.integers(1, 8), seed=st.integers(0, 1000))
+    def test_sort_impl_equals_cumsum_reference(self, S, E, k, seed):
+        """the O(S*k log) sort-based slot assignment (§Perf A1) must be
+        bit-identical to the GShard one-hot-cumsum reference."""
+        from dataclasses import replace as drep
+        k = min(k, E)
+        cfg = GateConfig(n_experts=E, top_k=k, capacity_factor=1.2,
+                         impl="sort")
+        rng = jax.random.PRNGKey(seed)
+        x = jax.random.normal(rng, (S, 16))
+        wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, E))
+        cap = capacity(S, cfg)
+        rs = topk_gate(x, wg, cfg, cap)
+        rc = topk_gate(x, wg, drep(cfg, impl="cumsum"), cap)
+        np.testing.assert_array_equal(np.asarray(rs[0]), np.asarray(rc[0]))
+        np.testing.assert_array_equal(np.asarray(rs[1]), np.asarray(rc[1]))
+        np.testing.assert_array_equal(np.asarray(rs[2]), np.asarray(rc[2]))
+
+    def test_capacity_formula(self):
+        cfg = GateConfig(n_experts=8, top_k=2, capacity_factor=1.5)
+        # T = k*f*tokens/E, 8-aligned
+        assert capacity(64, cfg) == 24
+        assert capacity(8, cfg) >= 8
+
+    def test_priority_first_choice_wins(self):
+        # with capacity 8-aligned minimum, first choices of early tokens
+        # must never be dropped while a 2nd choice of the same expert kept
+        cfg, x, wg, cap, (eidx, slot, w, aux) = _gate(S=256, E=2, k=2, f=0.5)
+        eidx, slot = np.asarray(eidx), np.asarray(slot)
+        kept = slot < cap
+        # choice-major priority: if any first choice dropped for expert e,
+        # no second choice for e may be kept
+        for e in range(2):
+            first_dropped = ((eidx[:, 0] == e) & ~kept[:, 0]).any()
+            second_kept = ((eidx[:, 1] == e) & kept[:, 1]).any()
+            assert not (first_dropped and second_kept)
+
+    def test_normalize_topk(self):
+        cfg = GateConfig(n_experts=8, top_k=4, capacity_factor=4.0,
+                         normalize_topk=True)
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+        wg = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        _, slot, w, _ = topk_gate(x, wg, cfg, capacity(32, cfg))
+        keep = np.asarray(slot) < capacity(32, cfg)
+        sums = np.asarray(w).sum(1)
+        np.testing.assert_allclose(sums[keep.all(1)], 1.0, rtol=1e-5)
+
+
+class TestDispatchCombine:
+    def test_roundtrip_identity(self):
+        """dispatch then combine with weight 1 reproduces kept tokens."""
+        cfg, x, wg, cap, (eidx, slot, w, aux) = _gate(S=64, E=8, k=1, f=4.0)
+        buf = dispatch(x, eidx, slot, cap, 8)
+        ones = jnp.ones_like(w)
+        y = combine(buf, eidx, slot, ones, cap)
+        kept = np.asarray(slot)[:, 0] < cap
+        np.testing.assert_allclose(np.asarray(y)[kept],
+                                   np.asarray(x)[kept], rtol=1e-6)
+
+    def test_dropped_tokens_zero(self):
+        cfg, x, wg, cap, (eidx, slot, w, aux) = _gate(S=512, E=2, k=1,
+                                                      f=0.1)
+        buf = dispatch(x, eidx, slot, cap, 2)
+        y = combine(buf, eidx, slot, w, cap)
+        dropped = np.asarray(slot)[:, 0] >= cap
+        assert dropped.any()
+        np.testing.assert_allclose(np.asarray(y)[dropped], 0.0, atol=1e-7)
+
+    def test_gradients_flow(self):
+        cfg, x, wg, cap, _ = _gate(S=32, E=4, k=2, f=4.0)
+
+        def loss(x, wg):
+            eidx, slot, w, aux = topk_gate(x, wg, cfg, cap)
+            buf = dispatch(x, eidx, slot, cap, 4)
+            y = combine(buf * 2.0, eidx, slot, w, cap)
+            return jnp.sum(y ** 2) + aux["aux_loss"]
+
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, wg)
+        assert np.isfinite(np.asarray(gx)).all()
+        assert np.isfinite(np.asarray(gw)).all()
+        assert float(jnp.abs(gx).sum()) > 0
+        assert float(jnp.abs(gw).sum()) > 0
+
+    def test_aux_loss_balanced_lower(self):
+        """uniform routing must give lower aux loss than collapsed."""
+        cfg = GateConfig(n_experts=4, top_k=1)
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+        wg_uniform = jnp.zeros((16, 4))
+        wg_collapse = jnp.zeros((16, 4)).at[:, 0].set(5.0)
+        cap = capacity(256, cfg)
+        _, _, _, aux_u = topk_gate(x, wg_uniform, cfg, cap)
+        _, _, _, aux_c = topk_gate(x, wg_collapse, cfg, cap)
+        assert float(aux_u["aux_loss"]) < float(aux_c["aux_loss"])

@@ -1,0 +1,90 @@
+"""ParallelDims / sharding-rule / mesh unit tests (1 device, spec-level)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.moe import moe_param_specs
+from repro.models import build_model
+from repro.parallel.mesh import ParallelDims, axis_size, make_mesh, \
+    production_dims
+
+
+class TestParallelDims:
+    def test_merged_detection(self):
+        d = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+        assert d.merged
+        d2 = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+        assert not d2.merged
+
+    def test_batch_axes(self):
+        merged = ParallelDims(dp=("pod",), ep=("data",), esp=("model",),
+                              mp=("model",))
+        assert merged.batch_axes == ("pod", "data")
+        distinct = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+        assert distinct.batch_axes == ("ep", "esp")
+
+    def test_string_coercion(self):
+        d = ParallelDims(ep="data", mp="model")
+        assert d.ep == ("data",) and d.mp == ("model",)
+
+    def test_production_dims(self):
+        moe = production_dims(multi_pod=True, moe=True)
+        assert moe.dp == ("pod",) and moe.ep == ("data",)
+        assert moe.merged
+        dense = production_dims(multi_pod=False, moe=False)
+        assert dense.dp == ("data",) and dense.mp == ("model",)
+
+    def test_validate_rejects_bad_axes(self):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        d = ParallelDims(ep=("nope",))
+        with pytest.raises(ValueError):
+            d.validate(mesh, 8)
+
+
+class TestSpecs:
+    def test_moe_param_specs_shard_correctly(self):
+        cfg = get_config("qwen3-moe-30b-a3b").moe
+        mesh = make_mesh((1, 1), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+        s = moe_param_specs(cfg, mesh, dims)
+        assert s["w1"] == P(("data",), None, ("model",))
+        assert s["w2"] == P(("data",), ("model",), None)
+        assert s["wg"] == P(None, None)
+
+    def test_model_specs_cover_all_params(self):
+        """every param leaf must have a matching spec leaf."""
+        for name in ["qwen3-moe-30b-a3b", "hymba-1.5b", "whisper-tiny",
+                     "llama-3.2-vision-11b", "xlstm-350m", "command-r-35b"]:
+            cfg = get_config(name).reduced()
+            mesh = make_mesh((1, 1), ("data", "model"))
+            dims = (ParallelDims(ep=("data",), esp=("model",),
+                                 mp=("model",)) if cfg.moe
+                    else ParallelDims(dp=("data",), mp=("model",)))
+            model = build_model(cfg)
+            shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            specs = model.specs(mesh, dims)
+            jax.tree.map(lambda a, b: None, shapes, specs,
+                         is_leaf=lambda x: isinstance(x, P))  # structure eq
+
+    def test_spec_ranks_match_param_ranks(self):
+        cfg = get_config("yi-9b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        dims = ParallelDims(dp=("data",), mp=("model",))
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = model.specs(mesh, dims)
+
+        def check(leaf, spec):
+            assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        jax.tree.map(check, shapes, specs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+class TestAxisSize:
+    def test_axis_size(self):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        assert axis_size(mesh, ()) == 1
+        assert axis_size(mesh, ("data",)) == 1
+        assert axis_size(mesh, "model") == 1

@@ -1,0 +1,94 @@
+"""Alpha-beta performance model + Algorithm 1 (paper §IV/§V) tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import (AlphaBeta, MoELayerShape, PerfModel,
+                                  fit_alpha_beta, speedup_table,
+                                  tpu_v5e_model)
+
+
+def toy_model(beta=1e-9, alpha=1e-5):
+    ab = AlphaBeta(alpha, beta)
+    return PerfModel(a2a_ep_esp=ab, a2a_ep=ab, ag_esp=ab, ar_esp=ab,
+                     ag_mp=AlphaBeta(alpha, beta / 4), overlap=ab)
+
+
+class TestClosedForms:
+    def test_eq1_baseline(self):
+        m = toy_model()
+        s = MoELayerShape(B=4, L=1024, M=1024, H=4096, E=8, k=2, f=1.2,
+                          n_mp=2, n_esp=2, n_ep=4)
+        t = m.t_baseline(s)
+        expect = (m.ag_esp(s.blm * 2) + m.ar_esp(s.etm * 2)
+                  + 2 * m.a2a_ep(s.etm * 2))
+        assert t == pytest.approx(expect)
+
+    def test_s1_s2_beat_baseline(self):
+        """Paper §IV-B: S1 and S2 always beat the baseline (Eq. 6/10)."""
+        for n_mp in (1, 2, 4):
+            for n_esp in (1, 2, 4):
+                m = tpu_v5e_model(n_ep=4, n_esp=n_esp, n_mp=n_mp)
+                s = MoELayerShape(B=8, L=1024, M=2048, H=8192, E=16, k=2,
+                                  f=1.2, n_mp=n_mp, n_esp=n_esp, n_ep=4)
+                assert m.t_s1(s) < m.t_baseline(s)
+                assert m.t_s2(s) < m.t_baseline(s)
+
+    def test_regimes_t_small_s2_t_large_s1(self):
+        """§IV-B: T->0 favours S2, T->inf favours S1."""
+        m = toy_model()
+        small = MoELayerShape(B=1, L=64, M=1024, H=1, E=64, k=1, f=0.1,
+                              n_mp=4, n_esp=1, n_ep=4)
+        big = MoELayerShape(B=64, L=4096, M=1024, H=1, E=4, k=4, f=8.0,
+                            n_mp=4, n_esp=1, n_ep=4)
+        assert m.algorithm1(small) == "s2"
+        assert m.algorithm1(big) == "s1"
+
+    @settings(max_examples=50, deadline=None)
+    @given(B=st.sampled_from([1, 4, 8]), L=st.sampled_from([256, 2048]),
+           M=st.sampled_from([512, 4096]), E=st.sampled_from([8, 64]),
+           k=st.integers(1, 4), n_mp=st.sampled_from([1, 2, 4, 16]),
+           n_esp=st.sampled_from([1, 2, 4, 16]))
+    def test_algorithm1_is_argmin(self, B, L, M, E, k, n_mp, n_esp):
+        """The selector must pick argmin(t_D1, t_D2) of its own line-4/5
+        cost expressions."""
+        m = tpu_v5e_model(n_ep=4, n_esp=n_esp, n_mp=n_mp)
+        s = MoELayerShape(B=B, L=L, M=M, H=4 * M, E=E, k=k, f=1.2,
+                          n_mp=n_mp, n_esp=n_esp, n_ep=4)
+        y = s.E * s.T * s.M * n_esp
+        x = s.B * s.L * s.M
+        t1 = 2 * m.a2a_ep_esp(y / n_mp) + m.ag_mp(x)
+        t2 = (m.a2a_ep_esp(y / n_mp) + m.overlap(y / n_mp)
+              + m.ag_mp(s.E * s.T * s.M))
+        pick = m.algorithm1(s)
+        assert pick == ("s1" if t1 <= t2 else "s2")
+
+    def test_speedup_table_fields(self):
+        m = tpu_v5e_model(4, 4, 4)
+        s = MoELayerShape(B=8, L=1024, M=2048, H=2048, E=16, k=2, f=1.2,
+                          n_mp=4, n_esp=4, n_ep=4)
+        row = speedup_table(s, m)
+        assert row["speedup_parm"] >= max(row["speedup_s1"],
+                                          row["speedup_s2"]) - 1e-9
+        assert row["speedup_parm"] > 1.0
+
+
+class TestFitting:
+    @settings(max_examples=20, deadline=None)
+    @given(alpha=st.floats(1e-6, 1e-3), beta=st.floats(1e-12, 1e-8))
+    def test_lsq_recovers_parameters(self, alpha, beta):
+        sizes = [2 ** i for i in range(10, 24, 2)]
+        times = [alpha + beta * x for x in sizes]
+        fit = fit_alpha_beta(sizes, times)
+        assert fit.beta == pytest.approx(beta, rel=1e-6)
+        assert fit.alpha == pytest.approx(alpha, rel=1e-3, abs=1e-9)
+
+    def test_fit_with_noise(self):
+        rng = np.random.default_rng(0)
+        alpha, beta = 5e-5, 2e-10
+        sizes = [2 ** i for i in range(12, 26)]
+        times = [alpha + beta * x * (1 + rng.normal(0, 0.02))
+                 for x in sizes]
+        fit = fit_alpha_beta(sizes, times)
+        assert fit.beta == pytest.approx(beta, rel=0.1)

@@ -1,0 +1,147 @@
+"""Optimizer / data pipeline / checkpoint / HLO-parser unit tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import parse_collectives
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule)
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, min_lr_frac=1.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, state, m = adamw_update(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_clipping(self):
+        cfg = AdamWConfig(clip_norm=1.0)
+        params = {"w": jnp.ones((4,))}
+        state = adamw_init(params)
+        _, _, m = adamw_update(params, {"w": jnp.full((4,), 100.0)}, state,
+                               cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_no_weight_decay_on_1d(self):
+        cfg = AdamWConfig(lr=1.0, weight_decay=1.0, warmup_steps=0,
+                          min_lr_frac=1.0)
+        params = {"scale": jnp.ones((8,)), "w": jnp.ones((8, 8))}
+        state = adamw_init(params)
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        p2, _, _ = adamw_update(params, zero_g, state, cfg)
+        np.testing.assert_array_equal(np.asarray(p2["scale"]),
+                                      np.ones((8,)))   # no decay
+        assert (np.asarray(p2["w"]) < 1.0).all()        # decayed
+
+    def test_schedule_warmup_and_floor(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(cosine_schedule(cfg, 0)) == 0.0
+        assert float(cosine_schedule(cfg, 10)) == pytest.approx(1.0)
+        assert float(cosine_schedule(cfg, 100)) == pytest.approx(0.1)
+
+
+class TestData:
+    def test_deterministic(self):
+        d = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                   global_batch=4))
+        b1, b2 = d.batch(3), d.batch(3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = d.batch(4)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        d = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                   global_batch=4))
+        b = d.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_learnable_structure(self):
+        """bigram successors must be over-represented."""
+        d = SyntheticLM(DataConfig(vocab_size=50, seq_len=256,
+                                   global_batch=16, heavy_prob=0.8))
+        b = d.batch(0)
+        hits = 0
+        total = 0
+        for row_t, row_l in zip(b["tokens"], b["labels"]):
+            for t, l in zip(row_t, row_l):
+                total += 1
+                if l in d.bigram[t]:
+                    hits += 1
+        assert hits / total > 0.5
+
+    def test_vocab_bounds(self):
+        d = SyntheticLM(DataConfig(vocab_size=37, seq_len=8,
+                                   global_batch=2))
+        b = d.batch(0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 37
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested(self):
+        tree = {"a": {"b": jnp.arange(6).reshape(2, 3),
+                      "c": [jnp.ones(2), jnp.zeros(3)]},
+                "d": (jnp.float32(3.5), jnp.int32(7))}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "x.npz")
+            save_checkpoint(p, tree, step=42)
+            got, step = load_checkpoint(p)
+        assert step == 42
+        assert isinstance(got["d"], tuple)
+        assert isinstance(got["a"]["c"], list)
+        np.testing.assert_array_equal(got["a"]["b"],
+                                      np.arange(6).reshape(2, 3))
+        assert got["d"][0] == np.float32(3.5)
+
+    def test_atomic_overwrite(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "x.npz")
+            save_checkpoint(p, {"w": jnp.zeros(3)}, 1)
+            save_checkpoint(p, {"w": jnp.ones(3)}, 2)
+            got, step = load_checkpoint(p)
+        assert step == 2
+        np.testing.assert_array_equal(got["w"], np.ones(3))
+
+
+class TestHLOParser:
+    def test_counts_and_bytes(self):
+        hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = bf16[4,256]{1,0} all-reduce(%y), to_apply=%add
+  %a2a = f32[8,8]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs={}
+  %rs = f32[64]{0} reduce-scatter(%v), dimensions={0}
+"""
+        st_ = parse_collectives(hlo)
+        assert st_.counts == {"all-gather": 1, "all-reduce": 1,
+                              "all-to-all": 1, "collective-permute": 1,
+                              "reduce-scatter": 1}
+        assert st_.bytes_by_kind["all-gather"] == 16 * 128 * 4
+        assert st_.bytes_by_kind["all-reduce"] == 4 * 256 * 2
+        assert st_.bytes_by_kind["collective-permute"] == 100
+
+    def test_async_pairs_counted_once(self):
+        hlo = """
+  %s = (f32[8]{0}, f32[16]{0}) all-gather-start(%x), dimensions={0}
+  %d = f32[16]{0} all-gather-done(%s)
+"""
+        st_ = parse_collectives(hlo)
+        assert st_.counts["all-gather"] == 1
+        assert st_.bytes_by_kind["all-gather"] == (8 + 16) * 4 // 2
+
+    def test_ignores_non_collectives(self):
+        st_ = parse_collectives("%m = f32[8,8]{1,0} dot(%a, %b)")
+        assert st_.total_bytes == 0
