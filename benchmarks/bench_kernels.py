@@ -1,0 +1,115 @@
+"""Kernel-backend comparison harness: ref vs pallas timings per registry op.
+
+For each hot-path op the same workload runs under both backends through
+``repro.kernels.registry.get_op`` and the median wall time is emitted as
+CSV (``op,backend,shape,us_per_call``).  On TPU this measures the real
+compiled kernels; off-TPU the pallas backend runs in interpret mode, so
+the ref numbers are the meaningful ones and the pallas column only proves
+the path executes (pass ``--skip-interpret`` to drop it).
+
+Run:  PYTHONPATH=src python benchmarks/bench_kernels.py [--iters 10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+
+from benchmarks.common import emit, time_fn             # noqa: E402
+from repro.core.gating import GateConfig, capacity, topk_gate  # noqa: E402
+from repro.kernels.registry import BACKENDS, get_op     # noqa: E402
+
+
+def _moe_routing(S, M, E, k, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (S, M))
+    wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, E)) * 0.3
+    cfg = GateConfig(n_experts=E, top_k=k, capacity_factor=1.25)
+    cap = capacity(S, cfg)
+    eidx, slot, w, _ = topk_gate(x, wg, cfg, cap)
+    flat = jnp.where(slot < cap, eidx * cap + slot, E * cap).astype(jnp.int32)
+    return x, flat, w, E * cap
+
+
+def workloads(sizes: str):
+    """(op, shape-tag, static kwargs, arg-builder) per benchmarked op."""
+    if sizes == "small":          # CI / interpret-friendly
+        E, T, M, F = 4, 256, 256, 512
+        S, k = 1024, 2
+        B, L, H, K, hd = 1, 512, 8, 2, 64
+        R, D = 4096, 1024
+    else:                         # "paper": closer to Table III scale
+        E, T, M, F = 8, 1024, 1024, 4096
+        S, k = 8192, 2
+        B, L, H, K, hd = 4, 2048, 16, 4, 128
+        R, D = 32768, 4096
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xe = jax.random.normal(ks[0], (E, T, M))
+    w1 = jax.random.normal(ks[1], (E, M, F)) * 0.05
+    w3 = jax.random.normal(ks[2], (E, M, F)) * 0.05
+    w2 = jax.random.normal(ks[3], (E, F, M)) * 0.05
+    xs, flat, w, n_slots = _moe_routing(S, M, E, k)
+    buf = jax.random.normal(ks[0], (n_slots, M))
+    q = jax.random.normal(ks[1], (B, L, H, hd))
+    kv_k = jax.random.normal(ks[2], (B, L, K, hd))
+    kv_v = jax.random.normal(ks[3], (B, L, K, hd))
+    xr = jax.random.normal(ks[0], (R, D))
+    sc = jnp.ones((D,))
+
+    return [
+        ("expert_ffn", f"E{E}xT{T}xM{M}xF{F}", {"act": "silu"},
+         (xe, w1, w3, w2)),
+        ("moe_dispatch", f"S{S}xM{M}xE{E}k{k}", {"n_slots": n_slots},
+         (xs, flat)),
+        ("moe_combine", f"S{S}xM{M}xE{E}k{k}", {}, (buf, flat, w)),
+        ("rmsnorm", f"R{R}xD{D}", {"eps": 1e-5}, (xr, sc)),
+        ("flash_attention", f"B{B}xL{L}xH{H}/{K}xhd{hd}", {"causal": True},
+         (q, kv_k, kv_v)),
+    ]
+
+
+def main(argv=None):
+    # programmatic callers (benchmarks/run.py) get the defaults; only the
+    # __main__ entry below reads the process argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--sizes", choices=("small", "paper"), default="small")
+    ap.add_argument("--ops", nargs="*", default=None,
+                    help="subset of ops to run (default: all)")
+    ap.add_argument("--skip-interpret", action="store_true",
+                    help="skip the pallas backend off-TPU (interpret mode "
+                         "is emulation-speed, not a perf datapoint)")
+    args = ap.parse_args([] if argv is None else argv)
+
+    known = [w[0] for w in workloads(args.sizes)]
+    bad = set(args.ops or ()) - set(known)
+    if bad:
+        ap.error(f"unknown op(s) {sorted(bad)}; choose from {known}")
+
+    on_tpu = jax.default_backend() == "tpu"
+    print(f"# backend={jax.default_backend()} "
+          f"pallas={'compiled' if on_tpu else 'interpret'}", file=sys.stderr)
+
+    for op_name, tag, static, op_args in workloads(args.sizes):
+        if args.ops and op_name not in args.ops:
+            continue
+        for backend in BACKENDS:
+            if backend == "pallas" and not on_tpu and args.skip_interpret:
+                continue
+            fn = get_op(op_name, backend=backend, **static)
+            run = lambda: jax.block_until_ready(fn(*op_args))  # noqa: E731
+            iters = args.iters if (backend == "ref" or on_tpu) else \
+                max(2, args.iters // 5)
+            t = time_fn(run, iters=iters, warmup=2)
+            emit(f"kernels/{op_name}/{backend}", t * 1e6, tag)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -16,6 +16,7 @@ IN_PROCESS = [
     "benchmarks.bench_table4_speedups",
     "benchmarks.bench_fig7_stats",
     "benchmarks.bench_roofline",
+    "benchmarks.bench_kernels",
 ]
 SUBPROCESS = [
     "benchmarks.bench_fig6_perfmodel",

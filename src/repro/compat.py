@@ -1,0 +1,53 @@
+"""Cross-version JAX API shims (jax 0.4.x <-> 0.5+/0.7+).
+
+The repo is written against the modern spellings — ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)`` and ``jax.shard_map(..., check_vma=...)``
+— none of which exist on jax 0.4.37.  Everything that needs one of those APIs
+goes through this module instead of feature-testing inline:
+
+  * ``AxisType``  — the enum when available, else ``None``.
+  * ``make_mesh`` — pins Auto axis types when the installed jax supports them
+    (required for the GSPMD + shard_map mix), plain ``jax.make_mesh`` otherwise
+    (0.4.x meshes are implicitly Auto, so the semantics match).
+  * ``shard_map`` — resolves the top-level ``jax.shard_map`` alias, falling
+    back to ``jax.experimental.shard_map.shard_map``, and translates the
+    ``check_vma`` flag to the old ``check_rep`` spelling when needed.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax.sharding import AxisType          # jax >= 0.5
+except ImportError:                            # pragma: no cover - jax 0.4.x
+    AxisType = None
+
+
+def make_mesh(shape, names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` pinned to Auto axis types where supported."""
+    shape = tuple(int(s) for s in shape)
+    names = tuple(names)
+    if AxisType is not None:
+        return jax.make_mesh(shape, names,
+                             axis_types=(AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:                         # pragma: no cover - jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with ``check_vma`` translated for older jax."""
+    kwargs = {}
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

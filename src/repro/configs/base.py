@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.moe import MoEConfig
+from repro.kernels.registry import KernelConfig
 
 
 @dataclass(frozen=True)
@@ -81,7 +82,8 @@ class ModelConfig:
     # execution
     dtype: str = "float32"
     remat: bool = True
-    use_pallas: bool = False
+    use_pallas: bool = False              # legacy: force the pallas backend
+    kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
     cache_masked_update: bool = False   # elementwise KV write (§Perf C2 opt)
     seq_parallel: bool = False          # Megatron-SP residual stream (§Perf B2)
     context_parallel_decode: bool = False  # shard decode scores on cache dim
@@ -90,6 +92,14 @@ class ModelConfig:
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kernel_cfg(self) -> KernelConfig:
+        """Effective kernel config: the legacy ``use_pallas`` flag pins the
+        backend when the config itself is still on ``auto``."""
+        if self.use_pallas and self.kernel.backend == "auto":
+            return replace(self.kernel, backend="pallas")
+        return self.kernel
 
     @property
     def sub_quadratic(self) -> bool:

@@ -2,22 +2,26 @@
 dispatch / gather combine that move tokens in and out of the per-expert
 capacity buffer.
 
-The dispatch/combine here are the *pure-jnp reference* implementations;
-``repro.kernels.moe_dispatch`` provides the Pallas TPU kernels with these
-as oracles.  Capacity semantics follow the paper: T = k * f * tokens / E,
-and each schedule applies it to the token set it gates (S1 gates each MP
-shard independently, so its per-shard capacity is T / N_MP — see
-DESIGN.md fidelity notes).
+``dispatch``/``combine`` compute the flat slot indices here (pure jnp) and
+route the actual scatter/gather through the kernel-backend registry
+(``repro.kernels.registry``): backend ``"ref"`` is the pure-jnp oracle the
+schedule bodies historically inlined, ``"pallas"`` the TPU kernel.
+Capacity semantics follow the paper: T = k * f * tokens / E, and each
+schedule applies it to the token set it gates (S1 gates each MP shard
+independently, so its per-shard capacity is T / N_MP — see DESIGN.md
+fidelity notes).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.kernels.registry import KernelConfig, get_op
 
 
 @dataclass(frozen=True)
@@ -104,26 +108,32 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int):
     return expert_idx, slot_idx, weights, aux
 
 
-def dispatch(x, expert_idx, slot_idx, cap: int, n_experts: int):
+def flat_slots(expert_idx, slot_idx, cap: int, n_experts: int):
+    """Flat capacity-buffer index per (token, choice); ``n_experts * cap``
+    marks a dropped choice (the registry ops' drop sentinel)."""
+    return jnp.where(slot_idx < cap, expert_idx * cap + slot_idx,
+                     n_experts * cap).astype(jnp.int32)
+
+
+def dispatch(x, expert_idx, slot_idx, cap: int, n_experts: int,
+             kernel: Optional[KernelConfig] = None):
     """Scatter tokens into the (E, cap, M) capacity buffer.
 
-    Dropped tokens (slot >= cap) land in a trash row that is sliced off.
+    Dropped tokens (slot >= cap) are discarded.  The scatter itself is a
+    registry op (``moe_dispatch``), so the backend follows ``kernel``.
     """
-    S, M = x.shape
-    k = expert_idx.shape[1]
-    flat = jnp.where(slot_idx < cap, expert_idx * cap + slot_idx,
-                     n_experts * cap)                            # (S, k)
-    buf = jnp.zeros((n_experts * cap + 1, M), x.dtype)
-    src = jnp.broadcast_to(x[:, None, :], (S, k, M)).reshape(S * k, M)
-    buf = buf.at[flat.reshape(-1)].set(src, mode="drop")
-    return buf[:-1].reshape(n_experts, cap, M)
+    M = x.shape[-1]
+    flat = flat_slots(expert_idx, slot_idx, cap, n_experts)      # (S, k)
+    op = get_op("moe_dispatch", cfg=kernel, n_slots=n_experts * cap)
+    return op(x, flat).reshape(n_experts, cap, M)
 
 
-def combine(buf, expert_idx, slot_idx, weights, cap: int):
-    """Gather expert outputs back to token order and mix with gate weights."""
+def combine(buf, expert_idx, slot_idx, weights, cap: int,
+            kernel: Optional[KernelConfig] = None):
+    """Gather expert outputs back to token order and mix with gate weights
+    (registry op ``moe_combine``; dropped choices contribute zero)."""
     E = buf.shape[0]
     M = buf.shape[-1]
-    flat_buf = buf.reshape(E * cap, M)
-    flat = jnp.minimum(expert_idx * cap + slot_idx, E * cap - 1)  # (S, k)
-    vals = flat_buf[flat.reshape(-1)].reshape(*expert_idx.shape, M)
-    return jnp.einsum("sk,skm->sm", weights.astype(buf.dtype), vals)
+    flat = flat_slots(expert_idx, slot_idx, cap, E)              # (S, k)
+    op = get_op("moe_combine", cfg=kernel)
+    return op(buf.reshape(E * cap, M), flat, weights)

@@ -10,8 +10,7 @@ Algorithm-1 auto-selector when ``schedule="auto"``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -19,10 +18,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives as coll
-from repro.core.gating import GateConfig, capacity, topk_gate
+from repro import compat
+from repro.core.gating import GateConfig, capacity
 from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
 from repro.core.schedules import BODY, MoEShardInfo, expert_ffn
+from repro.kernels.registry import KernelConfig
 from repro.parallel.mesh import ParallelDims, axis_size
 
 
@@ -40,6 +40,8 @@ class MoEConfig:
     z_loss_weight: float = 1e-3
     schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | auto
     saa_chunks: int = 4
+    act: str = "silu"             # expert activation ("silu" | "gelu")
+    kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
 
     def gate_config(self) -> GateConfig:
         return GateConfig(
@@ -186,17 +188,23 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
     info = MoEShardInfo(
         ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
         mp_axes=tuple(dims.mp), n_ep=n_ep, n_esp=n_esp, n_mp=n_mp,
-        tokens=s_local, cap=cap, gate=gate_cfg, glu=cfg.glu,
-        saa_chunks=cfg.saa_chunks)
+        tokens=s_local, cap=cap, gate=gate_cfg, act=cfg.act, glu=cfg.glu,
+        saa_chunks=cfg.saa_chunks, kernel=cfg.kernel)
 
     body = _replicated_body if sched == "dense_decode" else BODY[sched]
+    pspecs = moe_param_specs(cfg, mesh, dims)
     w3 = params.get("w3")
+    if w3 is None:
+        # non-GLU experts have no w3: ship a zero-size replicated stand-in
+        # instead of aliasing w1 into a dead (sharded, transferred) operand.
+        w3 = jnp.zeros((0,), x.dtype)
+        w3_spec = P(None)
+    else:
+        w3_spec = pspecs["w3"]
 
     x_spec = (P(tuple(token_shard) or None, None) if not use_fallback
               else P(None, None))
-    pspecs = moe_param_specs(cfg, mesh, dims)
-    in_specs = (x_spec, pspecs["wg"], pspecs["w1"],
-                pspecs.get("w3", P(None, None)), pspecs["w2"])
+    in_specs = (x_spec, pspecs["wg"], pspecs["w1"], w3_spec, pspecs["w2"])
     out_specs = (x_spec, {k: P() for k in
                           ("aux_loss", "z_loss", "drop_frac")})
 
@@ -206,11 +214,9 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         return y.astype(x.dtype), aux
 
     xt = x.reshape(tokens_global, M)
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)(xt, params["wg"], params["w1"],
-                         w3 if w3 is not None else params["w1"],
-                         params["w2"])
+        check_vma=False)(xt, params["wg"], params["w1"], w3, params["w2"])
     y = y.reshape(B, L, M)
 
     if cfg.n_shared_experts:

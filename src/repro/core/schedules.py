@@ -20,14 +20,12 @@ MP-AllGather disappears entirely (see EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core import collectives as coll
 from repro.core.gating import GateConfig, combine, dispatch, topk_gate
+from repro.kernels.registry import KernelConfig, get_op
 
 SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "auto")
 
@@ -44,9 +42,10 @@ class MoEShardInfo:
     tokens: int          # S: tokens per device at the MoE boundary
     cap: int             # T: per-expert capacity for an S-token pool
     gate: GateConfig
-    act: Callable = jax.nn.silu
+    act: str = "silu"    # expert activation (registry op static)
     glu: bool = True     # SwiGLU experts (w1 gate + w3 up) vs 2-layer GELU
     saa_chunks: int = 4  # SAA pipeline depth (1 = no overlap, AAS)
+    kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
 
     @property
     def combined_group(self):
@@ -59,13 +58,10 @@ def expert_ffn(xb, w1, w3, w2, info: MoEShardInfo):
     Weights are the local ESP shard (hidden dim sliced N_ESP ways), so the
     output is a *partial sum* that the caller reduces across the ESP group
     (psum in the baseline, the combine-AlltoAll's local reduction in S1/S2).
+    Compute is the registry's ``expert_ffn`` op under ``info.kernel``.
     """
-    h = jnp.einsum("etm,emh->eth", xb, w1)
-    if info.glu:
-        h = info.act(h) * jnp.einsum("etm,emh->eth", xb, w3)
-    else:
-        h = info.act(h)
-    return jnp.einsum("eth,ehm->etm", h, w2)
+    op = get_op("expert_ffn", cfg=info.kernel, act=info.act)
+    return op(xb, w1, w3 if info.glu else None, w2)
 
 
 def _aux_mean(aux, info):
@@ -86,7 +82,7 @@ def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)       # (S*Ns, M)
     cap_g = info.cap * Ns
     eidx, slot, w, aux = topk_gate(g, wg, info.gate, cap_g)
-    d = dispatch(g, eidx, slot, cap_g, E)                      # (E, T*Ns, M)
+    d = dispatch(g, eidx, slot, cap_g, E, info.kernel)         # (E, T*Ns, M)
     # EP-AlltoAll dispatch (cost A2A(E*T*M*N_ESP)).
     sb = d.reshape(Ne, E // Ne, cap_g, -1)
     rb = coll.ep_all_to_all(sb, info.ep_axes)                  # (Ne, El, T*Ns, M)
@@ -96,7 +92,8 @@ def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     h = lax.psum(h, info.esp_axes)
     # EP-AlltoAll combine (cost A2A(E*T*M*N_ESP)).
     back = coll.ep_all_to_all(coll.from_expert_batch(h, Ne), info.ep_axes)
-    out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g)
+    out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g,
+                  info.kernel)
     # ESP-Split: free forward, AllGather in backward (paper Fig. 3 note).
     y = coll.mp_split(out, info.esp_axes, Ns, axis=0)          # (S, M)
     return y, _aux_mean(aux, info)
@@ -115,7 +112,7 @@ def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
     # MP-split pool; otherwise the per-shard capacity is T / N_MP.
     c1 = info.cap if seqpar else info.cap // Nm
     eidx, slot, w, aux = topk_gate(xs, wg, info.gate, c1)
-    d = dispatch(xs, eidx, slot, c1, E)                        # (E, T/Nm, M)
+    d = dispatch(xs, eidx, slot, c1, E, info.kernel)           # (E, T/Nm, M)
     # EP&ESP-AlltoAll dispatch (Dump + fused AlltoAll; cost A2A(ETM*Ns/Nm)).
     # Expert-major (El, G, c, M) buffers: the expert-batch view is a free
     # reshape instead of a full-buffer relayout (§Perf A2).
@@ -129,7 +126,7 @@ def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
         coll.from_expert_batch_em(h, info.combined_group),
         info.ep_axes, info.esp_axes, split_axis=1, concat_axis=1)
     mine = coll.undump_reduce_em(back, Ne, Ns)                 # (E, c1, M)
-    y = combine(mine, eidx, slot, w, c1)                       # (S/Nm, M)
+    y = combine(mine, eidx, slot, w, c1, info.kernel)          # (S/Nm, M)
     if not seqpar:
         # MP-AllGather to restore the replicated contract (cost AG(BLM)).
         y = coll.mp_all_gather(y, info.mp_axes, Nm, axis=0)
@@ -144,7 +141,7 @@ def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
     E = info.gate.n_experts
     eidx, slot, w, aux = topk_gate(x, wg, info.gate, info.cap)
-    d = dispatch(x, eidx, slot, info.cap, E)                   # (E, T, M)
+    d = dispatch(x, eidx, slot, info.cap, E, info.kernel)      # (E, T, M)
     ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)            # (E, T/Nm, M)
     sb = coll.dump_em(ds, Ne, Ns)                              # (El, G, c, M)
     rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
@@ -156,7 +153,7 @@ def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     full = coll.saa_combine_allgather(
         y4, info.ep_axes, info.esp_axes, info.mp_axes,
         n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks)  # (E, T, M)
-    y = combine(full, eidx, slot, w, info.cap)                 # (S, M)
+    y = combine(full, eidx, slot, w, info.cap, info.kernel)    # (S, M)
     return y, _aux_mean(aux, info)
 
 

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Hot-path compute kernels behind the unified backend registry.
+
+Per-op Pallas TPU kernels (expert_ffn, moe_dispatch, rmsnorm,
+flash_attention) with pure-jnp oracles in ``ref.py``; ``registry.get_op``
+is the single entry point the schedules and model layers call.
+"""
+
+from repro.kernels.registry import (DEFAULT, BACKENDS, KernelConfig,
+                                    available_backends, get_op, list_ops,
+                                    register, resolve_backend)
+
+__all__ = ["DEFAULT", "BACKENDS", "KernelConfig", "available_backends",
+           "get_op", "list_ops", "register", "resolve_backend"]

@@ -22,7 +22,13 @@ from jax.experimental import pallas as pl
 ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
 
 
-def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, *, act, glu, n_f):
+def _ffn_kernel(x_ref, w1_ref, *refs, act, glu):
+    # the w3 operand only exists in the GLU variant (no dead operand is
+    # staged into VMEM for the 2-layer FFN)
+    if glu:
+        w3_ref, w2_ref, o_ref = refs
+    else:
+        w2_ref, o_ref = refs
     jf = pl.program_id(2)
 
     @pl.when(jf == 0)
@@ -59,19 +65,21 @@ def expert_ffn(x, w1, w3, w2, *, act="silu", block_t=128, block_f=256,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    kernel = functools.partial(_ffn_kernel, act=act, glu=glu, n_f=n_f)
-    w3_in = w3 if glu else w1   # placeholder operand when not GLU (unused)
+    kernel = functools.partial(_ffn_kernel, act=act, glu=glu)
+    w_in_spec = pl.BlockSpec((1, M, block_f), lambda e, it, jf: (e, 0, jf))
+    in_specs = [
+        pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
+        w_in_spec,
+        *([w_in_spec] if glu else []),
+        pl.BlockSpec((1, block_f, M), lambda e, it, jf: (e, jf, 0)),
+    ]
+    operands = (x, w1, w3, w2) if glu else (x, w1, w2)
 
     return pl.pallas_call(
         kernel,
         grid=(E, n_t, n_f),
-        in_specs=[
-            pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
-            pl.BlockSpec((1, M, block_f), lambda e, it, jf: (e, 0, jf)),
-            pl.BlockSpec((1, M, block_f), lambda e, it, jf: (e, 0, jf)),
-            pl.BlockSpec((1, block_f, M), lambda e, it, jf: (e, jf, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
         out_shape=jax.ShapeDtypeStruct((E, T, M), x.dtype),
         interpret=interpret,
-    )(x, w1, w3_in, w2)
+    )(*operands)

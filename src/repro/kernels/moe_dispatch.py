@@ -33,7 +33,13 @@ def _dispatch_kernel(x_ref, idx_ref, o_ref, *, n_slots, block_s, k):
 
             @pl.when(slot < n_slots)
             def _write(slot=slot, row=row):
-                o_ref[pl.dslice(slot, 1), :] = row[None].astype(o_ref.dtype)
+                # accumulate (not overwrite): matches the oracle's scatter-add
+                # exactly, including adversarial duplicate-slot inputs — the
+                # gate never produces collisions, but the op contract does not
+                # depend on that.
+                o_ref[pl.dslice(slot, 1), :] = (
+                    o_ref[pl.dslice(slot, 1), :]
+                    + row[None].astype(o_ref.dtype))
         return _
 
     lax.fori_loop(0, block_s, token, 0)

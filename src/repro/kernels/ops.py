@@ -1,62 +1,41 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Back-compat public wrappers over the kernel-backend registry.
 
-On non-TPU backends every wrapper runs the kernel body in interpret mode
-(Python emulation, used by the test suite); on TPU the compiled kernels
-run with the documented BlockSpec tiling.  ``use_ref=True`` routes to the
-pure-jnp oracles instead (the dry-run path).
+Historical API: ``use_ref=True`` routes to the pure-jnp oracles, otherwise
+the Pallas kernels run (interpret mode off-TPU).  New code should call
+``repro.kernels.registry.get_op`` directly — that is the single seam the
+schedules and model layers use, and it adds the ``"auto"`` backend plus
+per-op block-size configs.  The returned ops are jitted and cached by the
+registry, so these wrappers stay cheap to call.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref
-from repro.kernels.expert_ffn import expert_ffn as _expert_ffn
-from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.moe_dispatch import moe_combine as _combine
-from repro.kernels.moe_dispatch import moe_dispatch as _dispatch
-from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.registry import get_op
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "scale", "use_ref"))
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                     use_ref=False):
-    if use_ref:
-        H, K = q.shape[2], k.shape[2]
-        if H != K:
-            k = jnp.repeat(k, H // K, axis=2)
-            v = jnp.repeat(v, H // K, axis=2)
-        return ref.flash_attention_ref(q, k, v, causal=causal,
-                                       window=window, scale=scale)
-    return _flash(q, k, v, causal=causal, window=window, scale=scale)
+    op = get_op("flash_attention", backend="ref" if use_ref else "pallas",
+                causal=causal, window=window, scale=scale)
+    return op(q, k, v)
 
 
-@partial(jax.jit, static_argnames=("act", "use_ref"))
 def expert_ffn(x, w1, w3, w2, *, act="silu", use_ref=False):
-    if use_ref:
-        return ref.expert_ffn_ref(x, w1, w3, w2, act=act)
-    return _expert_ffn(x, w1, w3, w2, act=act)
+    op = get_op("expert_ffn", backend="ref" if use_ref else "pallas", act=act)
+    return op(x, w1, w3, w2)
 
 
-@partial(jax.jit, static_argnames=("n_slots", "use_ref"))
 def moe_dispatch(x, flat_idx, n_slots, *, use_ref=False):
-    if use_ref:
-        return ref.moe_dispatch_ref(x, flat_idx, n_slots)
-    return _dispatch(x, flat_idx, n_slots)
+    op = get_op("moe_dispatch", backend="ref" if use_ref else "pallas",
+                n_slots=n_slots)
+    return op(x, flat_idx)
 
 
-@partial(jax.jit, static_argnames=("use_ref",))
 def moe_combine(buf, flat_idx, weights, *, use_ref=False):
-    if use_ref:
-        return ref.moe_combine_ref(buf, flat_idx, weights)
-    return _combine(buf, flat_idx, weights)
+    op = get_op("moe_combine", backend="ref" if use_ref else "pallas")
+    return op(buf, flat_idx, weights)
 
 
-@partial(jax.jit, static_argnames=("eps", "use_ref"))
 def rmsnorm(x, scale, *, eps=1e-5, use_ref=False):
-    if use_ref:
-        return ref.rmsnorm_ref(x, scale, eps)
-    return _rmsnorm(x, scale, eps=eps)
+    op = get_op("rmsnorm", backend="ref" if use_ref else "pallas", eps=eps)
+    return op(x, scale)

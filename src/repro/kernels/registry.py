@@ -1,0 +1,263 @@
+"""Unified kernel-backend registry for every hot-path op.
+
+One seam between "what the schedules/models compute" and "how it is
+computed": each op (``expert_ffn``, ``moe_dispatch``, ``moe_combine``,
+``rmsnorm``, ``flash_attention``) is registered once per backend and
+fetched with ``get_op(name, backend=...)``.  Backends:
+
+  * ``"ref"``    — the pure-jnp oracles from ``repro.kernels.ref`` (the
+    implementations the schedule bodies used to inline).  Differentiable,
+    lowerable anywhere, and the ground truth the Pallas kernels are
+    asserted against.
+  * ``"pallas"`` — the Pallas TPU kernels.  On non-TPU backends they run
+    in interpret mode (Python emulation) unless ``KernelConfig.interpret``
+    pins it.  ``pallas_call`` has no autodiff rule, so every pallas op is
+    wrapped in a ``custom_vjp`` whose backward recomputes through the ref
+    oracle — grads flow through schedule bodies regardless of backend.
+  * ``"auto"``   — resolve at call time: ``pallas`` on TPU, ``ref``
+    otherwise (overridable with ``REPRO_KERNEL_BACKEND``).  This is the
+    default everywhere, so tests/CPU dry-runs stay on jnp while TPU runs
+    get the fused kernels with zero config.
+
+Per-op block sizes ride along in ``KernelConfig``; built ops are jitted
+and cached by ``(name, backend, config, static-kwargs)``.
+
+Adding a kernel = write the Pallas module, write/point at the jnp oracle
+in ``ref.py``, and register both:
+
+    @register("my_op", "ref")
+    def _(cfg, static):
+        return jax.jit(functools.partial(ref.my_op_ref, **static))
+
+    @register("my_op", "pallas")
+    def _(cfg, static):
+        fwd = functools.partial(my_op_kernel, block=cfg.block_t, **static)
+        return jax.jit(_with_ref_vjp(fwd, functools.partial(
+            ref.my_op_ref, **static)))
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import expert_ffn as _expert_ffn_mod
+from repro.kernels import flash_attention as _flash_mod
+from repro.kernels import moe_dispatch as _dispatch_mod
+from repro.kernels import ref
+from repro.kernels import rmsnorm as _rmsnorm_mod
+
+BACKENDS = ("ref", "pallas")
+_ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Backend choice + per-op tile sizes, threaded from the model configs
+    down into shard_map bodies (hashable: lives inside frozen configs and
+    keys the built-op cache)."""
+
+    backend: str = "auto"          # "auto" | "pallas" | "ref"
+    interpret: Optional[bool] = None  # None = interpret iff not on TPU
+    # expert_ffn tiles (token dim, hidden dim; M stays unblocked)
+    block_t: int = 128
+    block_f: int = 256
+    # moe_dispatch / moe_combine token-stream tile
+    block_s: int = 256
+    # rmsnorm row tile
+    block_r: int = 256
+    # flash_attention query/key tiles
+    block_q: int = 128
+    block_k: int = 128
+
+
+DEFAULT = KernelConfig()
+
+# (op name, backend) -> builder(cfg: KernelConfig, static: dict) -> callable
+_REGISTRY: dict = {}
+
+
+def register(name: str, backend: str):
+    """Decorator registering a builder for ``(name, backend)``."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}, want one of {BACKENDS}")
+
+    def deco(build: Callable):
+        _REGISTRY[(name, backend)] = build
+        return build
+
+    return deco
+
+
+def list_ops() -> tuple:
+    return tuple(sorted({n for n, _ in _REGISTRY}))
+
+
+def available_backends(name: str) -> tuple:
+    return tuple(b for b in BACKENDS if (name, b) in _REGISTRY)
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    cfg: Optional[KernelConfig] = None) -> str:
+    """Concrete backend for a request: explicit arg > config > env > auto.
+
+    ``auto`` picks ``pallas`` on TPU and ``ref`` everywhere else — the ref
+    oracles are the same math and XLA already fuses them well on CPU/GPU,
+    while interpret-mode Pallas is emulation-speed and only worth running
+    when explicitly asked for (tests, kernel debugging).
+    """
+    b = backend or (cfg or DEFAULT).backend or "auto"
+    if b == "auto":
+        b = os.environ.get(_ENV_BACKEND, "auto")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}, want one of {BACKENDS}")
+    return b
+
+
+def get_op(name: str, *, backend: Optional[str] = None,
+           cfg: Optional[KernelConfig] = None, **static) -> Callable:
+    """Fetch the jitted op ``name`` for the resolved backend.
+
+    ``static`` holds compile-time parameters (``act``, ``n_slots``,
+    ``causal``, ``eps``, ...) baked into the returned callable, which then
+    takes array arguments only.  Built ops are cached, so calling this in
+    a traced function body is free after the first hit.
+    """
+    cfg = cfg or DEFAULT
+    b = resolve_backend(backend, cfg)
+    if (name, b) not in _REGISTRY:
+        known = ", ".join(f"{n}:{bk}" for n, bk in sorted(_REGISTRY))
+        raise KeyError(f"no kernel op {name!r} for backend {b!r} ({known})")
+    return _build(name, b, cfg, tuple(sorted(static.items())))
+
+
+@functools.lru_cache(maxsize=None)
+def _build(name, backend, cfg, static_items):
+    return _REGISTRY[(name, backend)](cfg, dict(static_items))
+
+
+def _with_ref_vjp(fwd_fn: Callable, ref_fn: Callable) -> Callable:
+    """Differentiate a Pallas op by recompute through its jnp oracle.
+
+    Forward runs the kernel; backward re-traces ``ref_fn`` (numerically
+    identical by the parity tests) and applies its VJP.  Residuals are the
+    raw inputs, so nothing kernel-internal is saved.
+    """
+
+    @jax.custom_vjp
+    def op(*args):
+        return fwd_fn(*args)
+
+    def fwd(*args):
+        return fwd_fn(*args), args
+
+    def bwd(args, g):
+        return jax.vjp(ref_fn, *args)[1](g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+# --- expert_ffn --------------------------------------------------------------
+
+@register("expert_ffn", "ref")
+def _expert_ffn_ref(cfg, static):
+    act = static.get("act", "silu")
+    return jax.jit(functools.partial(ref.expert_ffn_ref, act=act))
+
+
+@register("expert_ffn", "pallas")
+def _expert_ffn_pallas(cfg, static):
+    act = static.get("act", "silu")
+    fwd = functools.partial(
+        _expert_ffn_mod.expert_ffn, act=act, block_t=cfg.block_t,
+        block_f=cfg.block_f, interpret=cfg.interpret)
+    return jax.jit(_with_ref_vjp(
+        fwd, functools.partial(ref.expert_ffn_ref, act=act)))
+
+
+# --- moe_dispatch / moe_combine ----------------------------------------------
+
+@register("moe_dispatch", "ref")
+def _moe_dispatch_ref(cfg, static):
+    n_slots = static["n_slots"]
+    return jax.jit(lambda x, flat_idx: ref.moe_dispatch_ref(
+        x, flat_idx, n_slots))
+
+
+@register("moe_dispatch", "pallas")
+def _moe_dispatch_pallas(cfg, static):
+    n_slots = static["n_slots"]
+    fwd = functools.partial(
+        _dispatch_mod.moe_dispatch, n_slots=n_slots, block_s=cfg.block_s,
+        interpret=cfg.interpret)
+    return jax.jit(_with_ref_vjp(
+        fwd, lambda x, flat_idx: ref.moe_dispatch_ref(x, flat_idx, n_slots)))
+
+
+@register("moe_combine", "ref")
+def _moe_combine_ref(cfg, static):
+    return jax.jit(ref.moe_combine_ref)
+
+
+@register("moe_combine", "pallas")
+def _moe_combine_pallas(cfg, static):
+    fwd = functools.partial(_dispatch_mod.moe_combine, block_s=cfg.block_s,
+                            interpret=cfg.interpret)
+    return jax.jit(_with_ref_vjp(fwd, ref.moe_combine_ref))
+
+
+# --- rmsnorm -----------------------------------------------------------------
+
+@register("rmsnorm", "ref")
+def _rmsnorm_ref(cfg, static):
+    eps = static.get("eps", 1e-5)
+    return jax.jit(functools.partial(ref.rmsnorm_ref, eps=eps))
+
+
+@register("rmsnorm", "pallas")
+def _rmsnorm_pallas(cfg, static):
+    eps = static.get("eps", 1e-5)
+    fwd = functools.partial(_rmsnorm_mod.rmsnorm, eps=eps,
+                            block_r=cfg.block_r, interpret=cfg.interpret)
+    return jax.jit(_with_ref_vjp(
+        fwd, functools.partial(ref.rmsnorm_ref, eps=eps)))
+
+
+# --- flash_attention ---------------------------------------------------------
+
+def _flash_ref_fn(static):
+    causal = static.get("causal", True)
+    window = static.get("window")
+    scale = static.get("scale")
+
+    def f(q, k, v):
+        H, K = q.shape[2], k.shape[2]
+        if H != K:  # the oracle wants KV pre-repeated; the kernel is GQA-aware
+            k = jnp.repeat(k, H // K, axis=2)
+            v = jnp.repeat(v, H // K, axis=2)
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+
+    return f
+
+
+@register("flash_attention", "ref")
+def _flash_ref(cfg, static):
+    return jax.jit(_flash_ref_fn(static))
+
+
+@register("flash_attention", "pallas")
+def _flash_pallas(cfg, static):
+    fwd = functools.partial(
+        _flash_mod.flash_attention, causal=static.get("causal", True),
+        window=static.get("window"), scale=static.get("scale"),
+        block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
+    return jax.jit(_with_ref_vjp(fwd, _flash_ref_fn(static)))

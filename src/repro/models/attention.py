@@ -202,8 +202,16 @@ def _flash_bwd_scan(res, dout, cfg: AttnConfig, q_pos, k_pos, blk):
 
 
 def apply_attn(p, cfg: AttnConfig, x, *, positions=None, kv_x=None,
-               kv_positions=None, use_pallas=False):
-    """Training/prefill forward. kv_x != None = cross attention."""
+               kv_positions=None, use_pallas=False, kernel=None):
+    """Training/prefill forward. kv_x != None = cross attention.
+
+    Kernel-backend selection: ``use_pallas=True`` (legacy flag) or a
+    ``kernel`` config resolving to ``"pallas"`` routes self-attention
+    through the registry's ``flash_attention`` op; otherwise the jnp paths
+    below (full sdpa / online-softmax scan) run — they ARE the reference
+    implementation, with masking modes the kernel doesn't cover (chunked
+    local attention, arbitrary position vectors).
+    """
     B, L, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     src = kv_x if kv_x is not None else x
@@ -215,6 +223,10 @@ def apply_attn(p, cfg: AttnConfig, x, *, positions=None, kv_x=None,
         q = q + p["bq"].reshape(H, hd)
         k = k + p["bk"].reshape(K, hd)
         v = v + p["bv"].reshape(K, hd)
+    # the Pallas kernel derives positions from block indices, so it is only
+    # valid for the default contiguous-from-zero layout (record before the
+    # arange defaults are filled in)
+    contiguous_pos = positions is None and kv_positions is None
     if positions is None:
         positions = jnp.arange(L)
     if kv_positions is None:
@@ -222,20 +234,27 @@ def apply_attn(p, cfg: AttnConfig, x, *, positions=None, kv_x=None,
     if cfg.use_rope and kv_x is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, kv_positions, cfg.rope_theta)
-    k = _repeat_kv(k, H // K)
-    v = _repeat_kv(v, H // K)
-
-    if use_pallas:
-        from repro.kernels import ops as kops
-        out = kops.flash_attention(q, k, v, causal=cfg.causal,
-                                   window=cfg.window, scale=cfg.scale)
-    elif max(L, Lk) > cfg.flash_threshold:
-        out = sdpa_flash_scan(q, k, v, cfg, positions, kv_positions)
+    from repro.kernels.registry import get_op, resolve_backend
+    want_pallas = use_pallas or (
+        kernel is not None and resolve_backend(cfg=kernel) == "pallas")
+    # the kernel handles causal/window masks over contiguous positions only
+    kernel_ok = cfg.chunk is None and kv_x is None and contiguous_pos
+    if want_pallas and kernel_ok:
+        # KV stays in its native GQA layout — the kernel's index map folds
+        # the query-head -> kv-head mapping, no repeat ever hits HBM
+        op = get_op("flash_attention", cfg=kernel, causal=cfg.causal,
+                    window=cfg.window, scale=cfg.scale)
+        out = op(q, k, v)
     else:
-        bias = _mask_bias(cfg, positions, kv_positions) if (
-            cfg.causal or cfg.window or cfg.chunk) else jnp.zeros(
-                (L, Lk), jnp.float32)
-        out = sdpa_full(q, k, v, bias, cfg.scale)
+        k = _repeat_kv(k, H // K)
+        v = _repeat_kv(v, H // K)
+        if max(L, Lk) > cfg.flash_threshold:
+            out = sdpa_flash_scan(q, k, v, cfg, positions, kv_positions)
+        else:
+            bias = _mask_bias(cfg, positions, kv_positions) if (
+                cfg.causal or cfg.window or cfg.chunk) else jnp.zeros(
+                    (L, Lk), jnp.float32)
+            out = sdpa_full(q, k, v, bias, cfg.scale)
     return out.reshape(B, L, H * hd) @ p["wo"]
 
 

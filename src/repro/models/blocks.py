@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.kernels.registry import KernelConfig
 from repro.core.moe import (MoEConfig, apply_moe, init_moe_params,
                             moe_param_specs)
 from repro.models import attention as attn_mod
@@ -48,6 +49,15 @@ def _has_ffn(kind: str) -> bool:
 
 def _moe_kind(kind: str) -> bool:
     return kind.startswith("moe")
+
+
+def _moe_cfg(cfg: ModelConfig, kcfg: KernelConfig) -> MoEConfig:
+    """MoE config with the model-level kernel pin inherited: the MoE
+    config's own (non-default) kernel wins, otherwise the block-level
+    choice — incl. the legacy ``use_pallas`` flag — flows through."""
+    if cfg.moe.kernel == KernelConfig() and kcfg != cfg.moe.kernel:
+        return replace(cfg.moe, kernel=kcfg)
+    return cfg.moe
 
 
 # --- init / specs -------------------------------------------------------------
@@ -148,21 +158,25 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, *, mesh, dims,
     acfg = attn_config(cfg, kind)
     aux = jnp.float32(0.0)
     eps = cfg.norm_eps
+    kcfg = cfg.kernel_cfg
+
+    def norm(pn, h):
+        return apply_norm(pn, h, eps, kcfg)
 
     if base in ("dense", "moe", "encoder"):
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a = attn_mod.apply_attn(p["attn"], acfg, h, positions=positions,
-                                use_pallas=cfg.use_pallas)
+                                kernel=kcfg)
         if cfg.parallel_block:
             f = apply_ffn(p["ffn"], h, cfg.ffn_act)
             # sum the two partial (row-parallel) outputs BEFORE they meet
             # the replicated residual: one AllReduce instead of two (§Perf B1)
             return x + (a + f), aux
         x = x + a
-        h2 = apply_norm(p["norm2"], x, eps)
+        h2 = norm(p["norm2"], x)
         if _moe_kind(kind):
             y, moe_aux = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
-                                   cfg=cfg.moe, schedule=schedule)
+                                   cfg=_moe_cfg(cfg, kcfg), schedule=schedule)
             aux = aux + moe_aux["aux_loss"] + moe_aux["z_loss"]
         else:
             y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
@@ -170,43 +184,44 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, *, mesh, dims,
 
     if base == "cross":
         # llama3.2-vision style gated cross-attention layer
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a = attn_mod.apply_attn(p["xattn"], attn_config(cfg, kind, True),
                                 h, kv_x=ctx)
         x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
-        h2 = apply_norm(p["norm_x"], x, eps)
+        h2 = norm(p["norm_x"], x)
         f = apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x + jnp.tanh(p["gate_ffn"]).astype(x.dtype) * f, aux
 
     if base == "xdec":
         # whisper decoder: self-attn + cross-attn + FFN
-        h = apply_norm(p["norm1"], x, eps)
-        x = x + attn_mod.apply_attn(p["attn"], acfg, h, positions=positions)
-        h = apply_norm(p["norm_x"], x, eps)
+        h = norm(p["norm1"], x)
+        x = x + attn_mod.apply_attn(p["attn"], acfg, h, positions=positions,
+                                    kernel=kcfg)
+        h = norm(p["norm_x"], x)
         x = x + attn_mod.apply_attn(p["xattn"],
                                     attn_config(cfg, kind, True), h, kv_x=ctx)
-        h = apply_norm(p["norm2"], x, eps)
+        h = norm(p["norm2"], x)
         return x + apply_ffn(p["ffn"], h, cfg.ffn_act), aux
 
     if base == "hymba":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a = attn_mod.apply_attn(p["attn"], acfg, h, positions=positions,
-                                use_pallas=cfg.use_pallas)
+                                kernel=kcfg)
         s = ssm_mod.apply_mamba(p["mamba"], _mamba_cfg(cfg), h)
-        x = x + 0.5 * (apply_norm(p["norm_a"], a, eps)
-                       + apply_norm(p["norm_s"], s, eps))
-        h2 = apply_norm(p["norm2"], x, eps)
+        x = x + 0.5 * (norm(p["norm_a"], a)
+                       + norm(p["norm_s"], s))
+        h2 = norm(p["norm2"], x)
         return x + apply_ffn(p["ffn"], h2, cfg.ffn_act), aux
 
     if base == "mlstm":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         return x + ssm_mod.apply_mlstm(p["mlstm"], _mlstm_cfg(cfg), h), aux
 
     if base == "slstm":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         x = x + ssm_mod.apply_slstm(p["slstm"], _slstm_cfg(cfg), h)
         if "ffn" in p:
-            h2 = apply_norm(p["norm2"], x, eps)
+            h2 = norm(p["norm2"], x)
             x = x + apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x, aux
 
@@ -239,7 +254,11 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,
     base = base_kind(kind)
     acfg = attn_config(cfg, kind)
     eps = cfg.norm_eps
+    kcfg = cfg.kernel_cfg
     new_cache = dict(cache)
+
+    def norm(pn, h):
+        return apply_norm(pn, h, eps, kcfg)
 
     def self_attn(h):
         # context-parallel decode: with an idle batch dim (B=1) the cache
@@ -252,65 +271,65 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,
         return a
 
     if base in ("dense", "moe", "encoder"):
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a = self_attn(h)
         if cfg.parallel_block:
             f = apply_ffn(p["ffn"], h, cfg.ffn_act)
             return x + (a + f), new_cache
         x = x + a
-        h2 = apply_norm(p["norm2"], x, eps)
+        h2 = norm(p["norm2"], x)
         if _moe_kind(kind):
             y, _ = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
-                             cfg=cfg.moe, schedule=schedule)
+                             cfg=_moe_cfg(cfg, kcfg), schedule=schedule)
         else:
             y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x + y, new_cache
 
     if base == "cross":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a, _ = attn_mod.decode_attn(p["xattn"], attn_config(cfg, kind, True),
                                     h, None, step, kv_cache_static=ctx_kv)
         x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
-        h2 = apply_norm(p["norm_x"], x, eps)
+        h2 = norm(p["norm_x"], x)
         f = apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x + jnp.tanh(p["gate_ffn"]).astype(x.dtype) * f, new_cache
 
     if base == "xdec":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         x = x + self_attn(h)
-        h = apply_norm(p["norm_x"], x, eps)
+        h = norm(p["norm_x"], x)
         a, _ = attn_mod.decode_attn(p["xattn"], attn_config(cfg, kind, True),
                                     h, None, step, kv_cache_static=ctx_kv)
         x = x + a
-        h = apply_norm(p["norm2"], x, eps)
+        h = norm(p["norm2"], x)
         return x + apply_ffn(p["ffn"], h, cfg.ffn_act), new_cache
 
     if base == "hymba":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         a = self_attn(h)
         s, st = ssm_mod.apply_mamba(p["mamba"], _mamba_cfg(cfg), h,
                                     state=cache["mamba"])
         new_cache["mamba"] = st
-        x = x + 0.5 * (apply_norm(p["norm_a"], a, eps)
-                       + apply_norm(p["norm_s"], s, eps))
-        h2 = apply_norm(p["norm2"], x, eps)
+        x = x + 0.5 * (norm(p["norm_a"], a)
+                       + norm(p["norm_s"], s))
+        h2 = norm(p["norm2"], x)
         return x + apply_ffn(p["ffn"], h2, cfg.ffn_act), new_cache
 
     if base == "mlstm":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         y, st = ssm_mod.apply_mlstm(p["mlstm"], _mlstm_cfg(cfg), h,
                                     state=cache["mlstm"])
         new_cache["mlstm"] = st
         return x + y, new_cache
 
     if base == "slstm":
-        h = apply_norm(p["norm1"], x, eps)
+        h = norm(p["norm1"], x)
         y, st = ssm_mod.apply_slstm(p["slstm"], _slstm_cfg(cfg), h,
                                     state=cache["slstm"])
         new_cache["slstm"] = st
         x = x + y
         if "ffn" in p:
-            h2 = apply_norm(p["norm2"], x, eps)
+            h2 = norm(p["norm2"], x)
             x = x + apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x, new_cache
 

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.registry import get_op
+
 
 def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
     fan_in = fan_in or shape[0]
@@ -36,16 +38,18 @@ def norm_specs(norm_type="rmsnorm"):
     return p
 
 
-def apply_norm(p, x, eps=1e-5):
-    xf = x.astype(jnp.float32)
+def apply_norm(p, x, eps=1e-5, kernel=None):
+    """LayerNorm (bias present) stays inline jnp; RMSNorm routes through the
+    kernel registry (``rmsnorm`` op) so the backend follows ``kernel`` —
+    the ref oracle is numerically identical to the historical inline code."""
     if "bias" in p:
+        xf = x.astype(jnp.float32)
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
         out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
-    else:
-        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
-    return out.astype(x.dtype)
+        return out.astype(x.dtype)
+    op = get_op("rmsnorm", cfg=kernel, eps=eps)
+    return op(x.reshape(-1, x.shape[-1]), p["scale"]).reshape(x.shape)
 
 
 # --- rotary embeddings --------------------------------------------------------

@@ -98,7 +98,8 @@ class Model:
                 return h, None
 
             x, _ = lax.scan(enc_step, x, params["encoder"])
-            return apply_norm(params["enc_norm"], x, cfg.norm_eps)
+            return apply_norm(params["enc_norm"], x, cfg.norm_eps,
+                              cfg.kernel_cfg)
         return ctx
 
     def forward(self, params, batch, *, mesh, dims: ParallelDims,
@@ -119,7 +120,10 @@ class Model:
         if not cfg.use_rope and cfg.arch_type not in ("ssm",):
             x = x + sinusoidal_positions(L, cfg.d_model).astype(x.dtype)
         ctx = self._encode_ctx(params, batch)
-        positions = jnp.arange(L)
+        # None = the default contiguous-from-zero layout; apply_attn fills in
+        # the arange itself and stays eligible for the Pallas kernel path
+        # (which derives positions from block indices).
+        positions = None
         aux_total = jnp.float32(0.0)
 
         seq_spec = None
@@ -147,7 +151,8 @@ class Model:
             x, auxs = lax.scan(step, x, params[f"run{r}"])
             aux_total = aux_total + jnp.sum(auxs)
 
-        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps,
+                       cfg.kernel_cfg)
         return x, {"aux_loss": aux_total}
 
     def _head(self, params, x):
@@ -280,7 +285,8 @@ class Model:
                     step_fn2, x, (params[f"run{r}"], cache[f"run{r}"]))
             else:
                 x, new_cache[f"run{r}"] = lax.scan(step_fn, x, scanned)
-        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps,
+                       cfg.kernel_cfg)
         return self._head(params, x), new_cache
 
 

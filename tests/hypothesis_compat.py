@@ -1,0 +1,40 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+``from hypothesis_compat import given, settings, st`` behaves exactly like
+the real imports when hypothesis is installed; when it is not, property
+tests become zero-arg stubs that ``pytest.skip`` at call time (the rest of
+the module's plain unit tests still collect and run).  Install the real
+thing with ``pip install -r requirements-dev.txt`` (or the ``dev`` extra).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: any strategy constructor
+        returns None (the values are never drawn — the test is skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            # a fresh zero-fixture stub: pytest must not try to resolve the
+            # property-test parameters (S, E, ...) as fixtures
+            def stub(*a, **k):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+        return deco

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.perfmodel import (AlphaBeta, MoELayerShape, PerfModel,
                                   fit_alpha_beta, speedup_table,
