@@ -1,0 +1,112 @@
+"""Sweep the chunk-pipelined schedule bodies: (schedule x n_chunks) wall
+time for one MoE layer, plus the analytic autoscheduler's pick.
+
+    PYTHONPATH=src python benchmarks/bench_pipeline.py
+    PYTHONPATH=src python benchmarks/bench_pipeline.py \
+        --mesh distinct --chunks 1 2 4 8 --tokens 2048 --d-model 256
+
+Runs anywhere (fake CPU devices by default; honours a pre-set XLA_FLAGS
+device count).  On CPU the collectives are memcpys, so the absolute
+numbers only validate that the pipelined bodies lower, run, and parity-
+match — the overlap win needs real ICI/NVLink.  The same sweep on a TPU
+slice is the measured counterpart of ``PerfModel.t_pipelined``; compare
+the two tables to calibrate ``flops_per_s`` and the alpha-beta fits.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                              # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from benchmarks.common import time_fn                   # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="merged",
+                    choices=["merged", "distinct"],
+                    help="merged: (ep=4, model=2) with MP==ESP; distinct: "
+                         "(ep=2, esp=2, mp=2)")
+    ap.add_argument("--schedules", nargs="+",
+                    default=["baseline", "s1", "s2"])
+    ap.add_argument("--chunks", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--tokens", type=int, default=1024)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--d-ff", type=int, default=256)
+    ap.add_argument("--n-experts", type=int, default=8)
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+
+    from dataclasses import replace
+
+    from repro.core import autosched
+    from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+    from repro.core.perfmodel import MoELayerShape, tpu_v5e_model
+    from repro.parallel.mesh import ParallelDims, make_mesh
+
+    if args.mesh == "merged":
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    else:
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+    sizes = dims.sizes(mesh)
+
+    cfg0 = MoEConfig(d_model=args.d_model, d_ff=args.d_ff,
+                     n_experts=args.n_experts, top_k=args.top_k,
+                     capacity_factor=2.0, schedule="baseline")
+    params = init_moe_params(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, args.tokens, args.d_model))
+
+    print(f"# mesh={args.mesh} sizes={sizes} tokens={args.tokens} "
+          f"M={args.d_model} H={args.d_ff} E={args.n_experts} "
+          f"k={args.top_k}")
+    print(f"{'schedule':10s} {'n_chunks':>8s} {'ms/call':>9s} "
+          f"{'vs nc=1':>8s} {'max|dy|':>10s}")
+    ref = {}
+    for sched in args.schedules:
+        base_ms = None
+        for nc in args.chunks:
+            cfg = replace(cfg0, pipeline_chunks=nc)
+            fn = jax.jit(lambda x, p, c=cfg, s=sched: apply_moe(
+                x, p, mesh=mesh, dims=dims, cfg=c, schedule=s)[0])
+            y = np.asarray(fn(x, params))
+            err = (0.0 if sched not in ref
+                   else float(np.max(np.abs(y - ref[sched]))))
+            ref.setdefault(sched, y)
+            dt = time_fn(lambda: fn(x, params).block_until_ready(),
+                         iters=args.iters)
+            ms = dt * 1e3
+            base_ms = base_ms or ms
+            print(f"{sched:10s} {nc:8d} {ms:9.2f} {base_ms / ms:8.2f}x "
+                  f"{err:10.2e}")
+
+    shape = MoELayerShape(
+        B=1, L=args.tokens, M=args.d_model, H=args.d_ff,
+        E=args.n_experts, k=args.top_k, f=2.0,
+        n_mp=sizes["mp"], n_esp=sizes["esp"], n_ep=sizes["ep"])
+    pm = tpu_v5e_model(sizes["ep"], sizes["esp"], sizes["mp"])
+    d = autosched.decide(shape, perf_model=pm,
+                         chunk_candidates=tuple(args.chunks))
+    print(f"# analytic autosched pick (tpu_v5e model): "
+          f"{d.schedule} x {d.n_chunks} chunks")
+    for (s, n), t in d.times[:4]:
+        print(f"#   predicted {s:3s} x{n}: {t * 1e3:.3f} ms")
+    for s in args.schedules:
+        print(f"#   best chunk count for {s}: "
+              f"{pm.pick_chunks(shape, s, tuple(args.chunks))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import time
+from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
@@ -28,17 +29,21 @@ from repro.parallel.mesh import ParallelDims, make_mesh
 def main():
     mesh = make_mesh((4, 2), ("data", "model"))
     dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
-    cfg = MoEConfig(d_model=256, d_ff=512, n_experts=8, top_k=2,
-                    capacity_factor=2.0)
-    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    cfg0 = MoEConfig(d_model=256, d_ff=512, n_experts=8, top_k=2,
+                     capacity_factor=2.0)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg0)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 512, 256))
 
     ref = None
     print(f"{'schedule':12s} {'coll bytes':>12s} {'collectives':>42s} "
           f"{'ms/call':>8s} {'max|y-y_base|':>14s}")
-    for sched in ["baseline", "s1", "s2", "s1_seqpar", "auto"]:
-        fn = jax.jit(lambda x, p, s=sched: apply_moe(
-            x, p, mesh=mesh, dims=dims, cfg=cfg, schedule=s)[0])
+    for label, sched, chunks in [
+            ("baseline", "baseline", 1), ("s1", "s1", 1), ("s2", "s2", 1),
+            ("s1_seqpar", "s1_seqpar", 1), ("s1 x4", "s1", 4),
+            ("s2 x4", "s2", 4), ("auto", "auto", 1)]:
+        cfg = replace(cfg0, pipeline_chunks=chunks)
+        fn = jax.jit(lambda x, p, c=cfg, s=sched: apply_moe(
+            x, p, mesh=mesh, dims=dims, cfg=c, schedule=s)[0])
         compiled = fn.lower(x, params).compile()
         stats = parse_collectives(compiled.as_text())
         y = fn(x, params)
@@ -52,7 +57,7 @@ def main():
             err = 0.0
         else:
             err = float(np.max(np.abs(np.asarray(y) - ref)))
-        print(f"{sched:12s} {stats.total_bytes:12d} "
+        print(f"{label:12s} {stats.total_bytes:12d} "
               f"{str(stats.counts):>42s} {dt * 1e3:8.1f} {err:14.2e}")
 
 

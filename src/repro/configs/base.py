@@ -2,6 +2,10 @@
 
 Every assigned architecture is a ``ModelConfig`` instance in its own
 module (src/repro/configs/<id>.py), registered in configs.registry.
+The Parm-specific knobs live on the nested ``MoEConfig`` (``schedule``,
+``saa_chunks``, ``pipeline_chunks``, ``autosched``, ``kernel``) and
+thread from here through ``apply_moe`` into the shard_map schedule
+bodies — see docs/architecture.md for the full path.
 ``input_specs`` builds the ShapeDtypeStruct stand-ins for the dry-run
 (no device allocation), per input shape:
 

@@ -1,6 +1,13 @@
 # The paper's primary contribution: Parm's dedicated MP+EP+ESP schedules
-# (baseline / S1 / S2), the fused EP&ESP-AlltoAll + SAA collectives, and
-# the alpha-beta Algorithm-1 auto-selector.
+# (baseline / S1 / S2, plus the chunk-pipelined *_pipe variants), the
+# fused EP&ESP-AlltoAll + SAA collectives, and the alpha-beta
+# Algorithm-1 auto-selector with its caching autosched runtime.
+from repro.core.autosched import ScheduleDecision, decide  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    PIPELINE_BODY,
+    PIPELINE_OF,
+    clamp_chunks,
+)
 from repro.core.moe import (  # noqa: F401
     MoEConfig,
     apply_moe,

@@ -1,0 +1,215 @@
+"""The ``schedule="auto"`` runtime: per-layer schedule + chunk decisions.
+
+Parm's Algorithm 1 picks S1 or S2 from the alpha-beta model; the
+pipelined bodies (``repro.core.pipeline``) add a second axis — how many
+micro-chunks to split the AlltoAll/FFN chain into.  This module owns
+that decision:
+
+  * **analytic** mode scores every (schedule, n_chunks) candidate with
+    :meth:`repro.core.perfmodel.PerfModel.t_pipelined` (Algorithm 1's
+    S1/S2 comparison generalized with the compute-overlap term) — no
+    devices touched, fully deterministic under a fixed perf model.
+  * **measured** mode runs a one-shot calibration on the live mesh: each
+    candidate is jitted and timed on synthetic data of the layer's shape
+    (:func:`measure_candidates`), and the observed winner is recorded.
+
+Either way the result is a :class:`ScheduleDecision` cached per
+``(MoELayerShape, mode, candidates, perf model)`` — so a training run
+decides once per distinct MoE layer shape, every later ``apply_moe``
+trace hits the cache, and repeated runs under the same perf model make
+identical picks (asserted by ``tests/test_autosched.py``).
+
+``apply_moe`` consults :func:`decide` whenever ``MoEConfig.schedule`` is
+``"auto"``; ``launch/train.py --autosched measured`` switches modes from
+the command line.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
+from repro.core.pipeline import PIPELINE_OF
+
+#: (schedule, n_chunks) grids considered by default.  ``baseline`` is
+#: included in measured mode (it can win on tiny single-axis meshes) but
+#: never analytically — Algorithm 1 proves S1/S2 dominate it (§IV-B).
+ANALYTIC_SCHEDULES = ("s1", "s2")
+MEASURED_SCHEDULES = ("baseline", "s1", "s2")
+DEFAULT_CHUNKS = (1, 2, 4, 8)
+
+
+@dataclass(frozen=True)
+class ScheduleDecision:
+    """The cached outcome of one auto-scheduling decision.
+
+    ``schedule`` is the base schedule name (``baseline``/``s1``/``s2``),
+    ``n_chunks`` the micro-chunk count (1 = unchunked), ``source`` how it
+    was reached (``analytic`` / ``measured`` / ``forced``), and ``times``
+    the scored candidates as ``((schedule, n_chunks), seconds)`` pairs
+    sorted fastest-first.
+    """
+
+    schedule: str
+    n_chunks: int = 1
+    source: str = "analytic"
+    times: tuple = ()
+
+    @property
+    def body_name(self) -> str:
+        """The ``schedules.BODY`` key implementing this decision."""
+        if self.n_chunks > 1:
+            return PIPELINE_OF.get(self.schedule, self.schedule)
+        return self.schedule
+
+
+_CACHE: dict = {}
+
+
+def clear_cache() -> None:
+    """Drop every cached decision (tests, or after remeshing)."""
+    _CACHE.clear()
+
+
+def cache_info() -> dict:
+    """Snapshot of the decision cache: key -> ScheduleDecision."""
+    return dict(_CACHE)
+
+
+def cache_summary(exclude=()) -> str:
+    """One line per cached decision, for run logs.  ``exclude`` filters
+    out keys already present before a run (see ``Trainer``), so multi-
+    model processes only report their own decisions."""
+    lines = []
+    for key, d in sorted(_CACHE.items(), key=lambda kv: repr(kv[0][0])):
+        if key in exclude:
+            continue
+        (shape, mode, _, _) = key
+        lines.append(
+            f"autosched[{mode}] BxL={shape.B}x{shape.L} M={shape.M} "
+            f"E={shape.E} ep/esp/mp={shape.n_ep}/{shape.n_esp}/{shape.n_mp}"
+            f" -> {d.schedule} x{d.n_chunks} chunks ({d.source})")
+    return "\n".join(lines)
+
+
+def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
+           mode: str = "analytic", chunk_candidates=DEFAULT_CHUNKS,
+           measure: Optional[Callable] = None) -> ScheduleDecision:
+    """Pick (schedule, n_chunks) for one MoE layer shape, with caching.
+
+    ``measure`` (measured mode) maps a list of ``(schedule, n_chunks)``
+    candidates to ``{candidate: seconds}``; :func:`measure_candidates`
+    builds one from a live mesh.  The decision is cached on
+    ``(shape, mode, chunk_candidates, perf_model)`` — pass the same
+    arguments, get the identical (cached) decision back.
+    """
+    if mode not in ("analytic", "measured"):
+        raise ValueError(f"unknown autosched mode {mode!r}")
+    pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
+    key = (shape, mode, tuple(chunk_candidates), pm)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    if mode == "measured":
+        if measure is None:
+            raise ValueError("measured mode needs a `measure` callable "
+                             "(see autosched.measure_candidates)")
+        cands = [(s, n) for s in MEASURED_SCHEDULES
+                 for n in chunk_candidates]
+        times = dict(measure(cands))
+    else:
+        times = {(s, n): pm.t_pipelined(shape, s, n)
+                 for s in ANALYTIC_SCHEDULES for n in chunk_candidates}
+    ranked = tuple(sorted(times.items(), key=lambda kv: kv[1]))
+    (sched, n_chunks), _ = ranked[0]
+    decision = ScheduleDecision(schedule=sched, n_chunks=n_chunks,
+                                source=mode, times=ranked)
+    _CACHE[key] = decision
+    return decision
+
+
+def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,
+                       iters: int = 3, warmup: int = 1,
+                       seed: int = 0) -> Callable:
+    """Build a ``measure`` callable timing candidates on the live mesh.
+
+    Returns ``f(candidates) -> {(schedule, n_chunks): seconds}`` that
+    jits ``apply_moe`` once per candidate over synthetic data and records
+    median wall time.  ``tokens`` is the *global* pool (B*L of the real
+    layer): the nested ``apply_moe`` re-shards it over the same batch
+    axes, so each candidate runs at the true per-device token count.
+    Raises if every candidate fails; individual failures score ``inf``.
+    The imports are lazy to keep ``moe -> autosched`` one-directional at
+    module load.
+    """
+
+    def _measure(candidates):
+        import sys as _sys
+        import time as _time
+
+        import jax
+        import jax.numpy as jnp
+        from dataclasses import replace
+
+        from repro.core.moe import apply_moe, init_moe_params
+
+        key = jax.random.PRNGKey(seed)
+        params = init_moe_params(key, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                              (1, tokens, d_model), jnp.float32)
+        out, errors = {}, {}
+        for sched, n_chunks in candidates:
+            c = replace(cfg, schedule=sched, pipeline_chunks=n_chunks)
+            fn = jax.jit(lambda x, p, c=c, s=sched: apply_moe(
+                x, p, mesh=mesh, dims=dims, cfg=c, schedule=s)[0])
+            try:
+                for _ in range(max(warmup, 1)):
+                    fn(x, params).block_until_ready()
+                ts = []
+                for _ in range(max(iters, 1)):
+                    t0 = _time.perf_counter()
+                    fn(x, params).block_until_ready()
+                    ts.append(_time.perf_counter() - t0)
+                ts.sort()
+                out[(sched, n_chunks)] = ts[len(ts) // 2]
+            except Exception as e:  # noqa: BLE001 — unlowerable candidate
+                out[(sched, n_chunks)] = float("inf")
+                errors[(sched, n_chunks)] = repr(e)
+        if errors and all(t == float("inf") for t in out.values()):
+            raise RuntimeError(
+                "autosched measured calibration failed for every candidate: "
+                + "; ".join(f"{c}: {m}" for c, m in errors.items()))
+        for c, m in errors.items():
+            # partial failures score inf (never win) but must be visible,
+            # or "measured mode never picks X" is undebuggable from logs
+            print(f"autosched: candidate {c} failed calibration: {m}",
+                  file=_sys.stderr, flush=True)
+        return out
+
+    def run(candidates):
+        # decide() is usually reached while TRACING train_step; calling
+        # the candidate jits on that thread would stage them into the
+        # ambient trace (returning tracers) instead of executing.  JAX's
+        # trace state is thread-local, so a worker thread gives a clean
+        # eager context on every jax version — the calibration runs for
+        # real on the live devices while the outer trace is suspended.
+        import threading
+
+        box = {}
+
+        def work():
+            try:
+                box["out"] = _measure(candidates)
+            except BaseException as e:  # noqa: BLE001 — reraise on caller
+                box["err"] = e
+
+        t = threading.Thread(target=work, name="autosched-calibration")
+        t.start()
+        t.join()
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    return run

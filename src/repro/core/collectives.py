@@ -19,7 +19,17 @@ is re-expressed for TPU: instead of NCCL send/recv on multiple CUDA
 streams, we chunk the combine AlltoAll and issue each chunk's
 MP-AllGather as soon as that chunk lands.  The chunks are independent
 ops in HLO, so the TPU async-collective (latency-hiding) scheduler can
-overlap the AllGather of chunk i with the AlltoAll of chunk i+1.
+overlap the AllGather of chunk i with the AlltoAll of chunk i+1.  (The
+chunk-pipelined schedule bodies in ``repro.core.pipeline`` extend this
+same trick across each whole schedule.)
+
+The pure layout primitives (``dump``/``undump_reduce`` and their
+expert-major ``*_em`` twins) are plain array reshapes usable outside any
+mesh; their docstring examples run under
+``python -m doctest src/repro/core/collectives.py``.  The functions that
+issue ``lax`` collectives (``mp_split``, ``mp_all_gather``,
+``ep_all_to_all``, ``ep_esp_all_to_all``, ``saa_combine_allgather``)
+must be called from inside a shard_map body with the named axes bound.
 """
 
 from __future__ import annotations
@@ -29,14 +39,26 @@ from jax import lax
 
 
 def _axes(axes):
+    """Normalize an axis spec (name or iterable of names) to a tuple.
+
+    >>> _axes("model")
+    ('model',)
+    >>> _axes(("ep", "esp"))
+    ('ep', 'esp')
+    """
     return (axes,) if isinstance(axes, str) else tuple(axes)
 
 
 # --- PauseMP primitives ------------------------------------------------------
 
 def mp_split(x, mp_axes, n_mp: int, axis: int = 0):
-    """MP-Split: take this MP rank's 1/N_MP slice along ``axis`` (free fwd;
-    its transpose is an all-gather, as the paper notes for Split ops)."""
+    """MP-Split: take this MP rank's 1/N_MP slice along ``axis``.
+
+    The forward pass is free (a dynamic slice); its transpose is an
+    all-gather, as the paper notes for Split ops.  Must run inside a
+    shard_map body with ``mp_axes`` bound (it reads ``lax.axis_index``);
+    ``n_mp == 1`` is an identity and needs no mesh.
+    """
     if n_mp == 1:
         return x
     idx = lax.axis_index(_axes(mp_axes))
@@ -45,7 +67,8 @@ def mp_split(x, mp_axes, n_mp: int, axis: int = 0):
 
 
 def mp_all_gather(x, mp_axes, n_mp: int, axis: int = 0):
-    """MP-AllGather: restore the full dim along ``axis``."""
+    """MP-AllGather: restore the full dim along ``axis`` (the transpose of
+    :func:`mp_split`; a tiled ``lax.all_gather`` over ``mp_axes``)."""
     if n_mp == 1:
         return x
     return lax.all_gather(x, _axes(mp_axes), axis=axis, tiled=True)
@@ -59,6 +82,13 @@ def dump(d, n_ep: int, n_esp: int):
 
     d: (E, c, M) -> (G, El, c, M); destination g = (i', j') receives the
     tokens of experts owned by EP rank i' (identical for every shard j').
+    G is EP-major / ESP-minor, matching ``lax.axis_index((ep, esp))``:
+
+    >>> d = jnp.array([[[1.]], [[2.]]])            # (E=2, c=1, M=1)
+    >>> dump(d, n_ep=2, n_esp=2).shape             # G=4, El=1
+    (4, 1, 1, 1)
+    >>> dump(d, n_ep=2, n_esp=2)[:, 0, 0, 0].tolist()
+    [1.0, 1.0, 2.0, 2.0]
     """
     E, c, M = d.shape
     El = E // n_ep
@@ -71,7 +101,12 @@ def undump_reduce(r, n_ep: int, n_esp: int):
     """Local Combine (Fig. 4d): sum the N_ESP shards' partial outputs.
 
     r: (G, El, c, M) returned partials -> (E, c, M) full outputs in the
-    original dispatch-buffer layout.
+    original dispatch-buffer layout.  The inverse of :func:`dump` up to
+    the ESP reduction — each expert's slot sums its n_esp partials:
+
+    >>> r = jnp.arange(1., 5.).reshape(4, 1, 1, 1)  # (G=4, El=1, c=1, M=1)
+    >>> undump_reduce(r, n_ep=2, n_esp=2)[:, 0, 0].tolist()
+    [3.0, 7.0]
     """
     G, El, c, M = r.shape
     r = r.reshape(n_ep, n_esp, El, c, M).sum(axis=1)
@@ -79,27 +114,48 @@ def undump_reduce(r, n_ep: int, n_esp: int):
 
 
 def to_expert_batch(rb):
-    """(G, El, c, M) received buffer -> (El, G*c, M) per-expert token batch."""
+    """(G, El, c, M) received buffer -> (El, G*c, M) per-expert token batch.
+
+    Costs a full-buffer G<->El transpose (XLA materializes it); the
+    expert-major ``*_em`` twins below avoid that.
+
+    >>> rb = jnp.arange(6.).reshape(3, 1, 2, 1)    # (G=3, El=1, c=2, M=1)
+    >>> to_expert_batch(rb).shape
+    (1, 6, 1)
+    """
     G, El, c, M = rb.shape
     return rb.transpose(1, 0, 2, 3).reshape(El, G * c, M)
 
 
 def from_expert_batch(h, G: int):
-    """(El, G*c, M) expert outputs -> (G, El, c, M) return buffer."""
+    """(El, G*c, M) expert outputs -> (G, El, c, M) return buffer (the
+    exact inverse of :func:`to_expert_batch`).
+
+    >>> rb = jnp.arange(6.).reshape(3, 1, 2, 1)
+    >>> bool((from_expert_batch(to_expert_batch(rb), G=3) == rb).all())
+    True
+    """
     El, Gc, M = h.shape
     c = Gc // G
     return h.reshape(El, G, c, M).transpose(1, 0, 2, 3)
 
 
 def ep_esp_all_to_all(x, ep_axes, esp_axes, *, split_axis=0, concat_axis=0):
-    """One fused AlltoAll over the combined (EP, ESP) group (§III-C)."""
+    """One fused AlltoAll over the combined (EP, ESP) group (§III-C).
+
+    ``lax.all_to_all`` with a tuple of axis names lowers to a single
+    all-to-all over the combined device set, which is what exploits the
+    intra- and inter-node links simultaneously (paper Fig. 4c/d).
+    Shard_map-only (needs both axis groups bound).
+    """
     ep, esp = _axes(ep_axes), _axes(esp_axes)
     names = ep + tuple(a for a in esp if a not in ep)
     return lax.all_to_all(x, names, split_axis, concat_axis, tiled=True)
 
 
 def ep_all_to_all(x, ep_axes, *, split_axis=0, concat_axis=0):
-    """Plain EP-AlltoAll (baseline schedule)."""
+    """Plain EP-AlltoAll over the EP axes only (baseline schedule).
+    Shard_map-only."""
     return lax.all_to_all(x, _axes(ep_axes), split_axis, concat_axis,
                           tiled=True)
 
@@ -112,7 +168,18 @@ def ep_all_to_all(x, ep_axes, *, split_axis=0, concat_axis=0):
 # pre-dump buffer is ever transposed.
 
 def dump_em(d, n_ep: int, n_esp: int):
-    """Dump in expert-major layout: (E, c, M) -> (El, G, c, M)."""
+    """Dump in expert-major layout: (E, c, M) -> (El, G, c, M).
+
+    Same virtual duplication as :func:`dump`, but the local-expert dim
+    leads so the AlltoAll runs over ``split_axis=1`` and the expert-batch
+    view is a free reshape:
+
+    >>> d = jnp.array([[[1.]], [[2.]]])            # (E=2, c=1, M=1)
+    >>> dump_em(d, n_ep=2, n_esp=2).shape          # (El=1, G=4, c=1, M=1)
+    (1, 4, 1, 1)
+    >>> dump_em(d, n_ep=2, n_esp=2)[0, :, 0, 0].tolist()
+    [1.0, 1.0, 2.0, 2.0]
+    """
     E, c, M = d.shape
     El = E // n_ep
     out = d.reshape(n_ep, El, c, M).transpose(1, 0, 2, 3)   # (El, Ne, c, M)
@@ -121,20 +188,35 @@ def dump_em(d, n_ep: int, n_esp: int):
 
 
 def undump_reduce_em(r, n_ep: int, n_esp: int):
-    """(El, G, c, M) returned partials -> (E, c, M), summing ESP shards."""
+    """(El, G, c, M) returned partials -> (E, c, M), summing ESP shards
+    (the expert-major twin of :func:`undump_reduce`).
+
+    >>> r = jnp.arange(1., 5.).reshape(1, 4, 1, 1)  # (El=1, G=4, c=1, M=1)
+    >>> undump_reduce_em(r, n_ep=2, n_esp=2)[:, 0, 0].tolist()
+    [3.0, 7.0]
+    """
     El, G, c, M = r.shape
     r = r.reshape(El, n_ep, n_esp, c, M).sum(axis=2)        # (El, Ne, c, M)
     return r.transpose(1, 0, 2, 3).reshape(n_ep * El, c, M)
 
 
 def to_expert_batch_em(rb):
-    """(El, G, c, M) -> (El, G*c, M): free reshape (no relayout)."""
+    """(El, G, c, M) -> (El, G*c, M): free reshape (no relayout).
+
+    >>> to_expert_batch_em(jnp.zeros((2, 3, 4, 5))).shape
+    (2, 12, 5)
+    """
     El, G, c, M = rb.shape
     return rb.reshape(El, G * c, M)
 
 
 def from_expert_batch_em(h, G: int):
-    """(El, G*c, M) -> (El, G, c, M): free reshape."""
+    """(El, G*c, M) -> (El, G, c, M): free reshape (inverse of
+    :func:`to_expert_batch_em`).
+
+    >>> from_expert_batch_em(jnp.zeros((2, 12, 5)), G=3).shape
+    (2, 3, 4, 5)
+    """
     El, Gc, M = h.shape
     return h.reshape(El, G, Gc // G, M)
 

@@ -1,10 +1,13 @@
 """The MoE layer: Parm's schedules as a first-class, composable module.
 
 ``apply_moe`` is the public entry point used by every model definition.
-It wires the schedule bodies (repro.core.schedules) into a shard_map over
-the caller's mesh, handles the decode-time fallback when the token count
-cannot be sharded over the EP axes, computes capacities, and runs the
-Algorithm-1 auto-selector when ``schedule="auto"``.
+It wires the schedule bodies (repro.core.schedules + the chunk-pipelined
+variants in repro.core.pipeline) into a shard_map over the caller's mesh,
+handles the decode-time fallback when the token count cannot be sharded
+over the EP axes, computes capacities, and — when ``schedule="auto"`` —
+consults the autoscheduler (repro.core.autosched) for the per-layer
+(schedule, n_chunks) decision, analytically or from a one-shot measured
+calibration.
 """
 
 from __future__ import annotations
@@ -19,8 +22,10 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import autosched
 from repro.core.gating import GateConfig, capacity
 from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
+from repro.core.pipeline import PIPELINE_OF, clamp_chunks
 from repro.core.schedules import BODY, MoEShardInfo, expert_ffn
 from repro.kernels.registry import KernelConfig
 from repro.parallel.mesh import ParallelDims, axis_size
@@ -38,8 +43,10 @@ class MoEConfig:
     normalize_topk: bool = False
     aux_loss_weight: float = 1e-2
     z_loss_weight: float = 1e-3
-    schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | auto
+    schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | *_pipe | auto
     saa_chunks: int = 4
+    pipeline_chunks: int = 1      # micro-chunks for the *_pipe bodies (1 = off)
+    autosched: str = "analytic"   # "auto" decision mode: analytic | measured
     act: str = "silu"             # expert activation ("silu" | "gelu")
     kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
 
@@ -132,10 +139,12 @@ def _replicated_body(x, wg, w1, w3, w2, info: MoEShardInfo):
 
 def select_schedule(cfg: MoEConfig, shape: MoELayerShape,
                     perf_model: Optional[PerfModel] = None) -> str:
+    """Schedule name for one layer shape (no chunk count; see
+    ``autosched.decide`` for the full (schedule, n_chunks) decision)."""
     if cfg.schedule != "auto":
         return cfg.schedule
     pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
-    return pm.algorithm1(shape)
+    return autosched.decide(shape, perf_model=pm).schedule
 
 
 def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
@@ -161,7 +170,8 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
     n_batch = axis_size(mesh, batch_ax)
 
     sched = schedule or cfg.schedule
-    seqpar = sched == "s1_seqpar"
+    n_chunks = max(cfg.pipeline_chunks, 1)
+    seqpar = sched in ("s1_seqpar", "s1_seqpar_pipe")
     token_shard = batch_ax + (dims.mp if seqpar else ())
     n_token_shard = axis_size(mesh, token_shard)
 
@@ -171,6 +181,11 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
                  and s_local > 0)
     use_fallback = (not divisible) or s_local < n_mp
 
+    # Capacity for an s_local-token pool, divisible by N_MP (for the S1/S2
+    # splits) and 8-aligned.
+    align = max(8, n_mp)
+    cap = max(align, -(-capacity(max(s_local, 1), gate_cfg) // align) * align)
+
     if use_fallback:
         sched = "dense_decode"
     elif sched == "auto":
@@ -178,18 +193,30 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
             B=max(s_local // max(L, 1), 1), L=min(L, s_local), M=M,
             H=cfg.d_ff, E=cfg.n_experts, k=cfg.top_k,
             f=cfg.capacity_factor, n_mp=n_mp, n_esp=n_esp, n_ep=n_ep)
-        sched = select_schedule(cfg, shape, perf_model)
-
-    # Capacity for an s_local-token pool, divisible by N_MP (for the S1/S2
-    # splits) and 8-aligned.
-    align = max(8, n_mp)
-    cap = max(align, -(-capacity(max(s_local, 1), gate_cfg) // align) * align)
+        # Only score chunk counts the bodies can actually run: every
+        # schedule's chunked dim is a multiple of cap/N_MP, so clamping
+        # against it keeps scored == executed (and dedups candidates).
+        cands = tuple(sorted({clamp_chunks(cap // max(n_mp, 1), n)
+                              for n in autosched.DEFAULT_CHUNKS}))
+        # tokens_global: the nested apply_moe re-shards over the same
+        # batch axes, so candidates are timed at the true per-device pool.
+        measure = (autosched.measure_candidates(
+            mesh, dims, cfg, tokens=tokens_global, d_model=M)
+            if cfg.autosched == "measured" else None)
+        decision = autosched.decide(shape, perf_model=perf_model,
+                                    mode=cfg.autosched,
+                                    chunk_candidates=cands, measure=measure)
+        sched, n_chunks = decision.schedule, decision.n_chunks
+    if not use_fallback and n_chunks > 1 and sched in PIPELINE_OF:
+        # route chunked requests to the pipelined body of the same schedule
+        sched = PIPELINE_OF[sched]
 
     info = MoEShardInfo(
         ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
         mp_axes=tuple(dims.mp), n_ep=n_ep, n_esp=n_esp, n_mp=n_mp,
         tokens=s_local, cap=cap, gate=gate_cfg, act=cfg.act, glu=cfg.glu,
-        saa_chunks=cfg.saa_chunks, kernel=cfg.kernel)
+        saa_chunks=cfg.saa_chunks, pipeline_chunks=n_chunks,
+        kernel=cfg.kernel)
 
     body = _replicated_body if sched == "dense_decode" else BODY[sched]
     pspecs = moe_param_specs(cfg, mesh, dims)

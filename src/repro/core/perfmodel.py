@@ -1,31 +1,73 @@
-"""The alpha-beta collective performance model and Algorithm 1 (§V).
+"""The alpha-beta collective performance model and Algorithm 1 (paper §V).
 
-``t = alpha + beta * x`` per collective, with (alpha, beta) either fitted
-by least squares from measured latencies (paper §VI-B / Fig. 6) or derived
-analytically from fabric constants (TPU v5e: ~50 GB/s/link ICI).
+Every collective is modelled as ``t = alpha + beta * x`` (startup plus
+per-element time), with ``(alpha, beta)`` either fitted by least squares
+from measured latencies (paper §VI-B / Fig. 6, :func:`fit_alpha_beta`) or
+derived analytically from fabric constants (:func:`tpu_v5e_model`).
 
-The closed forms reproduce Eq. (1), (13), (14) and the schedule selector
-reproduces Algorithm 1 line-by-line.
+The closed forms reproduce the paper's Eq. (1), (13), (14); the schedule
+selector :meth:`PerfModel.algorithm1` reproduces Algorithm 1
+line-by-line; and :meth:`PerfModel.t_pipelined` extends the model to the
+chunk-pipelined bodies of ``repro.core.pipeline`` (fill/drain pipeline
+over per-chunk communication and expert-FFN compute).  The
+``schedule="auto"`` runtime (``repro.core.autosched``) consults these
+methods — or a live measurement — per MoE layer shape.
+
+Run the examples with ``python -m doctest src/repro/core/perfmodel.py``.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+# --- fabric constants (analytic TPU v5e model) -------------------------------
+
+ICI_LINK_BW = 50e9        # bytes/s per ICI link (v5e)
+HBM_BW = 819e9            # bytes/s
+PEAK_FLOPS_BF16 = 197e12  # per chip
+ALPHA_ICI = 1e-6          # per-collective startup, seconds
+DCI_BW = 6.25e9           # inter-pod data-center interconnect per chip (est.)
 
 
 @dataclass(frozen=True)
 class AlphaBeta:
+    """One collective's latency model: ``t(x) = alpha + beta * x``.
+
+    ``alpha`` is the startup cost in seconds, ``beta`` the marginal
+    seconds per element.  Calling the instance evaluates it:
+
+    >>> AlphaBeta(alpha=1.0, beta=0.5)(4)
+    3.0
+    >>> AlphaBeta(alpha=1.0, beta=0.5)(-8)   # sizes clamp at zero
+    1.0
+    """
+
     alpha: float  # startup seconds
     beta: float   # seconds per element
 
     def __call__(self, n_elements: float) -> float:
+        """Predicted seconds for a collective over ``n_elements``."""
         return self.alpha + self.beta * max(n_elements, 0.0)
 
 
 @dataclass(frozen=True)
 class MoELayerShape:
-    """Notation of Table I: per-rank quantities."""
+    """One MoE layer's shape in the notation of the paper's Table I.
+
+    All quantities are *per rank*: ``B`` samples of ``L`` tokens with
+    embedding size ``M``, ``E`` total experts of hidden size ``H``,
+    top-``k`` routing with capacity factor ``f``, on an
+    ``n_mp`` x ``n_esp`` x ``n_ep`` parallel layout.
+
+    >>> s = MoELayerShape(B=4, L=256, M=8, H=32, E=8, k=2, f=1.0)
+    >>> s.T          # per-expert capacity: k * f * B * L / E
+    256.0
+    >>> s.blm        # tokens x embedding elements per rank
+    8192
+    >>> s.etm == s.E * s.T * s.M
+    True
+    """
+
     B: int           # samples per rank
     L: int           # tokens per sample
     M: int           # embedding size
@@ -39,47 +81,142 @@ class MoELayerShape:
 
     @property
     def T(self) -> float:
+        """Per-expert capacity ``k * f * B * L / E`` (Table I)."""
         return self.k * self.f * self.B * self.L / self.E
 
     @property
     def blm(self) -> float:
+        """``B * L * M``: input-activation elements per rank."""
         return self.B * self.L * self.M
 
     @property
     def etm(self) -> float:
+        """``E * T * M``: dispatch-buffer elements per rank."""
         return self.E * self.T * self.M
 
 
 @dataclass(frozen=True)
 class PerfModel:
+    """Alpha-beta models for every collective the schedules issue.
+
+    The six fields cover the baseline's collectives (plain EP-AlltoAll,
+    ESP-AllGather/AllReduce), the fused EP&ESP-AlltoAll of S1/S2, the
+    MP-AllGather, and the SAA overlapped phase of S2.  ``flops_per_s``
+    adds a coarse compute term so the pipelined variants (which overlap
+    communication with the expert FFN) can be scored too.
+    """
+
     a2a_ep_esp: AlphaBeta        # fused EP&ESP-AlltoAll
     a2a_ep: AlphaBeta            # plain EP-AlltoAll (baseline)
     ag_esp: AlphaBeta            # ESP-AllGather (baseline)
     ar_esp: AlphaBeta            # ESP-AllReduce (baseline)
     ag_mp: AlphaBeta             # MP-AllGather
     overlap: AlphaBeta           # overlapped EP&ESP-A2A + MP-AG (SAA phase)
+    flops_per_s: float = PEAK_FLOPS_BF16  # per-chip dense compute rate
 
     # --- closed forms ------------------------------------------------------
     def t_baseline(self, s: MoELayerShape) -> float:
-        """Eq. (1)."""
+        """Eq. (1): ESP-AllGather + ESP-AllReduce + 2 EP-AlltoAlls."""
         return (self.ag_esp(s.blm * s.n_esp)
                 + self.ar_esp(s.etm * s.n_esp)
                 + 2 * self.a2a_ep(s.etm * s.n_esp))
 
     def t_s1(self, s: MoELayerShape) -> float:
-        """Eq. (11)/(13)."""
+        """Eq. (11)/(13): two fused AlltoAlls + MP-AllGather(BLM)."""
         return (2 * self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
                 + self.ag_mp(s.blm))
 
     def t_s2(self, s: MoELayerShape) -> float:
-        """Eq. (14)."""
+        """Eq. (14): fused AlltoAll + SAA phase + MP-AllGather(ETM)."""
         return (self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
                 + self.overlap(s.etm * s.n_esp / s.n_mp)
                 + self.ag_mp(s.etm))
 
+    # --- compute + pipeline extension (repro.core.pipeline) ----------------
+    def t_ffn(self, s: MoELayerShape, schedule: str = "s1") -> float:
+        """Per-device expert-FFN seconds (coarse dense-roofline estimate).
+
+        A GLU expert runs three ``M x H`` matmuls per token slot, i.e.
+        ``6 * M * H`` FLOPs with multiply-adds counted as two.  S1/S2
+        process ``E * T * n_esp / n_mp`` slots per device; the baseline
+        skips the MP split and redundantly computes all ``n_mp`` copies
+        — the very redundancy Parm removes (paper Fig. 3a).
+        """
+        slots = s.E * s.T * s.n_esp
+        if schedule != "baseline":
+            slots /= s.n_mp
+        return 6.0 * slots * s.M * s.H / s.n_esp / self.flops_per_s
+
+    def _chain(self, s: MoELayerShape, schedule: str):
+        """(fixed, chain_alpha, chain_beta_time) for one schedule body.
+
+        ``fixed`` is the serial time outside the chunkable AlltoAll/FFN
+        chain; the chain's startup (``alpha``, charged once per chunk)
+        and bandwidth time (split across chunks) are returned separately.
+        """
+        y = s.etm * s.n_esp
+        if schedule == "baseline":
+            return (self.ag_esp(s.blm * s.n_esp),
+                    2 * self.a2a_ep.alpha + self.ar_esp.alpha,
+                    2 * self.a2a_ep.beta * y + self.ar_esp.beta * y)
+        y /= s.n_mp
+        if schedule in ("s1", "s1_seqpar"):
+            fixed = 0.0 if schedule == "s1_seqpar" else self.ag_mp(s.blm)
+            return (fixed, 2 * self.a2a_ep_esp.alpha,
+                    2 * self.a2a_ep_esp.beta * y)
+        if schedule == "s2":
+            return (0.0,
+                    (self.a2a_ep_esp.alpha + self.overlap.alpha
+                     + self.ag_mp.alpha),
+                    (self.a2a_ep_esp.beta * y + self.overlap.beta * y
+                     + self.ag_mp.beta * s.etm))
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    def t_pipelined(self, s: MoELayerShape, schedule: str = "s1",
+                    n_chunks: int = 1) -> float:
+        """Fill/drain pipeline time for a chunked schedule body.
+
+        With ``n`` chunks, each chunk's communication costs
+        ``tc = chain_beta / n + chain_alpha`` and its FFN
+        ``tf = t_ffn / n``; chunk ``i+1``'s communication overlaps chunk
+        ``i``'s compute, so the chain totals
+        ``tc + (n - 1) * max(tc, tf) + tf`` plus the un-chunkable fixed
+        part.  ``n_chunks=1`` degenerates to the serial closed form plus
+        the compute term, so pipelining only wins when overlap beats the
+        extra per-chunk startup:
+
+        >>> ab = AlphaBeta(1e-6, 1e-9)
+        >>> m = PerfModel(ab, ab, ab, ab, ab, ab, flops_per_s=1e12)
+        >>> s = MoELayerShape(B=8, L=1024, M=1024, H=4096, E=8, k=2,
+        ...                   f=1.0, n_mp=2, n_esp=2, n_ep=2)
+        >>> m.t_pipelined(s, "s1", 4) < m.t_pipelined(s, "s1", 1)
+        True
+        """
+        n = max(1, n_chunks)
+        fixed, c_alpha, c_beta = self._chain(s, schedule)
+        tc = c_beta / n + c_alpha
+        tf = self.t_ffn(s, schedule) / n
+        return fixed + tc + (n - 1) * max(tc, tf) + tf
+
+    def pick_chunks(self, s: MoELayerShape, schedule: str = "s1",
+                    candidates=(1, 2, 4, 8)) -> int:
+        """Chunk count minimizing :meth:`t_pipelined` for one schedule."""
+        return min(candidates, key=lambda n: self.t_pipelined(s, schedule, n))
+
     # --- Algorithm 1 --------------------------------------------------------
     def algorithm1(self, s: MoELayerShape) -> str:
-        """Faithful transcription of Algorithm 1 (lines 1-9)."""
+        """Faithful transcription of Algorithm 1 (lines 1-9).
+
+        Compares the S1 cost ``t_D1`` (line 4) against the S2 cost
+        ``t_D2`` (line 5) for the layer shape and returns the winner:
+
+        >>> ab = AlphaBeta(1e-5, 1e-9)
+        >>> m = PerfModel(ab, ab, ab, ab, ab, ab)
+        >>> big = MoELayerShape(B=64, L=4096, M=1024, H=1, E=4, k=4,
+        ...                     f=8.0, n_mp=4, n_esp=1, n_ep=4)
+        >>> m.algorithm1(big)      # T -> inf favours S1 (paper §IV-B)
+        's1'
+        """
         x = s.B * s.L * s.M                                  # line 1
         T = s.k * s.f * s.B * s.L / s.E                      # line 2 (T)
         y = s.E * T * s.M * s.n_esp                          # line 3
@@ -93,11 +230,21 @@ class PerfModel:
         return "s1" if t_d1 <= t_d2 else "s2"                # lines 6-9
 
     def pick(self, s: MoELayerShape) -> str:
+        """Algorithm-1 schedule choice (no pipelining considered)."""
         return self.algorithm1(s)
 
 
 def fit_alpha_beta(sizes, times) -> AlphaBeta:
-    """Least-squares fit of t = alpha + beta*x (paper §V-A)."""
+    """Least-squares fit of ``t = alpha + beta * x`` (paper §V-A).
+
+    Degenerate inputs (all sizes equal) fall back to ``beta = 0`` with
+    ``alpha`` the mean time; negative fitted parameters clamp at zero.
+
+    >>> fit_alpha_beta([1, 2, 3], [3.0, 5.0, 7.0])
+    AlphaBeta(alpha=1.0, beta=2.0)
+    >>> fit_alpha_beta([4, 4], [2.0, 4.0])
+    AlphaBeta(alpha=3.0, beta=0.0)
+    """
     n = len(sizes)
     sx = sum(sizes)
     sy = sum(times)
@@ -113,20 +260,18 @@ def fit_alpha_beta(sizes, times) -> AlphaBeta:
 
 # --- analytic TPU v5e fabric model ------------------------------------------
 
-ICI_LINK_BW = 50e9        # bytes/s per link (v5e)
-HBM_BW = 819e9            # bytes/s
-PEAK_FLOPS_BF16 = 197e12  # per chip
-ALPHA_ICI = 1e-6          # per-collective startup, seconds
-DCI_BW = 6.25e9           # inter-pod data-center interconnect per chip (est.)
-
-
 def tpu_v5e_model(n_ep: int, n_esp: int, n_mp: int, bytes_per_el: int = 2,
                   inter_pod: bool = False) -> PerfModel:
     """Analytic alpha-beta constants for a v5e mesh.
 
     MP/ESP map to the innermost mesh axis (fastest, all-ICI); EP spans the
     outer axis (and the DCI when ``inter_pod``).  Ring/bidirectional
-    collectives move (g-1)/g of the payload through a chip's ~link_bw.
+    collectives move ``(g - 1) / g`` of the payload through a chip's
+    ~``ICI_LINK_BW``.  Single-member groups cost nothing per element:
+
+    >>> m = tpu_v5e_model(n_ep=4, n_esp=1, n_mp=1)
+    >>> m.ag_esp.beta == 0.0 and m.a2a_ep.beta > 0.0
+    True
     """
     def coll(bw, g):
         frac = (g - 1) / g if g > 1 else 0.0
@@ -149,7 +294,12 @@ def tpu_v5e_model(n_ep: int, n_esp: int, n_mp: int, bytes_per_el: int = 2,
 
 
 def speedup_table(shape: MoELayerShape, model: PerfModel) -> dict:
-    """Analytic reproduction row: baseline vs S1 vs S2 vs Parm (auto)."""
+    """Analytic reproduction row: baseline vs S1 vs S2 vs Parm (auto).
+
+    Returns the three closed-form times, the Algorithm-1 pick, and the
+    baseline-relative speedups (``speedup_parm`` uses the picked
+    schedule's time).
+    """
     tb = model.t_baseline(shape)
     t1 = model.t_s1(shape)
     t2 = model.t_s2(shape)

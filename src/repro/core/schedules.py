@@ -27,7 +27,9 @@ from repro.core import collectives as coll
 from repro.core.gating import GateConfig, combine, dispatch, topk_gate
 from repro.kernels.registry import KernelConfig, get_op
 
-SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "auto")
+SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar",
+             "baseline_pipe", "s1_pipe", "s2_pipe", "s1_seqpar_pipe",
+             "auto")
 
 
 @dataclass(frozen=True)
@@ -45,6 +47,7 @@ class MoEShardInfo:
     act: str = "silu"    # expert activation (registry op static)
     glu: bool = True     # SwiGLU experts (w1 gate + w3 up) vs 2-layer GELU
     saa_chunks: int = 4  # SAA pipeline depth (1 = no overlap, AAS)
+    pipeline_chunks: int = 1  # micro-chunk count for the *_pipe bodies
     kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
 
     @property
@@ -163,3 +166,8 @@ BODY = {
     "s2": s2_body,
     "s1_seqpar": lambda *a, **k: s1_body(*a, seqpar=True, **k),
 }
+
+# Register the chunk-pipelined variants (*_pipe) into BODY.  The import
+# sits at the bottom to break the schedules <-> pipeline cycle: pipeline
+# needs MoEShardInfo/expert_ffn/_aux_mean from this module.
+from repro.core import pipeline as _pipeline  # noqa: E402,F401

@@ -43,7 +43,7 @@ from repro.analysis.layerwise import layerwise_costs
 from repro.analysis.roofline import roofline_terms
 from repro.configs import INPUT_SHAPES, get_config, input_specs
 from repro.configs.registry import ASSIGNED
-from repro.core.moe import select_schedule
+from repro.core import autosched
 from repro.core.perfmodel import MoELayerShape
 from repro.launch.mesh import dims_for, make_production_mesh, make_test_mesh
 from repro.models import build_model
@@ -87,8 +87,13 @@ def variant_config(cfg, shape_name: str):
 def lower_one(arch: str, shape_name: str, multi_pod: bool,
               schedule: str = None, dtype: str = "bfloat16",
               save_hlo: bool = False, cache_seq_shard: bool = False,
-              saa_chunks: int = None, seq_parallel: bool = False) -> dict:
+              saa_chunks: int = None, seq_parallel: bool = False,
+              pipeline_chunks: int = None, run_step: bool = False,
+              reduced: bool = False, seq: int = None,
+              batch_size: int = None) -> dict:
     cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
     cfg, variant = variant_config(cfg, shape_name)
     if cfg is None:
         return {"arch": arch, "shape": shape_name,
@@ -101,7 +106,14 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         cfg = replace(cfg, seq_parallel=True)
     if saa_chunks is not None and cfg.moe is not None:
         cfg = replace(cfg, moe=replace(cfg.moe, saa_chunks=saa_chunks))
+    if pipeline_chunks is not None and cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe,
+                                       pipeline_chunks=pipeline_chunks))
     shape = INPUT_SHAPES[shape_name]
+    if seq or batch_size:
+        shape = dataclasses.replace(
+            shape, seq_len=seq or shape.seq_len,
+            global_batch=batch_size or shape.global_batch)
     n_dev = int(os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
     mesh = (make_production_mesh(multi_pod=multi_pod) if n_dev >= 512
             else make_test_mesh(multi_pod=multi_pod))
@@ -126,17 +138,31 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     b_sh = jax.tree.map(bshard, batch)
 
     sched = schedule
-    if cfg.moe is not None and not sched:
+    chunks_pick = cfg.moe.pipeline_chunks if cfg.moe is not None else 0
+    if cfg.moe is not None and not sched and cfg.moe.schedule == "auto":
+        from repro.core.gating import capacity
+        from repro.core.pipeline import clamp_chunks
+
         s_local = max(shape.global_batch * (
             shape.seq_len if shape.kind != "decode" else 1) // max(nb, 1), 1)
         sizes = dims.sizes(mesh)
-        sched_pick = select_schedule(cfg.moe, MoELayerShape(
+        # mirror apply_moe's capacity + chunk-candidate clamping so the
+        # recorded decision matches what the trace will actually compile
+        align = max(8, sizes["mp"])
+        cap = max(align, -(-capacity(s_local, cfg.moe.gate_config())
+                           // align) * align)
+        cands = tuple(sorted({clamp_chunks(cap // max(sizes["mp"], 1), n)
+                              for n in autosched.DEFAULT_CHUNKS}))
+        decision = autosched.decide(MoELayerShape(
             B=1, L=s_local, M=cfg.d_model, H=cfg.moe.d_ff,
             E=cfg.moe.n_experts, k=cfg.moe.top_k,
             f=cfg.moe.capacity_factor, n_mp=sizes["mp"],
-            n_esp=sizes["esp"], n_ep=sizes["ep"]))
+            n_esp=sizes["esp"], n_ep=sizes["ep"]),
+            chunk_candidates=cands)
+        sched_pick, chunks_pick = decision.schedule, decision.n_chunks
     else:
-        sched_pick = sched or "n/a"
+        sched_pick = sched or (cfg.moe.schedule if cfg.moe is not None
+                               else "n/a")
 
     t0 = time.perf_counter()
     if shape.kind == "train":
@@ -201,6 +227,22 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
 
+    step_metrics = None
+    if run_step and shape.kind == "train":
+        # prove the program end-to-end: init real (sharded) params and
+        # optimizer state, run ONE optimizer step on synthetic tokens.
+        params = jax.jit(model.init, out_shardings=p_sh)(
+            jax.random.PRNGKey(0))
+        opt_state = jax.jit(adamw_init, out_shardings=o_sh)(params)
+        concrete = jax.tree.map(
+            lambda l, s: jax.device_put(jnp.zeros(l.shape, l.dtype), s),
+            batch, b_sh)
+        _, _, metrics = compiled(params, opt_state, concrete)
+        step_metrics = {k: float(v) for k, v in metrics.items()}
+        print(f"[step] {arch} x {shape_name} sched={sched_pick} "
+              f"loss={step_metrics.get('loss', float('nan')):.4f}",
+              flush=True)
+
     mem = compiled.memory_analysis()
     mem_d = {}
     if mem is not None:
@@ -238,7 +280,9 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     rec = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
-        "variant": variant, "schedule": sched_pick,
+        "variant": (variant + ("+reduced" if reduced else "")).lstrip("+"),
+        "schedule": sched_pick, "pipeline_chunks": chunks_pick,
+        "step_metrics": step_metrics,
         "chips": chips, "dtype": dtype,
         "n_params": n_params, "n_active_params": n_active,
         "tokens_per_step": tokens,
@@ -277,7 +321,20 @@ def main():
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "both"])
     ap.add_argument("--schedule", default=None,
-                    help="force a Parm schedule (baseline/s1/s2/s1_seqpar)")
+                    help="force a Parm schedule (baseline/s1/s2/s1_seqpar "
+                         "or a pipelined *_pipe variant)")
+    ap.add_argument("--pipeline-chunks", type=int, default=None,
+                    help="micro-chunk count for the pipelined bodies")
+    ap.add_argument("--run-step", action="store_true",
+                    help="after compiling a train combo, init real params "
+                         "and execute one optimizer step (use with "
+                         "--reduced/--seq/--batch on CPU)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="lower the smoke-scale config variant")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="override the input shape's sequence length")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override the input shape's global batch")
     ap.add_argument("--dtype", default="bfloat16")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--save-hlo", action="store_true")
@@ -317,7 +374,11 @@ def main():
                                     args.dtype, args.save_hlo,
                                     cache_seq_shard=args.cache_seq_shard,
                                     saa_chunks=args.saa_chunks,
-                                    seq_parallel=args.seq_parallel)
+                                    seq_parallel=args.seq_parallel,
+                                    pipeline_chunks=args.pipeline_chunks,
+                                    run_step=args.run_step,
+                                    reduced=args.reduced, seq=args.seq,
+                                    batch_size=args.batch)
                     sfx = f"__{args.schedule}" if args.schedule else ""
                     if args.tag:
                         sfx += f"__{args.tag}"

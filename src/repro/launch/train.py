@@ -34,7 +34,15 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--schedule", default=None,
-                    help="Parm schedule override (baseline/s1/s2/auto)")
+                    help="Parm schedule override (baseline/s1/s2/s1_seqpar, "
+                         "their *_pipe pipelined variants, or auto)")
+    ap.add_argument("--pipeline-chunks", type=int, default=None,
+                    help="micro-chunk count for the pipelined bodies "
+                         "(1 = unchunked)")
+    ap.add_argument("--autosched", default=None,
+                    choices=["analytic", "measured"],
+                    help="schedule=auto decision mode: score the perf model "
+                         "or calibrate each candidate on the live mesh")
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--ckpt", default=None)
@@ -43,6 +51,14 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if cfg.moe is not None and (args.pipeline_chunks is not None
+                                or args.autosched):
+        moe_kw = {}
+        if args.pipeline_chunks is not None:
+            moe_kw["pipeline_chunks"] = args.pipeline_chunks
+        if args.autosched:
+            moe_kw["autosched"] = args.autosched
+        cfg = replace(cfg, moe=replace(cfg.moe, **moe_kw))
     if args.reduced:
         cfg = cfg.reduced(n_layers=args.layers or 2,
                           d_model=args.d_model or 256)

@@ -145,6 +145,8 @@ class Trainer:
                                 mesh, opt_state_specs(pspecs)))(params)
         step_fn = make_train_step(m, mesh, dims, self.opt_cfg, self.schedule)
         self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        from repro.core import autosched
+        self._sched_keys = set(autosched.cache_info())
         return params, opt_state
 
     def run(self, params, opt_state, data, n_steps: int, log_every: int = 10,
@@ -155,6 +157,14 @@ class Trainer:
         for step in range(n_steps):
             batch = data.sharded_batch(step, self.mesh, bx)
             params, opt_state, metrics = self._step(params, opt_state, batch)
+            if step == 0:
+                # the first step traced the model: any schedule="auto" MoE
+                # layers have made their (schedule, n_chunks) decisions now
+                from repro.core import autosched
+                summary = autosched.cache_summary(
+                    exclude=getattr(self, "_sched_keys", ()))
+                if summary:
+                    print(summary, flush=True)
             if step % log_every == 0 or step == n_steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step

@@ -1,0 +1,52 @@
+"""Docs health: the documented modules stay doctest-clean and every
+relative link in README/docs resolves (mirrors the CI docs job so
+breakage is caught locally by tier-1)."""
+
+import doctest
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+class TestDoctests:
+    def _run(self, module):
+        results = doctest.testmod(module, verbose=False)
+        assert results.failed == 0, f"{module.__name__}: {results}"
+        assert results.attempted > 0, f"{module.__name__} has no doctests"
+
+    def test_perfmodel_doctests(self):
+        from repro.core import perfmodel
+        self._run(perfmodel)
+
+    def test_collectives_doctests(self):
+        from repro.core import collectives
+        self._run(collectives)
+
+
+class TestDocsPresent:
+    def test_docs_exist_and_crosslinked(self):
+        readme = open(os.path.join(REPO, "README.md")).read()
+        for page in ("docs/architecture.md", "docs/schedules.md"):
+            assert os.path.exists(os.path.join(REPO, page)), page
+            assert page in readme, f"README does not link {page}"
+        sched = open(os.path.join(REPO, "docs", "schedules.md")).read()
+        for body in ("baseline", "s1", "s2", "_pipe", "algorithm1"):
+            assert body in sched, body
+
+    def test_readme_names_every_bench(self):
+        readme = open(os.path.join(REPO, "README.md")).read()
+        benches = [f for f in os.listdir(os.path.join(REPO, "benchmarks"))
+                   if f.startswith("bench_") and f.endswith(".py")]
+        missing = [b for b in benches if b not in readme]
+        assert not missing, f"README missing benches: {missing}"
+
+
+class TestLinkCheck:
+    def test_all_relative_links_resolve(self):
+        r = subprocess.run(
+            [sys.executable, os.path.join("tools", "check_links.py")],
+            capture_output=True, text=True, cwd=REPO, timeout=60)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 broken" in r.stdout

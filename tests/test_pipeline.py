@@ -1,0 +1,73 @@
+"""Chunk-pipelined schedule tests: parity with the unchunked bodies
+(subprocess, 8 fake devices), chunk clamping, and the end-to-end
+``schedule="auto"`` one-step train through launch/dryrun.py."""
+
+import os
+import subprocess
+import sys
+
+from conftest import subprocess_env
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script, *args, n_devices=8, timeout=900):
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        env=subprocess_env(n_devices), capture_output=True, text=True,
+        timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+class TestPipelineParity:
+    def test_merged_production_mapping(self):
+        """pipelined == unchunked (outputs + grads), n_chunks in {1,2,4},
+        for baseline/s1/s2/s1_seqpar on the MP==ESP mesh."""
+        out = _run("run_pipeline_equiv.py", "merged")
+        assert "OK merged" in out
+
+    def test_distinct_axes(self):
+        out = _run("run_pipeline_equiv.py", "distinct")
+        assert "OK distinct" in out
+
+    def test_dropped_tokens(self):
+        """capacity_factor < 1: drop patterns and outputs identical at
+        every chunk count (chunking happens after the gate)."""
+        out = _run("run_pipeline_equiv.py", "drops")
+        assert "OK drops" in out
+
+
+class TestChunkClamping:
+    def test_clamp_to_divisor(self):
+        from repro.core.pipeline import clamp_chunks
+        assert clamp_chunks(16, 4) == 4
+        assert clamp_chunks(16, 5) == 4     # largest divisor <= 5
+        assert clamp_chunks(16, 100) == 16  # never exceeds the dim
+        assert clamp_chunks(7, 2) == 1      # prime capacity -> unchunked
+        assert clamp_chunks(12, 0) == 1
+
+    def test_pipeline_registry(self):
+        from repro.core.pipeline import PIPELINE_OF, UNCHUNKED_OF
+        from repro.core.schedules import BODY
+        for base, pipe in PIPELINE_OF.items():
+            assert base in BODY and pipe in BODY
+            assert UNCHUNKED_OF[pipe] == base
+
+
+class TestAutoTrainsEndToEnd:
+    def test_dryrun_auto_one_step(self):
+        """schedule="auto" decides, compiles, and executes one optimizer
+        step through launch/dryrun.py --run-step."""
+        env = subprocess_env(8)
+        env["REPRO_DRYRUN_DEVICES"] = "8"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "gpt2-moe", "--shape", "train_4k", "--seq", "64", "--batch",
+             "8", "--reduced", "--run-step"],
+            env=env, capture_output=True, text=True, timeout=900,
+            cwd=os.path.dirname(SRC))
+        assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+        assert "[step]" in r.stdout and "loss=" in r.stdout
+        assert "dry-run complete" in r.stdout

@@ -1,0 +1,66 @@
+"""Docs link-check: every relative markdown link must resolve on disk.
+
+    python tools/check_links.py [files...]        # default: README + docs/*.md
+
+No dependencies, no network: external (http/https/mailto) links are only
+syntax-checked; relative links (with optional #anchors) are resolved
+against the containing file and must point at an existing file or
+directory.  Exits 1 listing every broken link.  Run by the CI docs job
+and by tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) — ignores images' leading "!" (same resolution rules)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_file(path: str) -> list:
+    """Return [(lineno, target, reason), ...] for broken links in one file."""
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        in_code = False
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+            if in_code:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    broken.append((lineno, target, "missing file"))
+    return broken
+
+
+def main(argv) -> int:
+    files = argv or (["README.md"] + sorted(glob.glob("docs/*.md")))
+    n_links = 0
+    failures = []
+    for path in files:
+        if not os.path.exists(path):
+            failures.append((path, 0, path, "file not found"))
+            continue
+        with open(path, encoding="utf-8") as f:
+            n_links += len(LINK_RE.findall(f.read()))
+        for lineno, target, reason in check_file(path):
+            failures.append((path, lineno, target, reason))
+    for path, lineno, target, reason in failures:
+        print(f"BROKEN {path}:{lineno}: ({target}) {reason}")
+    print(f"checked {len(files)} files, {n_links} links, "
+          f"{len(failures)} broken")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
