@@ -1,0 +1,136 @@
+"""Sweep the wire-precision subsystem: (schedule x wire_dtype) wall time
+and error for one MoE layer, plus the extended analytic autosched pick.
+
+    PYTHONPATH=src python benchmarks/bench_comm_precision.py
+    PYTHONPATH=src python benchmarks/bench_comm_precision.py \
+        --mesh distinct --wire f32 bf16 fp8_e4m3 --tokens 2048
+
+Runs anywhere (fake CPU devices by default; honours a pre-set XLA_FLAGS
+device count).  On CPU the collectives are memcpys, so the wire encode /
+decode shows up as pure *overhead* — the bytes-on-fabric win needs real
+ICI/NVLink; what this sweep validates everywhere is that every
+(schedule x wire) combination lowers, runs, keeps routing bit-identical
+(drop_frac), and stays within the dtype's error envelope.  The same
+sweep on a TPU slice is the measured counterpart of
+``PerfModel.t_pipelined(..., wire_dtype=...)``.
+
+Emits ``name,us_per_call,derived`` CSV rows (the ``benchmarks/run.py``
+contract); ``#`` comment lines are comma-free so the runner skips them.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                              # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from benchmarks.common import time_fn                   # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="merged",
+                    choices=["merged", "distinct"],
+                    help="merged: (ep=4, model=2) with MP==ESP; distinct: "
+                         "(ep=2, esp=2, mp=2)")
+    ap.add_argument("--schedules", nargs="+",
+                    default=["baseline", "s1", "s2"])
+    ap.add_argument("--wire", nargs="+",
+                    default=["f32", "bf16", "fp8_e4m3"])
+    ap.add_argument("--pipeline-chunks", type=int, default=1,
+                    help="also chunk-pipeline each schedule body")
+    ap.add_argument("--tokens", type=int, default=1024)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--d-ff", type=int, default=256)
+    ap.add_argument("--n-experts", type=int, default=8)
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--backend", default=None, choices=["ref", "pallas"],
+                    help="pin the kernel backend (pallas = interpret "
+                         "mode off-TPU; the CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny preset for CI: one schedule, small layer")
+    args = ap.parse_args()
+    if args.smoke:
+        args.schedules = args.schedules[:1]
+        args.tokens = min(args.tokens, 256)
+        args.d_model = min(args.d_model, 32)
+        args.d_ff = min(args.d_ff, 64)
+        args.iters = min(args.iters, 2)
+
+    from dataclasses import replace
+
+    from repro.core import autosched
+    from repro.core.collectives import CommConfig
+    from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+    from repro.core.perfmodel import MoELayerShape, tpu_v5e_model
+    from repro.kernels.registry import KernelConfig
+    from repro.parallel.mesh import ParallelDims, make_mesh
+
+    if args.mesh == "merged":
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    else:
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+    sizes = dims.sizes(mesh)
+
+    kernel = (KernelConfig(backend=args.backend) if args.backend
+              else KernelConfig())
+    cfg0 = MoEConfig(d_model=args.d_model, d_ff=args.d_ff,
+                     n_experts=args.n_experts, top_k=args.top_k,
+                     capacity_factor=2.0, schedule="baseline",
+                     pipeline_chunks=args.pipeline_chunks, kernel=kernel)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, args.tokens, args.d_model))
+
+    print(f"# mesh={args.mesh} sizes={sizes} tokens={args.tokens} "
+          f"M={args.d_model} H={args.d_ff} E={args.n_experts} "
+          f"k={args.top_k} chunks={args.pipeline_chunks}")
+    for sched in args.schedules:
+        ref_y = ref_us = ref_drop = None
+        for wire in args.wire:
+            cfg = replace(cfg0, comm=CommConfig(wire_dtype=wire))
+            fn = jax.jit(lambda x, p, c=cfg, s=sched: apply_moe(
+                x, p, mesh=mesh, dims=dims, cfg=c, schedule=s))
+            y, aux = fn(x, params)
+            y = np.asarray(y)
+            drop = float(aux["drop_frac"])
+            if ref_y is None:
+                ref_y, ref_drop = y, drop
+            err = float(np.max(np.abs(y - ref_y)))
+            routing = "same" if drop == ref_drop else "CHANGED"
+            dt = time_fn(lambda: fn(x, params)[0].block_until_ready(),
+                         iters=args.iters)
+            us = dt * 1e6
+            ref_us = ref_us or us
+            print(f"comm_precision/{sched}/{wire},{us:.3f},"
+                  f"maxerr={err:.2e};drop={routing};"
+                  f"vs_f32={ref_us / us:.2f}x")
+
+    shape = MoELayerShape(
+        B=1, L=args.tokens, M=args.d_model, H=args.d_ff,
+        E=args.n_experts, k=args.top_k, f=2.0,
+        n_mp=sizes["mp"], n_esp=sizes["esp"], n_ep=sizes["ep"])
+    pm = tpu_v5e_model(sizes["ep"], sizes["esp"], sizes["mp"])
+    d = autosched.decide(shape, perf_model=pm,
+                         wire_candidates=autosched.AUTO_WIRE)
+    print(f"# analytic joint pick (tpu_v5e model): "
+          f"{d.schedule} x {d.n_chunks} chunks @ wire {d.wire_dtype}")
+    for sched in args.schedules:
+        for wire in ("f32", "bf16"):
+            t = pm.t_pipelined(shape, sched, 1, wire_dtype=wire)
+            print(f"#   predicted {sched:8s} @ {wire}: {t * 1e6:.2f} us")
+
+
+if __name__ == "__main__":
+    main()

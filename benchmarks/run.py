@@ -3,13 +3,25 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Analytic benches run
 in-process; measured multi-device benches run in subprocesses with 8 fake
 CPU devices (the main process must keep seeing 1 device).
+
+Every row is also collected into the canonical ``BENCH_pr3.json`` at the
+repo root — the machine-readable perf trajectory successive PRs diff
+against (schema: ``{"rows": [{"name", "us_per_call", "derived"}, ...]}``).
 """
 
 from __future__ import annotations
 
+import contextlib
+import io
+import json
 import os
 import subprocess
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):   # python benchmarks/run.py
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 IN_PROCESS = [
     "benchmarks.bench_fig1_comm_ratio",
@@ -22,14 +34,37 @@ SUBPROCESS = [
     "benchmarks.bench_fig6_perfmodel",
     "benchmarks.bench_table4_measured",
     "benchmarks.bench_table5_realworld",
+    "benchmarks.bench_comm_precision",
 ]
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pr3.json")
+
+
+def _collect(rows: list, line: str) -> None:
+    """Parse one ``name,us_per_call,derived`` CSV row into ``rows``."""
+    parts = line.split(",", 2)
+    if len(parts) != 3 or parts[0] in ("", "name"):
+        return
+    try:
+        us = float(parts[1])
+    except ValueError:
+        return
+    rows.append({"name": parts[0], "us_per_call": us,
+                 "derived": parts[2]})
 
 
 def main() -> None:
     from importlib import import_module
+    rows: list = []
     print("name,us_per_call,derived")
     for mod in IN_PROCESS:
-        import_module(mod).main()
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            import_module(mod).main()
+        for line in buf.getvalue().splitlines():
+            print(line)
+            _collect(rows, line)
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -44,6 +79,10 @@ def main() -> None:
         for line in r.stdout.splitlines():
             if "," in line:
                 print(line)
+                _collect(rows, line)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"rows": rows}, f, indent=1)
+    print(f"# wrote {len(rows)} rows to {os.path.basename(BENCH_JSON)}")
 
 
 if __name__ == '__main__':

@@ -1,9 +1,12 @@
-"""The ``schedule="auto"`` runtime: per-layer schedule + chunk decisions.
+"""The ``schedule="auto"`` runtime: per-layer (schedule, chunks, wire)
+decisions.
 
 Parm's Algorithm 1 picks S1 or S2 from the alpha-beta model; the
 pipelined bodies (``repro.core.pipeline``) add a second axis — how many
-micro-chunks to split the AlltoAll/FFN chain into.  This module owns
-that decision:
+micro-chunks to split the AlltoAll/FFN chain into — and the wire-format
+subsystem (``repro.core.collectives.CommConfig``) a third: how many
+bytes each element of those collectives puts on the fabric.  This
+module owns the joint decision:
 
   * **analytic** mode scores every (schedule, n_chunks) candidate with
     :meth:`repro.core.perfmodel.PerfModel.t_pipelined` (Algorithm 1's
@@ -29,15 +32,25 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
+from repro.core.perfmodel import (MoELayerShape, PerfModel, WIRE_BYTES,
+                                  tpu_v5e_model)
 from repro.core.pipeline import PIPELINE_OF
 
-#: (schedule, n_chunks) grids considered by default.  ``baseline`` is
-#: included in measured mode (it can win on tiny single-axis meshes) but
-#: never analytically — Algorithm 1 proves S1/S2 dominate it (§IV-B).
+#: (schedule, n_chunks, wire_dtype) grids considered by default.
+#: ``baseline`` is included in measured mode (it can win on tiny
+#: single-axis meshes) but never analytically — Algorithm 1 proves S1/S2
+#: dominate it (§IV-B).
 ANALYTIC_SCHEDULES = ("s1", "s2")
 MEASURED_SCHEDULES = ("baseline", "s1", "s2")
 DEFAULT_CHUNKS = (1, 2, 4, 8)
+#: wire dtypes scored by default (no compression; the legacy pair grid
+#: scores with wire_dtype=None, so decisions match the pre-wire runtime)
+DEFAULT_WIRE = ("f32",)
+#: candidates when ``CommConfig.wire_dtype == "auto"``.  fp8 is excluded
+#: on purpose: the analytic model knows only bytes, so it would always
+#: pick the narrowest dtype; fp8's accuracy cost must be opted into
+#: explicitly (``wire_dtype="fp8_e4m3"``), never chosen silently.
+AUTO_WIRE = ("f32", "bf16")
 
 
 @dataclass(frozen=True)
@@ -45,16 +58,20 @@ class ScheduleDecision:
     """The cached outcome of one auto-scheduling decision.
 
     ``schedule`` is the base schedule name (``baseline``/``s1``/``s2``),
-    ``n_chunks`` the micro-chunk count (1 = unchunked), ``source`` how it
-    was reached (``analytic`` / ``measured`` / ``forced``), and ``times``
-    the scored candidates as ``((schedule, n_chunks), seconds)`` pairs
-    sorted fastest-first.
+    ``n_chunks`` the micro-chunk count (1 = unchunked), ``wire_dtype``
+    the collective payload width, ``source`` how it was reached
+    (``analytic`` / ``measured`` / ``forced``), and ``times`` the scored
+    candidates as ``(candidate, seconds)`` pairs sorted fastest-first —
+    candidates are ``(schedule, n_chunks)`` pairs under the default
+    f32-only wire grid (back-compat) and ``(schedule, n_chunks,
+    wire_dtype)`` triples under a joint wire decision.
     """
 
     schedule: str
     n_chunks: int = 1
     source: str = "analytic"
     times: tuple = ()
+    wire_dtype: str = "f32"
 
     @property
     def body_name(self) -> str:
@@ -85,29 +102,46 @@ def cache_summary(exclude=()) -> str:
     for key, d in sorted(_CACHE.items(), key=lambda kv: repr(kv[0][0])):
         if key in exclude:
             continue
-        (shape, mode, _, _) = key
+        shape, mode = key[0], key[1]
         lines.append(
             f"autosched[{mode}] BxL={shape.B}x{shape.L} M={shape.M} "
             f"E={shape.E} ep/esp/mp={shape.n_ep}/{shape.n_esp}/{shape.n_mp}"
-            f" -> {d.schedule} x{d.n_chunks} chunks ({d.source})")
+            f" -> {d.schedule} x{d.n_chunks} chunks wire={d.wire_dtype}"
+            f" ({d.source})")
     return "\n".join(lines)
+
+
+def _norm(cand):
+    """Candidate -> (schedule, n_chunks, wire_dtype), defaulting f32."""
+    return cand if len(cand) == 3 else (cand[0], cand[1], "f32")
 
 
 def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
            mode: str = "analytic", chunk_candidates=DEFAULT_CHUNKS,
+           wire_candidates=DEFAULT_WIRE, schedules=None,
            measure: Optional[Callable] = None) -> ScheduleDecision:
-    """Pick (schedule, n_chunks) for one MoE layer shape, with caching.
+    """Pick (schedule, n_chunks, wire_dtype) for one MoE layer shape,
+    with caching.
 
-    ``measure`` (measured mode) maps a list of ``(schedule, n_chunks)``
-    candidates to ``{candidate: seconds}``; :func:`measure_candidates`
-    builds one from a live mesh.  The decision is cached on
-    ``(shape, mode, chunk_candidates, perf_model)`` — pass the same
-    arguments, get the identical (cached) decision back.
+    ``wire_candidates`` widens the grid to a joint comm-precision
+    decision (``AUTO_WIRE`` when ``CommConfig.wire_dtype == "auto"``);
+    with the default f32-only grid, candidates stay the legacy
+    ``(schedule, n_chunks)`` pairs.  ``schedules`` restricts the
+    schedule axis (a forced schedule that still wants a wire decision).
+    Exact ties break toward the *wider* wire dtype, so compression is
+    only picked where the model says the comm term actually shrinks the
+    layer time.  ``measure`` (measured mode) maps the candidate list to
+    ``{candidate: seconds}``; :func:`measure_candidates` builds one from
+    a live mesh.  The decision is cached on every argument — pass the
+    same arguments, get the identical (cached) decision back.
     """
     if mode not in ("analytic", "measured"):
         raise ValueError(f"unknown autosched mode {mode!r}")
     pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
-    key = (shape, mode, tuple(chunk_candidates), pm)
+    wire_candidates = tuple(wire_candidates)
+    joint_wire = wire_candidates != ("f32",)
+    key = (shape, mode, tuple(chunk_candidates), pm, wire_candidates,
+           None if schedules is None else tuple(schedules))
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
@@ -116,16 +150,32 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
         if measure is None:
             raise ValueError("measured mode needs a `measure` callable "
                              "(see autosched.measure_candidates)")
-        cands = [(s, n) for s in MEASURED_SCHEDULES
-                 for n in chunk_candidates]
+        scheds = tuple(schedules or MEASURED_SCHEDULES)
+        cands = [((s, n, w) if joint_wire else (s, n))
+                 for s in scheds for n in chunk_candidates
+                 for w in wire_candidates]
         times = dict(measure(cands))
     else:
-        times = {(s, n): pm.t_pipelined(shape, s, n)
-                 for s in ANALYTIC_SCHEDULES for n in chunk_candidates}
-    ranked = tuple(sorted(times.items(), key=lambda kv: kv[1]))
-    (sched, n_chunks), _ = ranked[0]
+        scheds = tuple(schedules or ANALYTIC_SCHEDULES)
+        # Legacy f32-only grid scores with wire_dtype=None (factor 1.0,
+        # the width the betas were fitted at) so default-config decisions
+        # are exactly PR 2's.  A joint grid scores each wire dtype at its
+        # true byte width relative to PerfModel.wire_bytes_ref — only the
+        # *ratios* between candidates decide the argmin.
+        times = {((s, n, w) if joint_wire else (s, n)):
+                 pm.t_pipelined(shape, s, n,
+                                wire_dtype=w if joint_wire else None)
+                 for s in scheds for n in chunk_candidates
+                 for w in wire_candidates}
+    # rank by time; exact ties prefer the wider wire (no silent
+    # compression), then candidate-grid order (stable sort).
+    ranked = tuple(sorted(
+        times.items(),
+        key=lambda kv: (kv[1], -WIRE_BYTES[_norm(kv[0])[2]])))
+    sched, n_chunks, wire = _norm(ranked[0][0])
     decision = ScheduleDecision(schedule=sched, n_chunks=n_chunks,
-                                source=mode, times=ranked)
+                                source=mode, times=ranked,
+                                wire_dtype=wire)
     _CACHE[key] = decision
     return decision
 
@@ -135,14 +185,15 @@ def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,
                        seed: int = 0) -> Callable:
     """Build a ``measure`` callable timing candidates on the live mesh.
 
-    Returns ``f(candidates) -> {(schedule, n_chunks): seconds}`` that
-    jits ``apply_moe`` once per candidate over synthetic data and records
-    median wall time.  ``tokens`` is the *global* pool (B*L of the real
-    layer): the nested ``apply_moe`` re-shards it over the same batch
-    axes, so each candidate runs at the true per-device token count.
-    Raises if every candidate fails; individual failures score ``inf``.
-    The imports are lazy to keep ``moe -> autosched`` one-directional at
-    module load.
+    Returns ``f(candidates) -> {candidate: seconds}`` — candidates are
+    ``(schedule, n_chunks)`` pairs or ``(schedule, n_chunks, wire_dtype)``
+    triples — that jits ``apply_moe`` once per candidate over synthetic
+    data and records median wall time.  ``tokens`` is the *global* pool
+    (B*L of the real layer): the nested ``apply_moe`` re-shards it over
+    the same batch axes, so each candidate runs at the true per-device
+    token count.  Raises if every candidate fails; individual failures
+    score ``inf``.  The imports are lazy to keep ``moe -> autosched``
+    one-directional at module load.
     """
 
     def _measure(candidates):
@@ -153,6 +204,7 @@ def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,
         import jax.numpy as jnp
         from dataclasses import replace
 
+        from repro.core.collectives import CommConfig
         from repro.core.moe import apply_moe, init_moe_params
 
         key = jax.random.PRNGKey(seed)
@@ -160,8 +212,11 @@ def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,
         x = jax.random.normal(jax.random.PRNGKey(seed + 1),
                               (1, tokens, d_model), jnp.float32)
         out, errors = {}, {}
-        for sched, n_chunks in candidates:
-            c = replace(cfg, schedule=sched, pipeline_chunks=n_chunks)
+        for cand in candidates:
+            sched, n_chunks, wire = _norm(cand)
+            c = replace(cfg, schedule=sched, pipeline_chunks=n_chunks,
+                        comm=CommConfig(wire_dtype=wire,
+                                        scaling=cfg.comm.scaling))
             fn = jax.jit(lambda x, p, c=c, s=sched: apply_moe(
                 x, p, mesh=mesh, dims=dims, cfg=c, schedule=s)[0])
             try:
@@ -173,10 +228,10 @@ def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,
                     fn(x, params).block_until_ready()
                     ts.append(_time.perf_counter() - t0)
                 ts.sort()
-                out[(sched, n_chunks)] = ts[len(ts) // 2]
+                out[cand] = ts[len(ts) // 2]
             except Exception as e:  # noqa: BLE001 — unlowerable candidate
-                out[(sched, n_chunks)] = float("inf")
-                errors[(sched, n_chunks)] = repr(e)
+                out[cand] = float("inf")
+                errors[cand] = repr(e)
         if errors and all(t == float("inf") for t in out.values()):
             raise RuntimeError(
                 "autosched measured calibration failed for every candidate: "

@@ -23,19 +23,176 @@ overlap the AllGather of chunk i with the AlltoAll of chunk i+1.  (The
 chunk-pipelined schedule bodies in ``repro.core.pipeline`` extend this
 same trick across each whole schedule.)
 
+Wire precision (§Perf, MegaScale-MoE-style): every bit-moving collective
+here has a ``wire_*`` twin that ships its payload in
+``CommConfig.wire_dtype`` (f32 passthrough, bf16 cast, or fp8_e4m3 with
+per-chunk absmax scales piggybacked on the same collective) and runs the
+backward collective in the same wire dtype.  See the block comment above
+:class:`CommConfig`.
+
 The pure layout primitives (``dump``/``undump_reduce`` and their
 expert-major ``*_em`` twins) are plain array reshapes usable outside any
 mesh; their docstring examples run under
 ``python -m doctest src/repro/core/collectives.py``.  The functions that
 issue ``lax`` collectives (``mp_split``, ``mp_all_gather``,
-``ep_all_to_all``, ``ep_esp_all_to_all``, ``saa_combine_allgather``)
-must be called from inside a shard_map body with the named axes bound.
+``ep_all_to_all``, ``ep_esp_all_to_all``, ``saa_combine_allgather`` and
+their ``wire_*`` twins) must be called from inside a shard_map body with
+the named axes bound.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
+import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core.perfmodel import WIRE_BYTES, WIRE_DTYPES  # noqa: F401
+
+
+# --- wire precision (comm dtype) ---------------------------------------------
+# Parm's schedules shrink *how many* elements the MP+EP+ESP collectives
+# move; the wire format shrinks *bytes per element* — the one lever the
+# schedules cannot touch.  Every bit-moving collective (the dispatch and
+# combine AlltoAlls, the output MP-AllGathers, the SAA chunks) can ship
+# its payload encoded as bf16 (plain cast) or fp8_e4m3 (per-chunk absmax
+# scale + cast, the scale bits piggybacked on the same collective).  Two
+# collectives are deliberately exempt and stay at compute width:
+#
+#   * the baseline's pre-gate ESP-AllGather — rounding it would change
+#     the gate's logits and therefore routing; wire precision must leave
+#     expert_idx/slot_idx bit-identical (tests/test_comm_precision.py);
+#   * the baseline's ESP-AllReduce — its summation happens in-network,
+#     so there is no decode point before the arithmetic.
+#
+# Gradients: the transposed collective in the backward pass uses the
+# same wire dtype (bf16 falls out of plain autodiff through the casts;
+# fp8 uses an explicit custom_vjp that re-encodes the cotangent with a
+# fresh absmax scale, since gradient magnitudes differ from activations).
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Wire format for the MoE collectives.
+
+    ``wire_dtype``: ``"f32"`` (no compression), ``"bf16"``,
+    ``"fp8_e4m3"``, or ``"auto"`` (the autoscheduler picks per layer
+    shape — resolved to a concrete dtype before any collective runs).
+    ``scaling`` applies to fp8 only: ``"per_chunk"`` rescales each
+    M-row by its absmax (recommended); ``"none"`` casts directly and
+    saturates at ±448.
+    """
+
+    wire_dtype: str = "f32"
+    scaling: str = "per_chunk"
+
+    def __post_init__(self):
+        if self.wire_dtype not in WIRE_DTYPES + ("auto",):
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}, "
+                             f"want one of {WIRE_DTYPES + ('auto',)}")
+        if self.scaling not in ("none", "per_chunk"):
+            raise ValueError(f"unknown scaling {self.scaling!r}")
+
+
+_FP8_MAX = 448.0   # largest finite float8_e4m3fn value
+_SCALE_TAIL = 4    # fp8 payload rows carry their f32 scale as 4 extra bytes
+
+
+def _fp8_dtype():
+    if not hasattr(jnp, "float8_e4m3fn"):  # pragma: no cover - old jax
+        raise NotImplementedError(
+            "this jax build has no float8_e4m3fn; use wire_dtype='bf16'")
+    return jnp.float8_e4m3fn
+
+
+def _active(comm) -> str:
+    wd = getattr(comm, "wire_dtype", "f32") if comm is not None else "f32"
+    if wd == "auto":
+        raise ValueError("CommConfig.wire_dtype='auto' must be resolved "
+                         "(autosched.decide) before reaching a collective")
+    return wd
+
+
+def wire_encode(x, comm: CommConfig | None):
+    """Encode ``x`` into its wire format (ready for a bit-moving
+    collective).  f32 is the identity; bf16 a cast; fp8_e4m3 a per-row
+    (absmax over the trailing M dim) scale + cast with the f32 scale
+    bitcast into ``_SCALE_TAIL`` extra fp8 elements appended along M —
+    so the scales ride the *same* collective as the payload."""
+    wd = _active(comm)
+    if wd == "f32":
+        return x
+    if wd == "bf16":
+        return x.astype(jnp.bfloat16)
+    f8 = _fp8_dtype()
+    xf = x.astype(jnp.float32)
+    if comm.scaling == "none":
+        # e4m3fn has no inf: clamp so out-of-range casts saturate at
+        # +-448 instead of producing NaN payloads.
+        return jnp.clip(xf, -_FP8_MAX, _FP8_MAX).astype(f8)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = lax.stop_gradient(jnp.maximum(amax, 1e-30) / _FP8_MAX)
+    payload = (xf / scale).astype(f8)
+    sbits = lax.bitcast_convert_type(        # (..., 1) f32 -> (..., 1, 4) u8
+        lax.bitcast_convert_type(scale, jnp.uint8), f8)
+    return jnp.concatenate(
+        [payload, sbits.reshape(sbits.shape[:-2] + (_SCALE_TAIL,))], axis=-1)
+
+
+def wire_decode(w, comm: CommConfig | None, out_dtype):
+    """Invert :func:`wire_encode` after the collective has moved ``w``
+    (bit-preserving, so the piggybacked fp8 scales decode exactly)."""
+    wd = _active(comm)
+    if wd in ("f32", "bf16"):
+        return w.astype(out_dtype)
+    if comm.scaling == "none":
+        return w.astype(out_dtype)
+    payload, sb = w[..., :-_SCALE_TAIL], w[..., -_SCALE_TAIL:]
+    scale = lax.bitcast_convert_type(
+        lax.bitcast_convert_type(
+            sb.reshape(sb.shape[:-1] + (1, _SCALE_TAIL)), jnp.uint8),
+        jnp.float32)
+    return (payload.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def _wire_moved(x, move, comm, *, bwd_move=None, bwd_post=None):
+    """Run a bit-moving collective ``move`` in the wire format, with the
+    backward collective in the same wire dtype.
+
+    f32 runs ``move`` raw; bf16 composes casts (autodiff then transposes
+    the collective on the bf16 cotangent for free).  fp8 needs a
+    custom_vjp: the cotangent's dynamic range differs from the forward
+    activations', so the backward pass re-encodes it with its own
+    absmax scales, moves it through ``bwd_move`` (default: ``move``,
+    correct for the self-transposing split==concat AlltoAlls), decodes,
+    and applies ``bwd_post`` (the local reduction the true transpose of
+    an AllGather needs).
+    """
+    wd = _active(comm)
+    if wd in ("f32", "bf16"):
+        # plain composition: vjp of the casts + collective is the
+        # transposed collective over the same wire dtype.
+        return wire_decode(move(wire_encode(x, comm)), comm, x.dtype)
+
+    dtype = x.dtype
+
+    def run(v):
+        return wire_decode(move(wire_encode(v, comm)), comm, dtype)
+
+    @jax.custom_vjp
+    def wired(v):
+        return run(v)
+
+    def fwd(v):
+        return run(v), None
+
+    def bwd(_, g):
+        mv = bwd_move or move
+        gd = wire_decode(mv(wire_encode(g, comm)), comm, dtype)
+        return ((bwd_post(gd) if bwd_post is not None else gd),)
+
+    wired.defvjp(fwd, bwd)
+    return wired(x)
 
 
 def _axes(axes):
@@ -160,6 +317,82 @@ def ep_all_to_all(x, ep_axes, *, split_axis=0, concat_axis=0):
                           tiled=True)
 
 
+# --- wire-format collective entry points -------------------------------------
+# The schedule bodies call these instead of the raw collectives above;
+# with the default CommConfig (f32) they are byte-identical passthroughs.
+
+def wire_ep_esp_all_to_all(x, ep_axes, esp_axes, comm=None, *,
+                           split_axis=0, concat_axis=0):
+    """:func:`ep_esp_all_to_all` with the payload in ``comm``'s wire
+    dtype (backward AlltoAll in the same dtype).  Requires
+    ``split_axis == concat_axis`` so the collective is its own
+    transpose — true of every schedule call site."""
+    assert split_axis == concat_axis, "wire a2a must be self-transposing"
+
+    def move(w):
+        return ep_esp_all_to_all(w, ep_axes, esp_axes,
+                                 split_axis=split_axis,
+                                 concat_axis=concat_axis)
+
+    return _wire_moved(x, move, comm)
+
+
+def wire_ep_all_to_all(x, ep_axes, comm=None, *, split_axis=0,
+                       concat_axis=0):
+    """:func:`ep_all_to_all` in the wire format (baseline schedule)."""
+    assert split_axis == concat_axis, "wire a2a must be self-transposing"
+
+    def move(w):
+        return ep_all_to_all(w, ep_axes, split_axis=split_axis,
+                             concat_axis=concat_axis)
+
+    return _wire_moved(x, move, comm)
+
+
+def wire_mp_all_gather(x, mp_axes, n_mp: int, comm=None, axis: int = 0):
+    """:func:`mp_all_gather` in the wire format.
+
+    Only for *post-combine output* gathers (S1's exit AllGather, the
+    baseline's would-be output path): the transpose of a tiled
+    AllGather is a reduce-scatter, realized for the fp8 backward as an
+    AlltoAll over the gathered dim followed by a local sum — so the
+    summation happens at full precision *after* decode.
+    """
+    if n_mp == 1:
+        return x
+
+    def move(w):
+        return lax.all_gather(w, _axes(mp_axes), axis=axis, tiled=True)
+
+    def bwd_move(w):
+        return lax.all_to_all(w, _axes(mp_axes), axis, axis, tiled=True)
+
+    def bwd_post(g):
+        s = g.shape
+        g = g.reshape(s[:axis] + (n_mp, s[axis] // n_mp) + s[axis + 1:])
+        return g.sum(axis=axis)
+
+    return _wire_moved(x, move, comm, bwd_move=bwd_move, bwd_post=bwd_post)
+
+
+def wire_all_gather_stacked(x, mp_axes, n_mp: int, comm=None,
+                            axis: int = 1):
+    """Untiled (stacking) AllGather in the wire format — the SAA /
+    ``s2_pipe`` per-chunk MP-AllGather, which inserts a new group dim at
+    ``axis``.  fp8 backward: AlltoAll over the group dim, decode, sum."""
+
+    def move(w):
+        return lax.all_gather(w, _axes(mp_axes), axis=axis, tiled=False)
+
+    def bwd_move(w):
+        return lax.all_to_all(w, _axes(mp_axes), axis, axis, tiled=True)
+
+    def bwd_post(g):
+        return g.sum(axis=axis)
+
+    return _wire_moved(x, move, comm, bwd_move=bwd_move, bwd_post=bwd_post)
+
+
 # --- expert-major buffer layout (§Perf A2) -----------------------------------
 # The (G, El, c, M) layout forces a G<->El transpose of the full combined
 # buffer on each side of the AlltoAll (XLA materializes it).  Keeping El
@@ -224,13 +457,16 @@ def from_expert_batch_em(h, G: int):
 # --- SAA: simultaneous AlltoAll + AllGather (S2 combine path) ---------------
 
 def saa_combine_allgather(y, ep_axes, esp_axes, mp_axes, *, n_ep: int,
-                          n_esp: int, n_mp: int, n_chunks: int = 4):
+                          n_esp: int, n_mp: int, n_chunks: int = 4,
+                          comm: CommConfig | None = None):
     """Chunked overlap of the combine EP&ESP-AlltoAll with MP-AllGather.
 
     y: (El, G, c, M) partial outputs headed back to their source ranks
     (expert-major layout, §Perf A2).  Returns (E, c * N_MP, M): combined
     outputs with the full capacity dim restored across the MP group,
     slot-ordered (mp_rank, slot) to match the pre-split dispatch buffer.
+    Both per-chunk collectives (the AlltoAll and the AllGather) ship in
+    ``comm``'s wire dtype.
     """
     El, G, c, M = y.shape
     n_chunks = max(1, min(n_chunks, c))
@@ -241,15 +477,15 @@ def saa_combine_allgather(y, ep_axes, esp_axes, mp_axes, *, n_ep: int,
     parts = []
     for i in range(n_chunks):
         chunk = lax.slice_in_dim(y, i * cs, (i + 1) * cs, axis=2)
-        back = ep_esp_all_to_all(chunk, ep_axes, esp_axes,
-                                 split_axis=1, concat_axis=1)
+        back = wire_ep_esp_all_to_all(chunk, ep_axes, esp_axes, comm,
+                                      split_axis=1, concat_axis=1)
         comb = undump_reduce_em(back, n_ep, n_esp)              # (E, cs, M)
         if n_mp == 1:
             parts.append(comb[:, None])                         # (E, 1, cs, M)
         else:
             # untiled gather -> explicit (E, N_MP, cs, M) so chunk order can
             # be restored to (mp_rank, chunk, slot) below.
-            parts.append(lax.all_gather(comb, _axes(mp_axes), axis=1,
-                                        tiled=False))
+            parts.append(wire_all_gather_stacked(comb, mp_axes, n_mp,
+                                                 comm, axis=1))
     stacked = jnp.stack(parts, axis=2)                # (E, N_MP, n_chunks, cs, M)
     return stacked.reshape(E, n_mp * c, M)

@@ -46,7 +46,45 @@ def capacity(tokens: int, cfg: GateConfig, align: int = 8) -> int:
     return max(align, -(-c // align) * align)
 
 
-def topk_gate(x, wg, cfg: GateConfig, cap: int):
+class GateResult:
+    """One token pool's routing decision, unpackable as the classic
+    ``(expert_idx, slot_idx, weights, aux)`` 4-tuple.
+
+    Also memoizes :func:`flat_slots` per ``(cap, n_experts)`` so the
+    dispatch scatter and combine gather of the same layer share a single
+    flat-index computation instead of each re-deriving it (they always
+    ask for the same key, so this halves the index math per MoE layer).
+    """
+
+    __slots__ = ("expert_idx", "slot_idx", "weights", "aux", "_flat")
+
+    def __init__(self, expert_idx, slot_idx, weights, aux):
+        self.expert_idx = expert_idx
+        self.slot_idx = slot_idx
+        self.weights = weights
+        self.aux = aux
+        self._flat = {}
+
+    def __iter__(self):
+        return iter((self.expert_idx, self.slot_idx, self.weights,
+                     self.aux))
+
+    def __getitem__(self, i):
+        return (self.expert_idx, self.slot_idx, self.weights, self.aux)[i]
+
+    def __len__(self):
+        return 4
+
+    def flat(self, cap: int, n_experts: int):
+        """Cached :func:`flat_slots` for this routing decision."""
+        key = (cap, n_experts)
+        if key not in self._flat:
+            self._flat[key] = flat_slots(self.expert_idx, self.slot_idx,
+                                         cap, n_experts)
+        return self._flat[key]
+
+
+def topk_gate(x, wg, cfg: GateConfig, cap: int) -> "GateResult":
     """Route tokens to experts.
 
     Args:
@@ -54,7 +92,7 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int):
       wg: (M, E) gate weights.
       cap: per-expert capacity for this token pool.
 
-    Returns:
+    Returns a :class:`GateResult` (unpacks as a 4-tuple):
       expert_idx: (S, k) int32 — chosen expert per (token, choice).
       slot_idx:   (S, k) int32 — position in the expert's capacity buffer;
                   >= cap means the token was dropped for that choice.
@@ -105,7 +143,7 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int):
         jnp.square(jax.nn.logsumexp(logits, axis=-1)))
     aux = {"aux_loss": aux_loss, "z_loss": z_loss, "load": load,
            "drop_frac": 1.0 - jnp.mean(kept.astype(jnp.float32))}
-    return expert_idx, slot_idx, weights, aux
+    return GateResult(expert_idx, slot_idx, weights, aux)
 
 
 def flat_slots(expert_idx, slot_idx, cap: int, n_experts: int):
@@ -116,24 +154,29 @@ def flat_slots(expert_idx, slot_idx, cap: int, n_experts: int):
 
 
 def dispatch(x, expert_idx, slot_idx, cap: int, n_experts: int,
-             kernel: Optional[KernelConfig] = None):
+             kernel: Optional[KernelConfig] = None, *, flat=None):
     """Scatter tokens into the (E, cap, M) capacity buffer.
 
     Dropped tokens (slot >= cap) are discarded.  The scatter itself is a
     registry op (``moe_dispatch``), so the backend follows ``kernel``.
+    ``flat`` short-circuits the index computation with a precomputed
+    :func:`flat_slots` (see :meth:`GateResult.flat`).
     """
     M = x.shape[-1]
-    flat = flat_slots(expert_idx, slot_idx, cap, n_experts)      # (S, k)
+    if flat is None:
+        flat = flat_slots(expert_idx, slot_idx, cap, n_experts)  # (S, k)
     op = get_op("moe_dispatch", cfg=kernel, n_slots=n_experts * cap)
     return op(x, flat).reshape(n_experts, cap, M)
 
 
 def combine(buf, expert_idx, slot_idx, weights, cap: int,
-            kernel: Optional[KernelConfig] = None):
+            kernel: Optional[KernelConfig] = None, *, flat=None):
     """Gather expert outputs back to token order and mix with gate weights
-    (registry op ``moe_combine``; dropped choices contribute zero)."""
+    (registry op ``moe_combine``; dropped choices contribute zero).
+    ``flat`` reuses a precomputed :func:`flat_slots` like :func:`dispatch`."""
     E = buf.shape[0]
     M = buf.shape[-1]
-    flat = flat_slots(expert_idx, slot_idx, cap, E)              # (S, k)
+    if flat is None:
+        flat = flat_slots(expert_idx, slot_idx, cap, E)          # (S, k)
     op = get_op("moe_combine", cfg=kernel)
     return op(buf.reshape(E * cap, M), flat, weights)

@@ -4,9 +4,10 @@
 It wires the schedule bodies (repro.core.schedules + the chunk-pipelined
 variants in repro.core.pipeline) into a shard_map over the caller's mesh,
 handles the decode-time fallback when the token count cannot be sharded
-over the EP axes, computes capacities, and — when ``schedule="auto"`` —
-consults the autoscheduler (repro.core.autosched) for the per-layer
-(schedule, n_chunks) decision, analytically or from a one-shot measured
+over the EP axes, computes capacities, and — when ``schedule="auto"``
+and/or ``CommConfig.wire_dtype="auto"`` — consults the autoscheduler
+(repro.core.autosched) for the per-layer (schedule, n_chunks,
+wire_dtype) decision, analytically or from a one-shot measured
 calibration.
 """
 
@@ -23,9 +24,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import autosched
+from repro.core.collectives import CommConfig
 from repro.core.gating import GateConfig, capacity
 from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
-from repro.core.pipeline import PIPELINE_OF, clamp_chunks
+from repro.core.pipeline import PIPELINE_OF, UNCHUNKED_OF, clamp_chunks
 from repro.core.schedules import BODY, MoEShardInfo, expert_ffn
 from repro.kernels.registry import KernelConfig
 from repro.parallel.mesh import ParallelDims, axis_size
@@ -49,6 +51,9 @@ class MoEConfig:
     autosched: str = "analytic"   # "auto" decision mode: analytic | measured
     act: str = "silu"             # expert activation ("silu" | "gelu")
     kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
+    comm: CommConfig = CommConfig()  # collective wire format (f32 default;
+    #   wire_dtype="auto" lets the autoscheduler pick f32-vs-bf16 jointly
+    #   with (schedule, n_chunks); fp8_e4m3 must be requested explicitly)
 
     def gate_config(self) -> GateConfig:
         return GateConfig(
@@ -186,9 +191,12 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
     align = max(8, n_mp)
     cap = max(align, -(-capacity(max(s_local, 1), gate_cfg) // align) * align)
 
+    comm = cfg.comm or CommConfig()
+    wire = comm.wire_dtype
     if use_fallback:
         sched = "dense_decode"
-    elif sched == "auto":
+        wire = "f32" if wire == "auto" else wire  # psum-only body: no wire
+    elif sched == "auto" or wire == "auto":
         shape = MoELayerShape(
             B=max(s_local // max(L, 1), 1), L=min(L, s_local), M=M,
             H=cfg.d_ff, E=cfg.n_experts, k=cfg.top_k,
@@ -198,6 +206,14 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         # against it keeps scored == executed (and dedups candidates).
         cands = tuple(sorted({clamp_chunks(cap // max(n_mp, 1), n)
                               for n in autosched.DEFAULT_CHUNKS}))
+        # A forced schedule with wire="auto" restricts the decision to
+        # that schedule (and the forced chunk count): only the wire axis
+        # is still free.
+        forced = None
+        if sched != "auto":
+            forced = (UNCHUNKED_OF.get(sched, sched),)
+            cands = (clamp_chunks(cap // max(n_mp, 1), n_chunks),)
+        wire_cands = (autosched.AUTO_WIRE if wire == "auto" else (wire,))
         # tokens_global: the nested apply_moe re-shards over the same
         # batch axes, so candidates are timed at the true per-device pool.
         measure = (autosched.measure_candidates(
@@ -205,8 +221,12 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
             if cfg.autosched == "measured" else None)
         decision = autosched.decide(shape, perf_model=perf_model,
                                     mode=cfg.autosched,
-                                    chunk_candidates=cands, measure=measure)
-        sched, n_chunks = decision.schedule, decision.n_chunks
+                                    chunk_candidates=cands,
+                                    wire_candidates=wire_cands,
+                                    schedules=forced, measure=measure)
+        if sched == "auto":
+            sched, n_chunks = decision.schedule, decision.n_chunks
+        wire = decision.wire_dtype if wire == "auto" else wire
     if not use_fallback and n_chunks > 1 and sched in PIPELINE_OF:
         # route chunked requests to the pipelined body of the same schedule
         sched = PIPELINE_OF[sched]
@@ -216,7 +236,8 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         mp_axes=tuple(dims.mp), n_ep=n_ep, n_esp=n_esp, n_mp=n_mp,
         tokens=s_local, cap=cap, gate=gate_cfg, act=cfg.act, glu=cfg.glu,
         saa_chunks=cfg.saa_chunks, pipeline_chunks=n_chunks,
-        kernel=cfg.kernel)
+        kernel=cfg.kernel,
+        comm=CommConfig(wire_dtype=wire, scaling=comm.scaling))
 
     body = _replicated_body if sched == "dense_decode" else BODY[sched]
     pspecs = moe_param_specs(cfg, mesh, dims)

@@ -28,6 +28,15 @@ PEAK_FLOPS_BF16 = 197e12  # per chip
 ALPHA_ICI = 1e-6          # per-collective startup, seconds
 DCI_BW = 6.25e9           # inter-pod data-center interconnect per chip (est.)
 
+# --- wire formats (repro.core.collectives.CommConfig) ------------------------
+# Bytes per element each wire dtype puts on the fabric.  The schedules can
+# compress the payload of every *bit-moving* collective (AlltoAlls,
+# output AllGathers) to one of these; the per-chunk fp8 scale piggyback
+# adds 4 bytes per M-row, negligible for production M and ignored here.
+
+WIRE_DTYPES = ("f32", "bf16", "fp8_e4m3")
+WIRE_BYTES = {"f32": 4.0, "bf16": 2.0, "fp8_e4m3": 1.0}
+
 
 @dataclass(frozen=True)
 class AlphaBeta:
@@ -113,24 +122,52 @@ class PerfModel:
     ag_mp: AlphaBeta             # MP-AllGather
     overlap: AlphaBeta           # overlapped EP&ESP-A2A + MP-AG (SAA phase)
     flops_per_s: float = PEAK_FLOPS_BF16  # per-chip dense compute rate
+    wire_bytes_ref: float = 2.0  # bytes/element the betas were fitted at
+
+    # --- wire-precision extension ------------------------------------------
+    def wire_factor(self, wire_dtype=None) -> float:
+        """Element-count multiplier for a wire dtype.
+
+        The betas are seconds per element *at* ``wire_bytes_ref`` bytes;
+        shipping a collective at a different width scales only the
+        bandwidth term (``alpha`` is payload-independent), which the
+        closed forms below apply by scaling the element count:
+
+        >>> ab = AlphaBeta(0.0, 1.0)
+        >>> m = PerfModel(ab, ab, ab, ab, ab, ab, wire_bytes_ref=2.0)
+        >>> m.wire_factor("bf16"), m.wire_factor("f32"), m.wire_factor()
+        (1.0, 2.0, 1.0)
+        """
+        if wire_dtype is None:
+            return 1.0
+        return WIRE_BYTES[wire_dtype] / self.wire_bytes_ref
 
     # --- closed forms ------------------------------------------------------
-    def t_baseline(self, s: MoELayerShape) -> float:
-        """Eq. (1): ESP-AllGather + ESP-AllReduce + 2 EP-AlltoAlls."""
+    def t_baseline(self, s: MoELayerShape, wire_dtype=None) -> float:
+        """Eq. (1): ESP-AllGather + ESP-AllReduce + 2 EP-AlltoAlls.
+
+        Only the AlltoAlls compress: the ESP-AllGather precedes the gate
+        (wire-rounding it would change routing) and the AllReduce does
+        its arithmetic in-network at compute width.
+        """
+        wf = self.wire_factor(wire_dtype)
         return (self.ag_esp(s.blm * s.n_esp)
                 + self.ar_esp(s.etm * s.n_esp)
-                + 2 * self.a2a_ep(s.etm * s.n_esp))
+                + 2 * self.a2a_ep(s.etm * s.n_esp * wf))
 
-    def t_s1(self, s: MoELayerShape) -> float:
-        """Eq. (11)/(13): two fused AlltoAlls + MP-AllGather(BLM)."""
-        return (2 * self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
-                + self.ag_mp(s.blm))
+    def t_s1(self, s: MoELayerShape, wire_dtype=None) -> float:
+        """Eq. (11)/(13): two fused AlltoAlls + MP-AllGather(BLM).
+        All three move post-gate payload, so all three compress."""
+        wf = self.wire_factor(wire_dtype)
+        return (2 * self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp * wf)
+                + self.ag_mp(s.blm * wf))
 
-    def t_s2(self, s: MoELayerShape) -> float:
+    def t_s2(self, s: MoELayerShape, wire_dtype=None) -> float:
         """Eq. (14): fused AlltoAll + SAA phase + MP-AllGather(ETM)."""
-        return (self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp)
-                + self.overlap(s.etm * s.n_esp / s.n_mp)
-                + self.ag_mp(s.etm))
+        wf = self.wire_factor(wire_dtype)
+        return (self.a2a_ep_esp(s.etm * s.n_esp / s.n_mp * wf)
+                + self.overlap(s.etm * s.n_esp / s.n_mp * wf)
+                + self.ag_mp(s.etm * wf))
 
     # --- compute + pipeline extension (repro.core.pipeline) ----------------
     def t_ffn(self, s: MoELayerShape, schedule: str = "s1") -> float:
@@ -147,33 +184,40 @@ class PerfModel:
             slots /= s.n_mp
         return 6.0 * slots * s.M * s.H / s.n_esp / self.flops_per_s
 
-    def _chain(self, s: MoELayerShape, schedule: str):
+    def _chain(self, s: MoELayerShape, schedule: str, wire_dtype=None):
         """(fixed, chain_alpha, chain_beta_time) for one schedule body.
 
         ``fixed`` is the serial time outside the chunkable AlltoAll/FFN
         chain; the chain's startup (``alpha``, charged once per chunk)
         and bandwidth time (split across chunks) are returned separately.
+        ``wire_dtype`` scales the bandwidth terms of the compressible
+        collectives (AlltoAlls + output AllGathers; the baseline's
+        pre-gate AllGather and in-network AllReduce stay at full width —
+        see :meth:`t_baseline`).
         """
+        wf = self.wire_factor(wire_dtype)
         y = s.etm * s.n_esp
         if schedule == "baseline":
             return (self.ag_esp(s.blm * s.n_esp),
                     2 * self.a2a_ep.alpha + self.ar_esp.alpha,
-                    2 * self.a2a_ep.beta * y + self.ar_esp.beta * y)
+                    2 * self.a2a_ep.beta * y * wf + self.ar_esp.beta * y)
         y /= s.n_mp
         if schedule in ("s1", "s1_seqpar"):
-            fixed = 0.0 if schedule == "s1_seqpar" else self.ag_mp(s.blm)
+            fixed = 0.0 if schedule == "s1_seqpar" \
+                else self.ag_mp(s.blm * wf)
             return (fixed, 2 * self.a2a_ep_esp.alpha,
-                    2 * self.a2a_ep_esp.beta * y)
+                    2 * self.a2a_ep_esp.beta * y * wf)
         if schedule == "s2":
             return (0.0,
                     (self.a2a_ep_esp.alpha + self.overlap.alpha
                      + self.ag_mp.alpha),
-                    (self.a2a_ep_esp.beta * y + self.overlap.beta * y
-                     + self.ag_mp.beta * s.etm))
+                    (self.a2a_ep_esp.beta * y * wf
+                     + self.overlap.beta * y * wf
+                     + self.ag_mp.beta * s.etm * wf))
         raise ValueError(f"unknown schedule {schedule!r}")
 
     def t_pipelined(self, s: MoELayerShape, schedule: str = "s1",
-                    n_chunks: int = 1) -> float:
+                    n_chunks: int = 1, wire_dtype=None) -> float:
         """Fill/drain pipeline time for a chunked schedule body.
 
         With ``n`` chunks, each chunk's communication costs
@@ -191,17 +235,24 @@ class PerfModel:
         ...                   f=1.0, n_mp=2, n_esp=2, n_ep=2)
         >>> m.t_pipelined(s, "s1", 4) < m.t_pipelined(s, "s1", 1)
         True
+
+        A narrower wire dtype shrinks the chain's bandwidth term (never
+        the alphas or the FFN), so it can only help:
+
+        >>> m.t_pipelined(s, "s1", 4, "bf16") <= m.t_pipelined(s, "s1", 4)
+        True
         """
         n = max(1, n_chunks)
-        fixed, c_alpha, c_beta = self._chain(s, schedule)
+        fixed, c_alpha, c_beta = self._chain(s, schedule, wire_dtype)
         tc = c_beta / n + c_alpha
         tf = self.t_ffn(s, schedule) / n
         return fixed + tc + (n - 1) * max(tc, tf) + tf
 
     def pick_chunks(self, s: MoELayerShape, schedule: str = "s1",
-                    candidates=(1, 2, 4, 8)) -> int:
+                    candidates=(1, 2, 4, 8), wire_dtype=None) -> int:
         """Chunk count minimizing :meth:`t_pipelined` for one schedule."""
-        return min(candidates, key=lambda n: self.t_pipelined(s, schedule, n))
+        return min(candidates, key=lambda n: self.t_pipelined(
+            s, schedule, n, wire_dtype))
 
     # --- Algorithm 1 --------------------------------------------------------
     def algorithm1(self, s: MoELayerShape) -> str:
@@ -290,6 +341,8 @@ def tpu_v5e_model(n_ep: int, n_esp: int, n_mp: int, bytes_per_el: int = 2,
         # SAA hides the faster of the two transfers; model the overlapped
         # phase as the a2a beta alone (AllGather rides in its shadow).
         overlap=a2a_combined,
+        # betas above bake in bytes_per_el, so wire factors are relative
+        wire_bytes_ref=float(bytes_per_el),
     )
 
 

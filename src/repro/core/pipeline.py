@@ -72,22 +72,25 @@ def baseline_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     E = info.gate.n_experts
     g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)        # (S*Ns, M)
     cap_g = info.cap * Ns
-    eidx, slot, w, aux = topk_gate(g, wg, info.gate, cap_g)
-    d = dispatch(g, eidx, slot, cap_g, E, info.kernel)          # (E, T*Ns, M)
+    gate = topk_gate(g, wg, info.gate, cap_g)
+    eidx, slot, w, aux = gate
+    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
+                 flat=gate.flat(cap_g, E))                      # (E, T*Ns, M)
     n = clamp_chunks(cap_g, info.pipeline_chunks)
     parts = []
     for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
         cs = ch.shape[1]
         sb = ch.reshape(Ne, E // Ne, cs, -1)
-        rb = coll.ep_all_to_all(sb, info.ep_axes)               # (Ne, El, cs, M)
+        rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)
         xb = coll.to_expert_batch(rb)                           # (El, Ne*cs, M)
         h = expert_ffn(xb, w1, w3, w2, info)
         h = lax.psum(h, info.esp_axes)
-        back = coll.ep_all_to_all(coll.from_expert_batch(h, Ne),
-                                  info.ep_axes)
+        back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
+                                       info.ep_axes, info.comm)
         parts.append(back.reshape(E, cs, -1))
     full = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
-    out = combine(full, eidx, slot, w, cap_g, info.kernel)
+    out = combine(full, eidx, slot, w, cap_g, info.kernel,
+                  flat=gate.flat(cap_g, E))
     y = coll.mp_split(out, info.esp_axes, Ns, axis=0)           # (S, M)
     return y, _aux_mean(aux, info)
 
@@ -103,24 +106,30 @@ def s1_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo, *,
     E = info.gate.n_experts
     xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
     c1 = info.cap if seqpar else info.cap // Nm
-    eidx, slot, w, aux = topk_gate(xs, wg, info.gate, c1)
-    d = dispatch(xs, eidx, slot, c1, E, info.kernel)            # (E, c1, M)
+    gate = topk_gate(xs, wg, info.gate, c1)
+    eidx, slot, w, aux = gate
+    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
+                 flat=gate.flat(c1, E))                         # (E, c1, M)
     n = clamp_chunks(c1, info.pipeline_chunks)
     parts = []
     for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
         sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
-        rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                    split_axis=1, concat_axis=1)
+        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                         info.comm, split_axis=1,
+                                         concat_axis=1)
         xb = coll.to_expert_batch_em(rb)                        # (El, G*cs, M)
         h = expert_ffn(xb, w1, w3, w2, info)
-        back = coll.ep_esp_all_to_all(
+        back = coll.wire_ep_esp_all_to_all(
             coll.from_expert_batch_em(h, info.combined_group),
-            info.ep_axes, info.esp_axes, split_axis=1, concat_axis=1)
+            info.ep_axes, info.esp_axes, info.comm, split_axis=1,
+            concat_axis=1)
         parts.append(coll.undump_reduce_em(back, Ne, Ns))       # (E, cs, M)
     mine = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
-    y = combine(mine, eidx, slot, w, c1, info.kernel)           # (S/Nm, M)
+    y = combine(mine, eidx, slot, w, c1, info.kernel,
+                flat=gate.flat(c1, E))                          # (S/Nm, M)
     if not seqpar:
-        y = coll.mp_all_gather(y, info.mp_axes, Nm, axis=0)
+        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm,
+                                    axis=0)
     return y, _aux_mean(aux, info)
 
 
@@ -134,33 +143,39 @@ def s2_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     in the shadow of later chunks' dispatch+FFN."""
     Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
     E = info.gate.n_experts
-    eidx, slot, w, aux = topk_gate(x, wg, info.gate, info.cap)
-    d = dispatch(x, eidx, slot, info.cap, E, info.kernel)       # (E, T, M)
+    gate = topk_gate(x, wg, info.gate, info.cap)
+    eidx, slot, w, aux = gate
+    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
+                 flat=gate.flat(info.cap, E))                   # (E, T, M)
     ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)             # (E, T/Nm, M)
     c = ds.shape[1]
     n = clamp_chunks(c, info.pipeline_chunks)
     parts = []
     for ch in _chunks(ds, n, axis=1):                           # (E, cs, M)
         sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
-        rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                    split_axis=1, concat_axis=1)
+        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                         info.comm, split_axis=1,
+                                         concat_axis=1)
         xb = coll.to_expert_batch_em(rb)
         h = expert_ffn(xb, w1, w3, w2, info)
         y4 = coll.from_expert_batch_em(h, info.combined_group)
-        back = coll.ep_esp_all_to_all(y4, info.ep_axes, info.esp_axes,
-                                      split_axis=1, concat_axis=1)
+        back = coll.wire_ep_esp_all_to_all(y4, info.ep_axes,
+                                           info.esp_axes, info.comm,
+                                           split_axis=1, concat_axis=1)
         comb = coll.undump_reduce_em(back, Ne, Ns)              # (E, cs, M)
         if Nm == 1:
             parts.append(comb[:, None])                         # (E, 1, cs, M)
         else:
-            parts.append(lax.all_gather(comb, tuple(info.mp_axes), axis=1,
-                                        tiled=False))           # (E, Nm, cs, M)
+            parts.append(coll.wire_all_gather_stacked(
+                comb, tuple(info.mp_axes), Nm, info.comm,
+                axis=1))                                        # (E, Nm, cs, M)
     # (E, Nm, n, cs, M) -> (E, Nm * c, M): position mp*c + i*cs + s is the
     # original (mp_rank, slot) order, so the layout is n_chunks-invariant
     # (same bookkeeping as collectives.saa_combine_allgather).
     stacked = jnp.stack(parts, axis=2)
     full = stacked.reshape(E, Nm * c, -1)                       # (E, T, M)
-    y = combine(full, eidx, slot, w, info.cap, info.kernel)     # (S, M)
+    y = combine(full, eidx, slot, w, info.cap, info.kernel,
+                flat=gate.flat(info.cap, E))                    # (S, M)
     return y, _aux_mean(aux, info)
 
 

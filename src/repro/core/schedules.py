@@ -24,6 +24,7 @@ from dataclasses import dataclass
 from jax import lax
 
 from repro.core import collectives as coll
+from repro.core.collectives import CommConfig
 from repro.core.gating import GateConfig, combine, dispatch, topk_gate
 from repro.kernels.registry import KernelConfig, get_op
 
@@ -49,6 +50,7 @@ class MoEShardInfo:
     saa_chunks: int = 4  # SAA pipeline depth (1 = no overlap, AAS)
     pipeline_chunks: int = 1  # micro-chunk count for the *_pipe bodies
     kernel: KernelConfig = KernelConfig()  # hot-path op backend + tiles
+    comm: CommConfig = CommConfig()  # wire dtype for the collectives
 
     @property
     def combined_group(self):
@@ -82,21 +84,27 @@ def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     Ne, Ns = info.n_ep, info.n_esp
     E = info.gate.n_experts
     # ESP-AllGather of the raw input (cost AG(B*L*M*N_ESP), Eq. 1).
+    # Deliberately NOT wire-compressed: it feeds the gate, and wire
+    # rounding pre-gate tokens would change routing decisions.
     g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)       # (S*Ns, M)
     cap_g = info.cap * Ns
-    eidx, slot, w, aux = topk_gate(g, wg, info.gate, cap_g)
-    d = dispatch(g, eidx, slot, cap_g, E, info.kernel)         # (E, T*Ns, M)
-    # EP-AlltoAll dispatch (cost A2A(E*T*M*N_ESP)).
+    gate = topk_gate(g, wg, info.gate, cap_g)
+    eidx, slot, w, aux = gate
+    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
+                 flat=gate.flat(cap_g, E))                     # (E, T*Ns, M)
+    # EP-AlltoAll dispatch (cost A2A(E*T*M*N_ESP), wire dtype).
     sb = d.reshape(Ne, E // Ne, cap_g, -1)
-    rb = coll.ep_all_to_all(sb, info.ep_axes)                  # (Ne, El, T*Ns, M)
+    rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)  # (Ne, El, T*Ns, M)
     xb = coll.to_expert_batch(rb)                              # (El, Ne*T*Ns, M)
     h = expert_ffn(xb, w1, w3, w2, info)
-    # ESP-AllReduce of partial sums (cost AR(E*T*M*N_ESP)).
+    # ESP-AllReduce of partial sums (cost AR(E*T*M*N_ESP)).  In-network
+    # arithmetic: no decode point, so it stays at compute width.
     h = lax.psum(h, info.esp_axes)
-    # EP-AlltoAll combine (cost A2A(E*T*M*N_ESP)).
-    back = coll.ep_all_to_all(coll.from_expert_batch(h, Ne), info.ep_axes)
+    # EP-AlltoAll combine (cost A2A(E*T*M*N_ESP), wire dtype).
+    back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
+                                   info.ep_axes, info.comm)
     out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g,
-                  info.kernel)
+                  info.kernel, flat=gate.flat(cap_g, E))
     # ESP-Split: free forward, AllGather in backward (paper Fig. 3 note).
     y = coll.mp_split(out, info.esp_axes, Ns, axis=0)          # (S, M)
     return y, _aux_mean(aux, info)
@@ -114,25 +122,32 @@ def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
     # Under the seqpar contract info.tokens/info.cap already describe the
     # MP-split pool; otherwise the per-shard capacity is T / N_MP.
     c1 = info.cap if seqpar else info.cap // Nm
-    eidx, slot, w, aux = topk_gate(xs, wg, info.gate, c1)
-    d = dispatch(xs, eidx, slot, c1, E, info.kernel)           # (E, T/Nm, M)
-    # EP&ESP-AlltoAll dispatch (Dump + fused AlltoAll; cost A2A(ETM*Ns/Nm)).
-    # Expert-major (El, G, c, M) buffers: the expert-batch view is a free
-    # reshape instead of a full-buffer relayout (§Perf A2).
+    gate = topk_gate(xs, wg, info.gate, c1)
+    eidx, slot, w, aux = gate
+    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
+                 flat=gate.flat(c1, E))                        # (E, T/Nm, M)
+    # EP&ESP-AlltoAll dispatch (Dump + fused AlltoAll; cost A2A(ETM*Ns/Nm),
+    # wire dtype).  Expert-major (El, G, c, M) buffers: the expert-batch
+    # view is a free reshape instead of a full-buffer relayout (§Perf A2).
     sb = coll.dump_em(d, Ne, Ns)                               # (El, G, c1, M)
-    rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                split_axis=1, concat_axis=1)
+    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                     info.comm, split_axis=1,
+                                     concat_axis=1)
     xb = coll.to_expert_batch_em(rb)                           # (El, G*c1, M)
     h = expert_ffn(xb, w1, w3, w2, info)
-    # EP&ESP-AlltoAll combine + local ESP reduction (cost A2A(ETM*Ns/Nm)).
-    back = coll.ep_esp_all_to_all(
+    # EP&ESP-AlltoAll combine + local ESP reduction (cost A2A(ETM*Ns/Nm),
+    # wire dtype; the ESP partial-sum reduction happens after decode).
+    back = coll.wire_ep_esp_all_to_all(
         coll.from_expert_batch_em(h, info.combined_group),
-        info.ep_axes, info.esp_axes, split_axis=1, concat_axis=1)
+        info.ep_axes, info.esp_axes, info.comm, split_axis=1,
+        concat_axis=1)
     mine = coll.undump_reduce_em(back, Ne, Ns)                 # (E, c1, M)
-    y = combine(mine, eidx, slot, w, c1, info.kernel)          # (S/Nm, M)
+    y = combine(mine, eidx, slot, w, c1, info.kernel,
+                flat=gate.flat(c1, E))                         # (S/Nm, M)
     if not seqpar:
-        # MP-AllGather to restore the replicated contract (cost AG(BLM)).
-        y = coll.mp_all_gather(y, info.mp_axes, Nm, axis=0)
+        # MP-AllGather to restore the replicated contract (cost AG(BLM),
+        # wire dtype — post-combine outputs, routing already done).
+        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm, axis=0)
     return y, _aux_mean(aux, info)
 
 
@@ -143,20 +158,26 @@ def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
     combine EP&ESP-AlltoAll with the MP-AllGather(ETM) via SAA."""
     Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
     E = info.gate.n_experts
-    eidx, slot, w, aux = topk_gate(x, wg, info.gate, info.cap)
-    d = dispatch(x, eidx, slot, info.cap, E, info.kernel)      # (E, T, M)
+    gate = topk_gate(x, wg, info.gate, info.cap)
+    eidx, slot, w, aux = gate
+    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
+                 flat=gate.flat(info.cap, E))                  # (E, T, M)
     ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)            # (E, T/Nm, M)
     sb = coll.dump_em(ds, Ne, Ns)                              # (El, G, c, M)
-    rb = coll.ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                split_axis=1, concat_axis=1)
+    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                     info.comm, split_axis=1,
+                                     concat_axis=1)
     xb = coll.to_expert_batch_em(rb)
     h = expert_ffn(xb, w1, w3, w2, info)
     y4 = coll.from_expert_batch_em(h, info.combined_group)     # (El, G, T/Nm, M)
-    # SAA: combine-AlltoAll chunks overlapped with MP-AllGather (Fig. 5).
+    # SAA: combine-AlltoAll chunks overlapped with MP-AllGather (Fig. 5),
+    # every chunk of both collectives in the wire dtype.
     full = coll.saa_combine_allgather(
         y4, info.ep_axes, info.esp_axes, info.mp_axes,
-        n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks)  # (E, T, M)
-    y = combine(full, eidx, slot, w, info.cap, info.kernel)    # (S, M)
+        n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks,
+        comm=info.comm)                                        # (E, T, M)
+    y = combine(full, eidx, slot, w, info.cap, info.kernel,
+                flat=gate.flat(info.cap, E))                   # (S, M)
     return y, _aux_mean(aux, info)
 
 

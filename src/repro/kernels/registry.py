@@ -12,8 +12,10 @@ fetched with ``get_op(name, backend=...)``.  Backends:
   * ``"pallas"`` — the Pallas TPU kernels.  On non-TPU backends they run
     in interpret mode (Python emulation) unless ``KernelConfig.interpret``
     pins it.  ``pallas_call`` has no autodiff rule, so every pallas op is
-    wrapped in a ``custom_vjp`` whose backward recomputes through the ref
-    oracle — grads flow through schedule bodies regardless of backend.
+    wrapped in a ``custom_vjp``: ``moe_dispatch``/``moe_combine`` use
+    their closed-form transposes (a gather / a scatter + weight dot),
+    the rest recompute through the ref oracle — grads flow through
+    schedule bodies regardless of backend.
   * ``"auto"``   — resolve at call time: ``pallas`` on TPU, ``ref``
     otherwise (overridable with ``REPRO_KERNEL_BACKEND``).  This is the
     default everywhere, so tests/CPU dry-runs stay on jnp while TPU runs
@@ -184,6 +186,62 @@ def _expert_ffn_pallas(cfg, static):
 
 
 # --- moe_dispatch / moe_combine ----------------------------------------------
+# The pallas backends of these two ops do NOT use the ref-recompute VJP:
+# both have closed-form transposes that are strictly cheaper than
+# re-tracing the oracle.  Dispatch is a scatter-add of each token into
+# its flat slots, so its backward w.r.t. the token stream is the gather
+# of the output cotangent at the same slots; combine is a weighted
+# gather, so its backward is a scatter (w.r.t. the buffer) plus a dot
+# (w.r.t. the weights).  ``flat_idx`` is integral — cotangent None.
+
+def _dispatch_analytic_vjp(fwd_fn: Callable, n_slots: int) -> Callable:
+    @jax.custom_vjp
+    def op(x, flat_idx):
+        return fwd_fn(x, flat_idx)
+
+    def fwd(x, flat_idx):
+        return fwd_fn(x, flat_idx), flat_idx
+
+    def bwd(flat_idx, g):
+        # row n_slots of the padded cotangent is the drop sentinel: zero
+        gpad = jnp.concatenate(
+            [g, jnp.zeros((1, g.shape[-1]), g.dtype)], axis=0)
+        return gpad[flat_idx].sum(axis=1), None   # (S, k, M) -> (S, M)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def _combine_analytic_vjp(fwd_fn: Callable) -> Callable:
+    @jax.custom_vjp
+    def op(buf, flat_idx, weights):
+        return fwd_fn(buf, flat_idx, weights)
+
+    def fwd(buf, flat_idx, weights):
+        return fwd_fn(buf, flat_idx, weights), (buf, flat_idx, weights)
+
+    def bwd(res, g):
+        buf, flat_idx, weights = res
+        n_slots, M = buf.shape
+        S, k = flat_idx.shape
+        kept = flat_idx < n_slots
+        w = jnp.where(kept, weights, 0.0).astype(buf.dtype)
+        # d/d buf: scatter-add of w[s,j] * g[s] into the flat slots (the
+        # dispatch scatter, drop sentinel row discarded).
+        src = (w[:, :, None] * g[:, None, :].astype(buf.dtype))
+        cot_buf = jnp.zeros((n_slots + 1, M), buf.dtype).at[
+            flat_idx.reshape(-1)].add(src.reshape(S * k, M),
+                                      mode="drop")[:-1]
+        # d/d weights: the gathered rows dotted with the cotangent.
+        vals = buf[jnp.minimum(flat_idx, n_slots - 1).reshape(-1)]
+        cot_w = jnp.einsum("sm,skm->sk", g.astype(buf.dtype),
+                           vals.reshape(S, k, M))
+        cot_w = jnp.where(kept, cot_w, 0.0).astype(weights.dtype)
+        return cot_buf, None, cot_w
+
+    op.defvjp(fwd, bwd)
+    return op
+
 
 @register("moe_dispatch", "ref")
 def _moe_dispatch_ref(cfg, static):
@@ -198,8 +256,7 @@ def _moe_dispatch_pallas(cfg, static):
     fwd = functools.partial(
         _dispatch_mod.moe_dispatch, n_slots=n_slots, block_s=cfg.block_s,
         interpret=cfg.interpret)
-    return jax.jit(_with_ref_vjp(
-        fwd, lambda x, flat_idx: ref.moe_dispatch_ref(x, flat_idx, n_slots)))
+    return jax.jit(_dispatch_analytic_vjp(fwd, n_slots))
 
 
 @register("moe_combine", "ref")
@@ -211,7 +268,7 @@ def _moe_combine_ref(cfg, static):
 def _moe_combine_pallas(cfg, static):
     fwd = functools.partial(_dispatch_mod.moe_combine, block_s=cfg.block_s,
                             interpret=cfg.interpret)
-    return jax.jit(_with_ref_vjp(fwd, ref.moe_combine_ref))
+    return jax.jit(_combine_analytic_vjp(fwd))
 
 
 # --- rmsnorm -----------------------------------------------------------------

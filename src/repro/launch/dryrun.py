@@ -90,7 +90,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
               saa_chunks: int = None, seq_parallel: bool = False,
               pipeline_chunks: int = None, run_step: bool = False,
               reduced: bool = False, seq: int = None,
-              batch_size: int = None) -> dict:
+              batch_size: int = None, wire_dtype: str = None) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -109,6 +109,11 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     if pipeline_chunks is not None and cfg.moe is not None:
         cfg = replace(cfg, moe=replace(cfg.moe,
                                        pipeline_chunks=pipeline_chunks))
+    if wire_dtype is not None and cfg.moe is not None:
+        from repro.core.collectives import CommConfig
+        cfg = replace(cfg, moe=replace(
+            cfg.moe, comm=replace(cfg.moe.comm or CommConfig(),
+                                  wire_dtype=wire_dtype)))
     shape = INPUT_SHAPES[shape_name]
     if seq or batch_size:
         shape = dataclasses.replace(
@@ -139,9 +144,13 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
 
     sched = schedule
     chunks_pick = cfg.moe.pipeline_chunks if cfg.moe is not None else 0
-    if cfg.moe is not None and not sched and cfg.moe.schedule == "auto":
+    wire_pick = (cfg.moe.comm.wire_dtype if cfg.moe is not None
+                 else "n/a")
+    sched_auto = (cfg.moe is not None and not sched
+                  and cfg.moe.schedule == "auto")
+    if cfg.moe is not None and (sched_auto or wire_pick == "auto"):
         from repro.core.gating import capacity
-        from repro.core.pipeline import clamp_chunks
+        from repro.core.pipeline import UNCHUNKED_OF, clamp_chunks
 
         s_local = max(shape.global_batch * (
             shape.seq_len if shape.kind != "decode" else 1) // max(nb, 1), 1)
@@ -153,13 +162,29 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
                            // align) * align)
         cands = tuple(sorted({clamp_chunks(cap // max(sizes["mp"], 1), n)
                               for n in autosched.DEFAULT_CHUNKS}))
+        forced = None
+        if not sched_auto:
+            # forced schedule + wire="auto": wire-only decision, exactly
+            # as apply_moe will make it
+            base = sched or cfg.moe.schedule
+            forced = (UNCHUNKED_OF.get(base, base),)
+            cands = (clamp_chunks(cap // max(sizes["mp"], 1),
+                                  cfg.moe.pipeline_chunks),)
+        wire_cands = (autosched.AUTO_WIRE if wire_pick == "auto"
+                      else (wire_pick,))
         decision = autosched.decide(MoELayerShape(
             B=1, L=s_local, M=cfg.d_model, H=cfg.moe.d_ff,
             E=cfg.moe.n_experts, k=cfg.moe.top_k,
             f=cfg.moe.capacity_factor, n_mp=sizes["mp"],
             n_esp=sizes["esp"], n_ep=sizes["ep"]),
-            chunk_candidates=cands)
-        sched_pick, chunks_pick = decision.schedule, decision.n_chunks
+            chunk_candidates=cands, wire_candidates=wire_cands,
+            schedules=forced)
+        if sched_auto:
+            sched_pick, chunks_pick = decision.schedule, decision.n_chunks
+        else:
+            sched_pick = sched or cfg.moe.schedule
+        if wire_pick == "auto":
+            wire_pick = decision.wire_dtype
     else:
         sched_pick = sched or (cfg.moe.schedule if cfg.moe is not None
                                else "n/a")
@@ -240,6 +265,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         _, _, metrics = compiled(params, opt_state, concrete)
         step_metrics = {k: float(v) for k, v in metrics.items()}
         print(f"[step] {arch} x {shape_name} sched={sched_pick} "
+              f"wire={wire_pick} "
               f"loss={step_metrics.get('loss', float('nan')):.4f}",
               flush=True)
 
@@ -282,6 +308,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         "mesh": "multi" if multi_pod else "single",
         "variant": (variant + ("+reduced" if reduced else "")).lstrip("+"),
         "schedule": sched_pick, "pipeline_chunks": chunks_pick,
+        "wire_dtype": wire_pick,
         "step_metrics": step_metrics,
         "chips": chips, "dtype": dtype,
         "n_params": n_params, "n_active_params": n_active,
@@ -325,6 +352,10 @@ def main():
                          "or a pipelined *_pipe variant)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="micro-chunk count for the pipelined bodies")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "fp8_e4m3", "auto"],
+                    help="wire format for the MoE collectives (auto = "
+                         "joint autosched decision per layer shape)")
     ap.add_argument("--run-step", action="store_true",
                     help="after compiling a train combo, init real params "
                          "and execute one optimizer step (use with "
@@ -378,7 +409,8 @@ def main():
                                     pipeline_chunks=args.pipeline_chunks,
                                     run_step=args.run_step,
                                     reduced=args.reduced, seq=args.seq,
-                                    batch_size=args.batch)
+                                    batch_size=args.batch,
+                                    wire_dtype=args.wire_dtype)
                     sfx = f"__{args.schedule}" if args.schedule else ""
                     if args.tag:
                         sfx += f"__{args.tag}"

@@ -43,6 +43,12 @@ def main():
                     choices=["analytic", "measured"],
                     help="schedule=auto decision mode: score the perf model "
                          "or calibrate each candidate on the live mesh")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "fp8_e4m3", "auto"],
+                    help="wire format for the MoE collectives: ship "
+                         "AlltoAll/AllGather payloads at this width "
+                         "(auto = let the autoscheduler pick f32 vs bf16 "
+                         "per layer shape; decisions print after step 0)")
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--ckpt", default=None)
@@ -52,12 +58,17 @@ def main():
 
     cfg = get_config(args.arch)
     if cfg.moe is not None and (args.pipeline_chunks is not None
-                                or args.autosched):
+                                or args.autosched or args.wire_dtype):
         moe_kw = {}
         if args.pipeline_chunks is not None:
             moe_kw["pipeline_chunks"] = args.pipeline_chunks
         if args.autosched:
             moe_kw["autosched"] = args.autosched
+        if args.wire_dtype:
+            from repro.core.collectives import CommConfig
+            moe_kw["comm"] = replace(cfg.moe.comm,
+                                     wire_dtype=args.wire_dtype) \
+                if cfg.moe.comm else CommConfig(wire_dtype=args.wire_dtype)
         cfg = replace(cfg, moe=replace(cfg.moe, **moe_kw))
     if args.reduced:
         cfg = cfg.reduced(n_layers=args.layers or 2,

@@ -1,0 +1,342 @@
+"""Wire-precision tests: codec invariants, schedule parity across wire
+dtypes (subprocess, 8 fake devices), the extended perf model, the joint
+(schedule, n_chunks, wire_dtype) autosched decision, and the analytic
+dispatch/combine transposes that replaced the ref-recompute VJPs."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro.core import autosched
+from repro.core.collectives import (CommConfig, wire_decode, wire_encode)
+from repro.core.perfmodel import (AlphaBeta, MoELayerShape, PerfModel,
+                                  WIRE_BYTES)
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+
+def _run(script, *args, n_devices=8, timeout=900):
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        env=subprocess_env(n_devices), capture_output=True, text=True,
+        timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+class TestWireCodec:
+    def test_f32_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (6, 16))
+        w = wire_encode(x, CommConfig())
+        assert w is x
+        np.testing.assert_array_equal(
+            np.asarray(wire_decode(w, CommConfig(), x.dtype)),
+            np.asarray(x))
+
+    def test_none_comm_is_identity(self):
+        x = jnp.ones((2, 4))
+        assert wire_encode(x, None) is x
+
+    def test_bf16_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+        c = CommConfig(wire_dtype="bf16")
+        w = wire_encode(x, c)
+        assert w.dtype == jnp.bfloat16 and w.shape == x.shape
+        r = np.asarray(wire_decode(w, c, x.dtype))
+        # bf16 has an 8-bit mantissa: relative error <= 2^-8
+        assert np.max(np.abs(r - np.asarray(x))) <= \
+            np.max(np.abs(np.asarray(x))) * 2.0 ** -8
+
+    def test_fp8_scale_tail_and_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64)) * 100.0
+        c = CommConfig(wire_dtype="fp8_e4m3")
+        w = wire_encode(x, c)
+        # per-row f32 absmax scale piggybacks as 4 extra fp8 elements
+        assert w.shape == (32, 64 + 4)
+        assert w.dtype == jnp.float8_e4m3fn
+        r = np.asarray(wire_decode(w, c, x.dtype))
+        xa = np.asarray(x)
+        # e4m3 mantissa: 3 bits -> per-row relative error <= 2^-3 of the
+        # row absmax (absmax scaling puts the largest entry at 448)
+        row_max = np.max(np.abs(xa), axis=-1, keepdims=True)
+        assert np.all(np.abs(r - xa) <= row_max * 2.0 ** -3 + 1e-6)
+
+    def test_fp8_zero_rows_stay_zero(self):
+        c = CommConfig(wire_dtype="fp8_e4m3")
+        x = jnp.zeros((4, 8))
+        r = np.asarray(wire_decode(wire_encode(x, c), c, x.dtype))
+        np.testing.assert_array_equal(r, 0.0)
+
+    def test_fp8_scaling_none_saturates(self):
+        c = CommConfig(wire_dtype="fp8_e4m3", scaling="none")
+        x = jnp.array([[1e6, 1.0]])
+        w = wire_encode(x, c)
+        assert w.shape == x.shape  # no scale tail
+        r = np.asarray(wire_decode(w, c, x.dtype))
+        assert r[0, 0] <= 448.0 and abs(r[0, 1] - 1.0) < 0.1
+
+    def test_auto_must_be_resolved(self):
+        with pytest.raises(ValueError):
+            wire_encode(jnp.ones((2, 2)), CommConfig(wire_dtype="auto"))
+
+    def test_bad_configs_rejected(self):
+        with pytest.raises(ValueError):
+            CommConfig(wire_dtype="fp4")
+        with pytest.raises(ValueError):
+            CommConfig(scaling="per_tensor")
+
+
+class TestWireParity:
+    """All schedules x {f32, bf16, fp8} forward + grad within tolerance,
+    routing/drops exactly invariant (subprocess, 8 fake devices)."""
+
+    def test_merged_production_mapping(self):
+        assert "OK merged" in _run("run_wire_equiv.py", "merged")
+
+    def test_distinct_axes(self):
+        assert "OK distinct" in _run("run_wire_equiv.py", "distinct")
+
+    def test_dropped_tokens_invariant(self):
+        assert "OK drops" in _run("run_wire_equiv.py", "drops")
+
+    def test_pipelined_bodies(self):
+        assert "OK pipe" in _run("run_wire_equiv.py", "pipe")
+
+
+def toy_model(beta=1e-9, alpha=1e-5, flops=1e12):
+    ab = AlphaBeta(alpha, beta)
+    return PerfModel(a2a_ep_esp=ab, a2a_ep=ab, ag_esp=ab, ar_esp=ab,
+                     ag_mp=AlphaBeta(alpha, beta / 4), overlap=ab,
+                     flops_per_s=flops, wire_bytes_ref=4.0)
+
+
+def shape(**kw):
+    base = dict(B=4, L=1024, M=1024, H=4096, E=8, k=2, f=1.2,
+                n_mp=2, n_esp=2, n_ep=2)
+    base.update(kw)
+    return MoELayerShape(**base)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    autosched.clear_cache()
+    yield
+    autosched.clear_cache()
+
+
+class TestPerfModelWire:
+    def test_wire_factor_relative_to_ref(self):
+        pm = toy_model()
+        assert pm.wire_factor() == 1.0
+        assert pm.wire_factor("f32") == 1.0        # ref is 4 bytes here
+        assert pm.wire_factor("bf16") == 0.5
+        assert pm.wire_factor("fp8_e4m3") == 0.25
+
+    def test_narrow_wire_never_slower(self):
+        pm = toy_model()
+        s = shape()
+        for sched in ("baseline", "s1", "s2"):
+            for n in (1, 4):
+                t32 = pm.t_pipelined(s, sched, n, wire_dtype="f32")
+                t16 = pm.t_pipelined(s, sched, n, wire_dtype="bf16")
+                t8 = pm.t_pipelined(s, sched, n, wire_dtype="fp8_e4m3")
+                assert t8 <= t16 <= t32
+
+    def test_closed_forms_scale_only_comm(self):
+        """Halving wire bytes must cut the s1 comm term exactly in half
+        (alphas unscaled), and leave the baseline's pre-gate AllGather
+        and AllReduce untouched."""
+        pm = toy_model(alpha=0.0)
+        s = shape()
+        assert pm.t_s1(s, "bf16") == pytest.approx(pm.t_s1(s, "f32") / 2)
+        # baseline: AG + AR terms are wire-invariant by design
+        d32 = pm.t_baseline(s, "f32") - 2 * pm.a2a_ep(s.etm * s.n_esp)
+        d16 = pm.t_baseline(s, "bf16") - 2 * pm.a2a_ep(
+            s.etm * s.n_esp * 0.5)
+        assert d32 == pytest.approx(d16)
+
+    def test_alpha_not_scaled(self):
+        pm = toy_model(beta=0.0, alpha=1e-3)
+        s = shape()
+        assert pm.t_s2(s, "fp8_e4m3") == pytest.approx(pm.t_s2(s, "f32"))
+
+
+class TestJointDecision:
+    def test_argmin_over_triple_grid(self):
+        pm = toy_model()
+        s = shape()
+        d = autosched.decide(s, perf_model=pm,
+                             wire_candidates=("f32", "bf16"))
+        cands = {(sc, n, w): pm.t_pipelined(s, sc, n, wire_dtype=w)
+                 for sc in ("s1", "s2") for n in (1, 2, 4, 8)
+                 for w in ("f32", "bf16")}
+        best = min(cands.values())
+        assert cands[(d.schedule, d.n_chunks, d.wire_dtype)] == best
+        assert len(d.times) == len(cands)
+
+    def test_comm_dominant_layer_picks_bf16(self):
+        """Acceptance: wherever the analytic comm term dominates, the
+        joint decision selects the narrower wire."""
+        pm = toy_model(beta=1e-8, flops=1e18)   # comm >> compute
+        d = autosched.decide(shape(), perf_model=pm,
+                             wire_candidates=autosched.AUTO_WIRE)
+        assert d.wire_dtype == "bf16"
+
+    def test_zero_comm_tie_prefers_f32(self):
+        """With no bandwidth term the times tie exactly; the tie must
+        break toward the wider dtype (no silent compression)."""
+        pm = toy_model(beta=0.0)
+        d = autosched.decide(shape(), perf_model=pm,
+                             wire_candidates=autosched.AUTO_WIRE)
+        assert d.wire_dtype == "f32"
+
+    def test_deterministic_and_cached(self):
+        pm = toy_model()
+        d1 = autosched.decide(shape(), perf_model=pm,
+                              wire_candidates=autosched.AUTO_WIRE)
+        d2 = autosched.decide(shape(), perf_model=pm,
+                              wire_candidates=autosched.AUTO_WIRE)
+        assert d2 is d1
+        autosched.clear_cache()
+        d3 = autosched.decide(shape(), perf_model=toy_model(),
+                              wire_candidates=autosched.AUTO_WIRE)
+        assert (d3.schedule, d3.n_chunks, d3.wire_dtype) == \
+            (d1.schedule, d1.n_chunks, d1.wire_dtype)
+        assert d3.times == d1.times
+
+    def test_wire_grid_distinct_cache_entries(self):
+        pm = toy_model()
+        autosched.decide(shape(), perf_model=pm)
+        autosched.decide(shape(), perf_model=pm,
+                         wire_candidates=autosched.AUTO_WIRE)
+        assert len(autosched.cache_info()) == 2
+
+    def test_default_grid_keeps_legacy_pair_candidates(self):
+        d = autosched.decide(shape(), perf_model=toy_model())
+        assert all(len(c) == 2 for c, _ in d.times)
+        assert d.wire_dtype == "f32"
+
+    def test_forced_schedule_wire_only_decision(self):
+        pm = toy_model(beta=1e-8, flops=1e18)
+        d = autosched.decide(shape(), perf_model=pm, schedules=("s2",),
+                             chunk_candidates=(1,),
+                             wire_candidates=autosched.AUTO_WIRE)
+        assert d.schedule == "s2" and d.n_chunks == 1
+        assert d.wire_dtype == "bf16"
+
+    def test_measured_joint_candidates_are_triples(self):
+        seen = []
+
+        def fake_measure(cands):
+            seen.extend(cands)
+            return {c: (0.001 if c == ("s1", 2, "bf16") else 1.0)
+                    for c in cands}
+
+        d = autosched.decide(shape(), perf_model=toy_model(),
+                             mode="measured", measure=fake_measure,
+                             wire_candidates=autosched.AUTO_WIRE)
+        assert all(len(c) == 3 for c in seen)
+        assert (d.schedule, d.n_chunks, d.wire_dtype) == ("s1", 2, "bf16")
+
+    def test_summary_mentions_wire(self):
+        pm = toy_model(beta=1e-8, flops=1e18)
+        autosched.decide(shape(), perf_model=pm,
+                         wire_candidates=autosched.AUTO_WIRE)
+        assert "wire=bf16" in autosched.cache_summary()
+
+    def test_auto_wire_excludes_fp8(self):
+        """fp8 is opt-in only: the auto grid must never select it."""
+        assert "fp8_e4m3" not in autosched.AUTO_WIRE
+        assert set(autosched.AUTO_WIRE) <= set(WIRE_BYTES)
+
+
+class TestAnalyticDispatchCombineVjp:
+    """The pallas moe_dispatch/moe_combine backends now differentiate via
+    their closed-form transposes; they must agree with the ref oracles'
+    autodiff on routed data, including drops and duplicate slots."""
+
+    def _routed(self, S=48, M=16, E=4, k=2, f=0.5, seed=0):
+        from repro.core.gating import GateConfig, capacity, topk_gate
+        x = jax.random.normal(jax.random.PRNGKey(seed), (S, M))
+        wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, E)) * 0.3
+        gcfg = GateConfig(n_experts=E, top_k=k, capacity_factor=f)
+        cap = capacity(S, gcfg)
+        gate = topk_gate(x, wg, gcfg, cap)
+        return x, gate.flat(cap, E), gate.weights, E * cap
+
+    @pytest.mark.parametrize("f", [4.0, 0.5])
+    def test_dispatch_grad_matches_ref(self, f):
+        from repro.kernels.registry import get_op
+        x, flat, _, n_slots = self._routed(f=f)
+
+        def loss(x, backend):
+            op = get_op("moe_dispatch", backend=backend, n_slots=n_slots)
+            return jnp.sum(op(x, flat) ** 2)
+
+        g_ref = jax.grad(lambda x: loss(x, "ref"))(x)
+        g_pal = jax.grad(lambda x: loss(x, "pallas"))(x)
+        np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("f", [4.0, 0.5])
+    def test_combine_grads_match_ref(self, f):
+        from repro.kernels.registry import get_op
+        x, flat, w, n_slots = self._routed(f=f)
+        buf = jax.random.normal(jax.random.PRNGKey(7),
+                                (n_slots, x.shape[1]))
+
+        def loss(buf, w, backend):
+            op = get_op("moe_combine", backend=backend)
+            return jnp.sum(op(buf, flat, w) ** 2)
+
+        for argnums in (0, 1):
+            g_ref = jax.grad(lambda b, ww: loss(b, ww, "ref"),
+                             argnums=argnums)(buf, w)
+            g_pal = jax.grad(lambda b, ww: loss(b, ww, "pallas"),
+                             argnums=argnums)(buf, w)
+            np.testing.assert_allclose(
+                np.asarray(g_pal), np.asarray(g_ref), atol=1e-5,
+                rtol=1e-5, err_msg=f"argnums={argnums}")
+
+    def test_duplicate_slots_grad(self):
+        """Adversarial scatter-ADD collisions: analytic transpose must
+        sum both contributions exactly like the ref autodiff."""
+        from repro.kernels.registry import get_op
+        S, M, n_slots = 8, 16, 4
+        x = jax.random.normal(jax.random.PRNGKey(0), (S, M))
+        flat = jnp.array([[0, 1]] * 4 + [[1, 1]] * 2 + [[n_slots, 0]] * 2,
+                         jnp.int32)
+
+        def loss(x, backend):
+            op = get_op("moe_dispatch", backend=backend, n_slots=n_slots)
+            return jnp.sum(op(x, flat) ** 3)
+
+        g_ref = jax.grad(lambda x: loss(x, "ref"))(x)
+        g_pal = jax.grad(lambda x: loss(x, "pallas"))(x)
+        np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestGateResultFlatCache:
+    def test_flat_cached_per_key(self):
+        from repro.core.gating import GateConfig, capacity, topk_gate
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+        wg = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+        gcfg = GateConfig(n_experts=4, top_k=2, capacity_factor=2.0)
+        cap = capacity(32, gcfg)
+        gate = topk_gate(x, wg, gcfg, cap)
+        f1 = gate.flat(cap, 4)
+        assert gate.flat(cap, 4) is f1          # memoized
+        assert gate.flat(cap * 2, 4) is not f1  # distinct key
+        # unpacks as the classic 4-tuple
+        eidx, slot, w, aux = gate
+        assert eidx.shape == slot.shape == w.shape == (32, 2)
+        from repro.core.gating import flat_slots
+        np.testing.assert_array_equal(
+            np.asarray(f1), np.asarray(flat_slots(eidx, slot, cap, 4)))
