@@ -37,7 +37,7 @@ def main():
                     help="merged: (ep=4, model=2) with MP==ESP; distinct: "
                          "(ep=2, esp=2, mp=2)")
     ap.add_argument("--schedules", nargs="+",
-                    default=["baseline", "s1", "s2"])
+                    default=["baseline", "s1", "s2", "s2h"])
     ap.add_argument("--chunks", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--tokens", type=int, default=1024)
     ap.add_argument("--d-model", type=int, default=128)
@@ -103,9 +103,14 @@ def main():
           f"{d.schedule} x {d.n_chunks} chunks")
     for (s, n), t in d.times[:4]:
         print(f"#   predicted {s:3s} x{n}: {t * 1e3:.3f} ms")
+    from repro.core.plan import plan_for_shape
     for s in args.schedules:
-        print(f"#   best chunk count for {s}: "
-              f"{pm.pick_chunks(shape, s, tuple(args.chunks))}")
+        # score via the plan-graph walker (t_plan) so IR-only schedules
+        # like s2h are pickable too (pick_chunks knows only the legacy
+        # closed forms)
+        best = min(args.chunks, key=lambda n: pm.t_plan(
+            plan_for_shape(s, shape, n), shape))
+        print(f"#   best chunk count for {s}: {best}")
 
 
 if __name__ == "__main__":

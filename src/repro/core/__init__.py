@@ -1,8 +1,21 @@
 # The paper's primary contribution: Parm's dedicated MP+EP+ESP schedules
-# (baseline / S1 / S2, plus the chunk-pipelined *_pipe variants), the
-# fused EP&ESP-AlltoAll + SAA collectives, and the alpha-beta
-# Algorithm-1 auto-selector with its caching autosched runtime.
+# (baseline / S1 / S2 / the hierarchical S2H, each a declarative plan
+# whose chunk-pipelined *_pipe and wire-precision variants are graph
+# transforms), the fused EP&ESP-AlltoAll + SAA collectives, and the
+# alpha-beta Algorithm-1 auto-selector with its caching autosched
+# runtime scoring the plan-registry grid.
 from repro.core.autosched import ScheduleDecision, decide  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    PLANS,
+    Plan,
+    Stage,
+    apply_wire,
+    build_plan,
+    plan_summary,
+    register_plan,
+    split_capacity,
+)
+from repro.core.executor import execute  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     PIPELINE_BODY,
     PIPELINE_OF,

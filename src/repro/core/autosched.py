@@ -8,10 +8,12 @@ subsystem (``repro.core.collectives.CommConfig``) a third: how many
 bytes each element of those collectives puts on the fabric.  This
 module owns the joint decision:
 
-  * **analytic** mode scores every (schedule, n_chunks) candidate with
-    :meth:`repro.core.perfmodel.PerfModel.t_pipelined` (Algorithm 1's
-    S1/S2 comparison generalized with the compute-overlap term) — no
-    devices touched, fully deterministic under a fixed perf model.
+  * **analytic** mode enumerates the schedule axis from the *plan
+    registry* (``repro.core.plan.PLANS``) and scores every (schedule,
+    n_chunks) candidate by walking its plan graph with
+    :meth:`repro.core.perfmodel.PerfModel.t_plan` (Algorithm 1's S1/S2
+    comparison generalized with the compute-overlap term) — no devices
+    touched, fully deterministic under a fixed perf model.
   * **measured** mode runs a one-shot calibration on the live mesh: each
     candidate is jitted and timed on synthetic data of the layer's shape
     (:func:`measure_candidates`), and the observed winner is recorded.
@@ -32,16 +34,18 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.core import plan as planlib
 from repro.core.perfmodel import (MoELayerShape, PerfModel, WIRE_BYTES,
                                   tpu_v5e_model)
-from repro.core.pipeline import PIPELINE_OF
+from repro.core.pipeline import PIPELINE_OF  # populates the plan registry
 
-#: (schedule, n_chunks, wire_dtype) grids considered by default.
-#: ``baseline`` is included in measured mode (it can win on tiny
-#: single-axis meshes) but never analytically — Algorithm 1 proves S1/S2
-#: dominate it (§IV-B).
-ANALYTIC_SCHEDULES = ("s1", "s2")
-MEASURED_SCHEDULES = ("baseline", "s1", "s2")
+#: The schedule axis of the candidate grid is the *plan registry*
+#: (``repro.core.plan.PLANS``): registering a schedule automatically adds
+#: it to the analytic and measured grids per its ``PlanEntry`` flags.
+#: ``baseline`` is measured-only (it can win on tiny single-axis meshes,
+#: but Algorithm 1 proves S1/S2 dominate it analytically — §IV-B);
+#: ``s1_seqpar`` is in neither grid (it needs the sequence-parallel
+#: activation contract, so it is only ever forced).
 DEFAULT_CHUNKS = (1, 2, 4, 8)
 #: wire dtypes scored by default (no compression; the legacy pair grid
 #: scores with wire_dtype=None, so decisions match the pre-wire runtime)
@@ -140,8 +144,17 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
     pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
     wire_candidates = tuple(wire_candidates)
     joint_wire = wire_candidates != ("f32",)
+    # Resolve the schedule grid BEFORE the cache lookup: the registry can
+    # grow (register_plan) after a decision was cached, and the stale
+    # entry must not shadow the widened grid.
+    if schedules is not None:
+        scheds = tuple(schedules)
+    elif mode == "measured":
+        scheds = planlib.measured_schedules()
+    else:
+        scheds = planlib.analytic_schedules()
     key = (shape, mode, tuple(chunk_candidates), pm, wire_candidates,
-           None if schedules is None else tuple(schedules))
+           scheds)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
@@ -150,23 +163,27 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
         if measure is None:
             raise ValueError("measured mode needs a `measure` callable "
                              "(see autosched.measure_candidates)")
-        scheds = tuple(schedules or MEASURED_SCHEDULES)
         cands = [((s, n, w) if joint_wire else (s, n))
                  for s in scheds for n in chunk_candidates
                  for w in wire_candidates]
         times = dict(measure(cands))
     else:
-        scheds = tuple(schedules or ANALYTIC_SCHEDULES)
-        # Legacy f32-only grid scores with wire_dtype=None (factor 1.0,
+        # Each candidate is scored by walking its actual plan graph
+        # (PerfModel.t_plan) — the same stages the executor will run, so
+        # a newly registered schedule is scored with no new closed form.
+        # Legacy f32-only grids score with wire_dtype=None (factor 1.0,
         # the width the betas were fitted at) so default-config decisions
         # are exactly PR 2's.  A joint grid scores each wire dtype at its
         # true byte width relative to PerfModel.wire_bytes_ref — only the
         # *ratios* between candidates decide the argmin.
-        times = {((s, n, w) if joint_wire else (s, n)):
-                 pm.t_pipelined(shape, s, n,
-                                wire_dtype=w if joint_wire else None)
-                 for s in scheds for n in chunk_candidates
-                 for w in wire_candidates}
+        times = {}
+        for s in scheds:
+            for n in chunk_candidates:
+                p = planlib.plan_for_shape(s, shape, n)
+                for w in wire_candidates:
+                    times[(s, n, w) if joint_wire else (s, n)] = \
+                        pm.t_plan(p, shape,
+                                  wire_dtype=w if joint_wire else None)
     # rank by time; exact ties prefer the wider wire (no silent
     # compression), then candidate-grid order (stable sort).
     ranked = tuple(sorted(

@@ -317,6 +317,47 @@ def ep_all_to_all(x, ep_axes, *, split_axis=0, concat_axis=0):
                           tiled=True)
 
 
+def hier_ep_esp_all_to_all(x, ep_axes, esp_axes, n_ep: int, n_esp: int, *,
+                           axis=1, order: str = "esp_first"):
+    """Hierarchical EP&ESP-AlltoAll: two sequential hops instead of one
+    fused collective (MegaScale-MoE-style, the s2h schedule).
+
+    ``x`` carries the combined-group dim ``G = n_ep * n_esp`` (EP-major /
+    ESP-minor, matching ``lax.axis_index((ep, esp))``) at ``axis``.  The
+    dim is viewed as ``(n_ep, n_esp)`` and exchanged with one AlltoAll
+    over the ESP axes (intra-group: the fast, intra-node links on a
+    production mesh) and one over the EP axes (inter-group: the slow
+    links) — in either ``order``.  Both orders produce *bitwise* the
+    fused :func:`ep_esp_all_to_all` result: writing the source buffer as
+    ``S[(i,j)][a,b]`` (rank (i,j)'s block destined for rank (a,b)), the
+    ESP hop yields ``T[(i,j)][a,j'] = S[(i,j')][a,j]`` and the EP hop
+    then ``U[(i,j)][i',j'] = S[(i',j')][i,j]`` — exactly the fused
+    AlltoAll's delivery — and the two hops commute.
+
+    The decomposition buys nothing by itself; the win is that the hops
+    of *different* capacity chunks are independent HLO ops, so a chunk
+    running ``esp_first`` overlaps its intra-node hop with another
+    chunk's inter-node hop (``plan.split_capacity`` alternates the order
+    per chunk for s2h).  Shard_map-only.
+    """
+    if order not in ("esp_first", "ep_first"):
+        raise ValueError(f"unknown hier order {order!r}")
+    shp = x.shape
+    x5 = x.reshape(shp[:axis] + (n_ep, n_esp) + shp[axis + 1:])
+    ep_dim, esp_dim = axis, axis + 1
+
+    def hop(v, names, dim):
+        return lax.all_to_all(v, _axes(names), dim, dim, tiled=True)
+
+    if order == "esp_first":
+        x5 = hop(x5, esp_axes, esp_dim)
+        x5 = hop(x5, ep_axes, ep_dim)
+    else:
+        x5 = hop(x5, ep_axes, ep_dim)
+        x5 = hop(x5, esp_axes, esp_dim)
+    return x5.reshape(shp)
+
+
 # --- wire-format collective entry points -------------------------------------
 # The schedule bodies call these instead of the raw collectives above;
 # with the default CommConfig (f32) they are byte-identical passthroughs.
@@ -345,6 +386,22 @@ def wire_ep_all_to_all(x, ep_axes, comm=None, *, split_axis=0,
     def move(w):
         return ep_all_to_all(w, ep_axes, split_axis=split_axis,
                              concat_axis=concat_axis)
+
+    return _wire_moved(x, move, comm)
+
+
+def wire_hier_ep_esp_all_to_all(x, ep_axes, esp_axes, n_ep: int,
+                                n_esp: int, comm=None, *, axis=1,
+                                order: str = "esp_first"):
+    """:func:`hier_ep_esp_all_to_all` in the wire format: one encode
+    before the first hop, one decode after the second, so *both* hops
+    ship compressed payload (and the fp8 scales ride both collectives).
+    The two-hop composition equals the fused AlltoAll in either order,
+    hence is self-transposing — the backward pass reuses the same move."""
+
+    def move(w):
+        return hier_ep_esp_all_to_all(w, ep_axes, esp_axes, n_ep, n_esp,
+                                      axis=axis, order=order)
 
     return _wire_moved(x, move, comm)
 

@@ -1,0 +1,224 @@
+"""Lower a schedule :class:`~repro.core.plan.Plan` to jax, stage by stage.
+
+``execute`` walks the validated plan graph inside a shard_map body and
+emits, for each stage kind, the exact collective / registry-kernel call
+sequence the hand-written schedule bodies used — so a plan-built
+schedule is numerically the legacy body it replaced (asserted per
+(schedule x n_chunks x wire_dtype) against the golden copies in
+``tests/helpers/legacy_bodies.py``).  All schedule-specific knowledge
+lives in the plans; this module knows only how to emit one stage of
+each kind.
+
+The stage vocabulary and its lowering:
+
+  gate          topk_gate over the stage input's token pool
+  dispatch      registry ``moe_dispatch`` scatter into (E, cap, M)
+  mp_split      take this rank's slice (free fwd, AllGather bwd)
+  dispatch_a2a  EP AlltoAll (baseline layout) or fused EP&ESP AlltoAll
+                (expert-major dump, §Perf A2); ``hier=...`` decomposes
+                it into intra- + inter-group hops (s2h)
+  expert_ffn    registry ``expert_ffn`` on the local expert batch
+  allreduce     in-network psum over ESP (baseline partial sums)
+  combine_a2a   the return AlltoAll; fused variant reduces ESP partials
+                locally; ``saa=True`` runs the chunked SAA combine +
+                MP-AllGather overlap; ``stack_ag=True`` appends the
+                per-chunk stacked AllGather (s2/s2h capacity restore)
+  ag_mp         AllGather over ESP (baseline entry, wire-exempt) or MP
+                (S1 exit, wire)
+  combine       registry ``moe_combine`` gather + gate-weight mix
+  rs_mp         exit split (the baseline's ESP-Split)
+  slice/merge   micro-chunk bookkeeping inserted by ``split_capacity``
+
+Wire precision: stages with ``wire=True`` get the plan's stamped
+``CommConfig`` and call the ``wire_*`` collective twins; everything else
+calls the raw collectives (f32), reproducing the legacy bodies' exempt
+set (the pre-gate AllGather feeds the router — rounding it would change
+routing — and the ESP-AllReduce sums in-network with no decode point).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.gating import combine, dispatch, topk_gate
+from repro.core.plan import INPUT, Plan, validate
+from repro.kernels.registry import get_op
+
+
+def expert_ffn(xb, w1, w3, w2, info):
+    """Per-expert FFN on this device's (El, t, M) batch.
+
+    Weights are the local ESP shard (hidden dim sliced N_ESP ways), so the
+    output is a *partial sum* that the caller reduces across the ESP group
+    (psum in the baseline, the combine-AlltoAll's local reduction in S1/S2).
+    Compute is the registry's ``expert_ffn`` op under ``info.kernel``.
+    """
+    op = get_op("expert_ffn", cfg=info.kernel, act=info.act)
+    return op(xb, w1, w3 if info.glu else None, w2)
+
+
+def _aux_mean(aux, info):
+    axes = tuple(dict.fromkeys(info.ep_axes + info.esp_axes + info.mp_axes))
+    return {k: (lax.pmean(v, axes) if v.ndim == 0 else v)
+            for k, v in aux.items()}
+
+
+def _group(info, key):
+    """Resolve a logical axis key to (mesh axis names, group size)."""
+    return {"ep": (info.ep_axes, info.n_ep),
+            "esp": (info.esp_axes, info.n_esp),
+            "mp": (info.mp_axes, info.n_mp)}[key]
+
+
+def _gate_cap(info, spec: str) -> int:
+    """Per-expert capacity for the token pool a gate stage sees."""
+    if spec == "pool":           # the unsplit s_local pool (s2, seqpar)
+        return info.cap
+    if spec == "esp_pool":       # post-ESP-AllGather pool (baseline)
+        return info.cap * info.n_esp
+    if spec == "mp_shard":       # this MP rank's 1/N_MP slice (s1)
+        return info.cap // info.n_mp
+    raise ValueError(f"unknown gate cap spec {spec!r}")
+
+
+class _Ctx:
+    __slots__ = ("info", "wg", "w1", "w3", "w2", "comm", "gate")
+
+    def __init__(self, info, wg, w1, w3, w2, comm):
+        self.info, self.comm = info, comm
+        self.wg, self.w1, self.w3, self.w2 = wg, w1, w3, w2
+        self.gate = None     # (GateResult, cap) once the gate stage ran
+
+
+def _emit(st, vals, ctx):
+    """Lower one stage; ``vals`` are its deps' values in order."""
+    info = ctx.info
+    E = info.gate.n_experts
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    comm = ctx.comm if st.wire else None
+    kind = st.kind
+
+    if kind == "gate":
+        cap = _gate_cap(info, st.p("cap", "pool"))
+        g = topk_gate(vals[0], ctx.wg, info.gate, cap)
+        ctx.gate = (g, cap)
+        return ctx.gate
+
+    if kind == "dispatch":
+        tokens, (g, cap) = vals
+        return dispatch(tokens, g.expert_idx, g.slot_idx, cap, E,
+                        info.kernel, flat=g.flat(cap, E))
+
+    if kind in ("mp_split", "rs_mp"):
+        axes, n = _group(info, st.axes[0])
+        return coll.mp_split(vals[0], axes, n, axis=st.p("axis", 0))
+
+    if kind == "ag_mp":
+        axes, n = _group(info, st.axes[0])
+        axis = st.p("axis", 0)
+        if st.wire:
+            return coll.wire_mp_all_gather(vals[0], axes, n, comm,
+                                           axis=axis)
+        return coll.mp_all_gather(vals[0], axes, n, axis=axis)
+
+    if kind == "dispatch_a2a":
+        d = vals[0]
+        if not st.p("fused"):
+            # baseline layout: (E, c, M) -> (Ne, El, c, M) EP blocks
+            sb = d.reshape(Ne, E // Ne, d.shape[1], -1)
+            rb = coll.wire_ep_all_to_all(sb, info.ep_axes, comm)
+            return coll.to_expert_batch(rb)
+        sb = coll.dump_em(d, Ne, Ns)                    # (El, G, c, M)
+        hier = st.p("hier")
+        if hier:
+            rb = coll.wire_hier_ep_esp_all_to_all(
+                sb, info.ep_axes, info.esp_axes, Ne, Ns, comm,
+                axis=1, order=hier)
+        else:
+            rb = coll.wire_ep_esp_all_to_all(
+                sb, info.ep_axes, info.esp_axes, comm,
+                split_axis=1, concat_axis=1)
+        return coll.to_expert_batch_em(rb)              # (El, G*c, M)
+
+    if kind == "expert_ffn":
+        return expert_ffn(vals[0], ctx.w1, ctx.w3, ctx.w2, info)
+
+    if kind == "allreduce":
+        axes, _ = _group(info, st.axes[0])
+        return lax.psum(vals[0], axes)
+
+    if kind == "combine_a2a":
+        h = vals[0]
+        if not st.p("fused"):
+            back = coll.wire_ep_all_to_all(
+                coll.from_expert_batch(h, Ne), info.ep_axes, comm)
+            return back.reshape(E, back.shape[2], -1)   # (E, c, M)
+        y4 = coll.from_expert_batch_em(h, info.combined_group)
+        if st.p("saa"):
+            return coll.saa_combine_allgather(
+                y4, info.ep_axes, info.esp_axes, info.mp_axes,
+                n_ep=Ne, n_esp=Ns, n_mp=Nm,
+                n_chunks=st.p("saa_chunks", info.saa_chunks),
+                comm=comm)                              # (E, c*Nm, M)
+        hier = st.p("hier")
+        if hier:
+            back = coll.wire_hier_ep_esp_all_to_all(
+                y4, info.ep_axes, info.esp_axes, Ne, Ns, comm,
+                axis=1, order=hier)
+        else:
+            back = coll.wire_ep_esp_all_to_all(
+                y4, info.ep_axes, info.esp_axes, comm,
+                split_axis=1, concat_axis=1)
+        mine = coll.undump_reduce_em(back, Ne, Ns)      # (E, c, M)
+        if not st.p("stack_ag"):
+            return mine
+        if Nm == 1:
+            part = mine[:, None]                        # (E, 1, c, M)
+        else:
+            part = coll.wire_all_gather_stacked(
+                mine, tuple(info.mp_axes), Nm, comm, axis=1)
+        return part.reshape(E, -1, part.shape[-1])      # (E, Nm*c, M)
+
+    if kind == "combine":
+        buf, (g, cap) = vals
+        return combine(buf, g.expert_idx, g.slot_idx, g.weights, cap,
+                       info.kernel, flat=g.flat(cap, E))
+
+    if kind == "slice":
+        i, n = st.p("index"), st.p("n")
+        axis = st.p("axis", 1)
+        cs = vals[0].shape[axis] // n
+        return lax.slice_in_dim(vals[0], i * cs, (i + 1) * cs, axis=axis)
+
+    if kind == "merge":
+        axis = st.p("axis", 1)
+        if st.p("mode", "concat") == "concat":
+            return (vals[0] if len(vals) == 1
+                    else jnp.concatenate(vals, axis=axis))
+        # stack_mp: parts are (E, Nm*cs, M); restore the legacy
+        # (mp_rank, chunk, slot) capacity order of the pre-split buffer.
+        parts = [p.reshape(E, Nm, -1, p.shape[-1]) for p in vals]
+        stacked = jnp.stack(parts, axis=2)       # (E, Nm, n, cs, M)
+        return stacked.reshape(E, -1, stacked.shape[-1])
+
+    raise ValueError(f"executor: unknown stage kind {kind!r}")
+
+
+def execute(plan: Plan, x, wg, w1, w3, w2, info):
+    """Run one MoE layer under ``plan`` (shard_map side).
+
+    Same contract as the legacy schedule bodies: ``x`` is this device's
+    (S, M) token slice, returns ``(y, aux)`` with aux scalars pmean-ed
+    over the full device group.
+    """
+    order = validate(plan)
+    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None))
+    env = {INPUT: x}
+    for st in order:
+        env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)
+    if ctx.gate is None:
+        raise ValueError(f"plan {plan.name!r} has no gate stage")
+    g, _ = ctx.gate
+    return env[plan.output], _aux_mean(g.aux, info)

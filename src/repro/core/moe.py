@@ -23,7 +23,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import autosched
+from repro.core import autosched, executor
+from repro.core import plan as planlib
 from repro.core.collectives import CommConfig
 from repro.core.gating import GateConfig, capacity
 from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
@@ -45,7 +46,8 @@ class MoEConfig:
     normalize_topk: bool = False
     aux_loss_weight: float = 1e-2
     z_loss_weight: float = 1e-3
-    schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | *_pipe | auto
+    schedule: str = "auto"        # baseline | s1 | s2 | s1_seqpar | s2h |
+    #   *_pipe | auto — or any schedule registered via plan.register_plan
     saa_chunks: int = 4
     pipeline_chunks: int = 1      # micro-chunks for the *_pipe bodies (1 = off)
     autosched: str = "analytic"   # "auto" decision mode: analytic | measured
@@ -110,6 +112,24 @@ def moe_param_specs(cfg: MoEConfig, mesh, dims: ParallelDims) -> dict:
         specs["shared_w3"] = P(None, mp_ax)
         specs["shared_w2"] = P(mp_ax, None)
     return specs
+
+
+def shard_pool_capacity(tokens_global: int, n_token_shard: int, n_mp: int,
+                        gate_cfg: GateConfig):
+    """(s_local, cap) for one device's token pool — THE capacity formula.
+
+    ``s_local`` is the per-shard pool (``tokens_global`` split over the
+    token-shard group: batch axes, plus MP under the seqpar contract);
+    ``cap`` is the per-expert capacity aligned to ``max(8, n_mp)`` so the
+    S1/S2 capacity splits stay divisible.  ``apply_moe`` computes its
+    capacities through this helper and ``launch/dryrun.py`` mirrors it,
+    so the recorded decisions/plans match what actually compiles.
+    """
+    s_local = tokens_global // max(n_token_shard, 1)
+    align = max(8, n_mp)
+    cap = max(align, -(-capacity(max(s_local, 1), gate_cfg)
+                       // align) * align)
+    return s_local, cap
 
 
 # --- decode fallback ---------------------------------------------------------
@@ -180,16 +200,12 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
     token_shard = batch_ax + (dims.mp if seqpar else ())
     n_token_shard = axis_size(mesh, token_shard)
 
-    s_local = tokens_global // max(n_token_shard, 1)
+    s_local, cap = shard_pool_capacity(tokens_global, n_token_shard,
+                                       n_mp, gate_cfg)
     divisible = (tokens_global % max(n_token_shard, 1) == 0
                  and (seqpar or s_local % max(n_mp, 1) == 0)
                  and s_local > 0)
     use_fallback = (not divisible) or s_local < n_mp
-
-    # Capacity for an s_local-token pool, divisible by N_MP (for the S1/S2
-    # splits) and 8-aligned.
-    align = max(8, n_mp)
-    cap = max(align, -(-capacity(max(s_local, 1), gate_cfg) // align) * align)
 
     comm = cfg.comm or CommConfig()
     wire = comm.wire_dtype
@@ -239,7 +255,24 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         kernel=cfg.kernel,
         comm=CommConfig(wire_dtype=wire, scaling=comm.scaling))
 
-    body = _replicated_body if sched == "dense_decode" else BODY[sched]
+    if sched == "dense_decode":
+        body = _replicated_body
+    else:
+        body = BODY.get(sched)
+    if body is None:
+        # A schedule registered via plan.register_plan but without a BODY
+        # alias (the docs' "add a schedule" path): execute its plan
+        # directly, chunked per info.pipeline_chunks.  Registration alone
+        # is enough to be selectable — by name or by the auto grids.
+        base = UNCHUNKED_OF.get(sched, sched)
+        if base not in planlib.PLANS:
+            raise KeyError(f"unknown schedule {sched!r}: not in "
+                           f"schedules.BODY nor the plan registry "
+                           f"(have {sorted(set(BODY) | set(planlib.PLANS))})")
+
+        def body(xt, wg, w1, w3_, w2, info, _base=base):
+            return executor.execute(planlib.build_plan(_base, info),
+                                    xt, wg, w1, w3_, w2, info)
     pspecs = moe_param_specs(cfg, mesh, dims)
     w3 = params.get("w3")
     if w3 is None:

@@ -123,6 +123,18 @@ class PerfModel:
     overlap: AlphaBeta           # overlapped EP&ESP-A2A + MP-AG (SAA phase)
     flops_per_s: float = PEAK_FLOPS_BF16  # per-chip dense compute rate
     wire_bytes_ref: float = 2.0  # bytes/element the betas were fitted at
+    # hierarchical (s2h) A2A hops; None falls back to the fused model so
+    # pre-existing PerfModel constructions keep scoring every schedule
+    a2a_intra: "AlphaBeta | None" = None  # intra-group hop (ESP links)
+    a2a_inter: "AlphaBeta | None" = None  # inter-group hop (EP links)
+
+    @property
+    def hier_intra(self) -> AlphaBeta:
+        return self.a2a_intra or self.a2a_ep_esp
+
+    @property
+    def hier_inter(self) -> AlphaBeta:
+        return self.a2a_inter or self.a2a_ep_esp
 
     # --- wire-precision extension ------------------------------------------
     def wire_factor(self, wire_dtype=None) -> float:
@@ -254,6 +266,70 @@ class PerfModel:
         return min(candidates, key=lambda n: self.t_pipelined(
             s, schedule, n, wire_dtype))
 
+    # --- plan-IR cost model (repro.core.plan) ------------------------------
+    def _t_stage_comm(self, st, s: MoELayerShape, wf: float, n: int,
+                      overlap_hier: bool) -> float:
+        """Seconds one plan stage spends on the fabric (1/n of its
+        payload for a chunk clone; local stages cost zero)."""
+        size = {"blm": s.blm, "etm": s.etm,
+                "blm*esp": s.blm * s.n_esp,
+                "etm*esp": s.etm * s.n_esp,
+                "etm*esp/mp": s.etm * s.n_esp / s.n_mp}.get(st.size, 0.0)
+        f = (wf if st.wire else 1.0) / n
+        if st.kind == "ag_mp":
+            ab = self.ag_esp if st.axes and st.axes[0] == "esp" \
+                else self.ag_mp
+            return ab(size * f)
+        if st.kind == "allreduce":
+            return self.ar_esp(size / n)   # in-network: never wire-scaled
+        if st.kind in ("dispatch_a2a", "combine_a2a"):
+            if st.p("hier"):
+                ti = self.hier_intra(size * f)
+                tx = self.hier_inter(size * f)
+                # alternating chunk orders run one chunk's intra-group
+                # hop in the shadow of another's inter-group hop
+                t = max(ti, tx) if overlap_hier else ti + tx
+            elif st.p("saa"):
+                t = self.overlap(size * f)
+            elif st.p("fused"):
+                t = self.a2a_ep_esp(size * f)
+            else:
+                t = self.a2a_ep(size * f)
+            if st.p("saa") or st.p("stack_ag"):
+                t += self.ag_mp(s.etm * (wf if st.wire else 1.0) / n)
+            return t
+        return 0.0   # gate/dispatch/combine/splits/slice/merge: local
+
+    def t_plan(self, plan, s: MoELayerShape, wire_dtype=None) -> float:
+        """Predicted layer seconds for a schedule plan — the graph the
+        executor runs is the graph this walks (one cost-model source of
+        truth; the ``autosched`` grids score registry plans through it).
+
+        Non-chunk stages are serial (``fixed``); each chunk's comm
+        stages sum to its ``tc`` and overlap the other chunks' FFN
+        slices exactly as in :meth:`t_pipelined`'s fill/drain model, so
+        for the four paper schedules ``t_plan`` reproduces
+        ``t_pipelined`` (asserted by ``tests/test_plan_executor.py``).
+        ``wire_dtype=None`` keeps the pre-wire scoring (factor 1.0).
+        """
+        wf = self.wire_factor(wire_dtype)
+        n = max(getattr(plan, "n_chunks", 1), 1)
+        overlap_hier = n >= 2
+        fixed, per_chunk = 0.0, {}
+        for st in plan.stages:
+            t = self._t_stage_comm(st, s, wf, n if st.chunk else 1,
+                                   overlap_hier)
+            if t == 0.0:
+                continue
+            if st.chunk:
+                ci = st.p("chunk_index", 0)
+                per_chunk[ci] = per_chunk.get(ci, 0.0) + t
+            else:
+                fixed += t
+        tc = max(per_chunk.values(), default=0.0)
+        tf = self.t_ffn(s, plan.base or plan.name) / n
+        return fixed + tc + (n - 1) * max(tc, tf) + tf
+
     # --- Algorithm 1 --------------------------------------------------------
     def algorithm1(self, s: MoELayerShape) -> str:
         """Faithful transcription of Algorithm 1 (lines 1-9).
@@ -343,6 +419,13 @@ def tpu_v5e_model(n_ep: int, n_esp: int, n_mp: int, bytes_per_el: int = 2,
         overlap=a2a_combined,
         # betas above bake in bytes_per_el, so wire factors are relative
         wire_bytes_ref=float(bytes_per_el),
+        # hierarchical (s2h) hops: the intra hop stays on all-ICI ESP
+        # links; the inter hop crosses the outer fabric.  The fused
+        # collective above pays min(ICI, outer) bandwidth on its whole
+        # payload, so on an inter-pod mesh the decomposition — which
+        # overlaps the two hops across alternating chunks — wins.
+        a2a_intra=coll(ICI_LINK_BW, n_esp),
+        a2a_inter=coll(bw_outer, n_ep),
     )
 
 

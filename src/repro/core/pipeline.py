@@ -1,188 +1,64 @@
-"""Chunk-pipelined variants of the Parm schedules (comm/compute overlap).
+"""Chunk-pipelined schedule variants (comm/compute overlap), generated.
 
 FSMoE (arXiv:2501.10714) and MegaScale-MoE (arXiv:2505.11432) observe
 that the remaining serial time in an S1/S2-style schedule is the
 dispatch/combine AlltoAll sitting back-to-back with the expert FFN.  The
-bodies here remove that serialization: after the (unchanged, full-pool)
-gate + dispatch, the per-expert capacity buffer is split into
+``*_pipe`` family removes that serialization: after the (unchanged,
+full-pool) gate + dispatch, the per-expert capacity buffer is split into
 ``info.pipeline_chunks`` micro-chunks along the capacity dim, and each
 chunk runs its own dispatch-AlltoAll -> expert FFN -> combine-AlltoAll
-chain.  The chunks are *independent* ops in HLO — no data dependency
-links chunk i's FFN to chunk i+1's dispatch AlltoAll — so XLA's async
+chain.  The chunks are *independent* subgraphs in HLO, so XLA's async
 collective (latency-hiding) scheduler issues the AlltoAll of chunk i+1
-while the FFN of chunk i occupies the MXUs, exactly the double-buffered
-overlap the NCCL multi-stream implementations hand-build.  This is the
-same TPU re-expression already used for S2's SAA combine
-(``collectives.saa_combine_allgather``), extended to the whole schedule
-body and to all three schedules.
+while the FFN of chunk i occupies the MXUs.
 
-Chunking happens *after* gating, along the capacity dim of the dispatch
-buffer, so routing, capacity semantics and dropped tokens are bit-for-bit
-those of the unchunked schedule; the expert FFN is pointwise over
-capacity slots, so any chunk count produces the same values
-(``tests/test_pipeline.py`` asserts parity, grads included, for
-``n_chunks`` in {1, 2, 4}).
+Since the plan-IR refactor these are no longer hand-written bodies: each
+``*_pipe`` name is the *same* registered plan as its base schedule with
+the ``plan.split_capacity`` graph transform applied (chunk count from
+``info.pipeline_chunks``, clamped to the largest divisor of the chunked
+capacity dim).  Chunking happens after gating, along the capacity dim of
+the dispatch buffer, so routing, capacity semantics and dropped tokens
+are bit-for-bit those of the unchunked schedule
+(``tests/test_plan_executor.py`` asserts parity against the golden
+legacy bodies for ``n_chunks`` in {1, 2, 4}, gradients included).
 
-``n_chunks`` is clamped to the largest divisor of the chunked capacity
-dim that is <= the requested count (n_chunks=1 degenerates to the
-unchunked schedule).  The per-layer winner (schedule x chunk count) is
-picked by ``repro.core.autosched``; sweep it with
-``benchmarks/bench_pipeline.py``.
+The per-layer winner (schedule x chunk count x wire dtype) is picked by
+``repro.core.autosched``; sweep it with ``benchmarks/bench_pipeline.py``.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-from jax import lax
-
-from repro.core import collectives as coll
-from repro.core.gating import combine, dispatch, topk_gate
-from repro.core.schedules import BODY, MoEShardInfo, _aux_mean, expert_ffn
+from repro.core.executor import execute
+from repro.core.plan import build_plan, clamp_chunks  # noqa: F401 (re-export)
+from repro.core.schedules import BODY, MoEShardInfo
 
 PIPELINE_OF = {"baseline": "baseline_pipe", "s1": "s1_pipe",
-               "s2": "s2_pipe", "s1_seqpar": "s1_seqpar_pipe"}
+               "s2": "s2_pipe", "s1_seqpar": "s1_seqpar_pipe",
+               "s2h": "s2h_pipe"}
 UNCHUNKED_OF = {v: k for k, v in PIPELINE_OF.items()}
 
 
-def clamp_chunks(cap: int, want: int) -> int:
-    """Largest divisor of ``cap`` that is <= ``want`` (and >= 1)."""
-    n = max(1, min(want, cap))
-    while cap % n:
-        n -= 1
-    return n
+def _pipe_body(name):
+    def body(x, wg, w1, w3, w2, info: MoEShardInfo):
+        return execute(build_plan(name, info), x, wg, w1, w3, w2, info)
+    body.__name__ = f"{name}_pipe_body"
+    body.__qualname__ = body.__name__
+    body.__doc__ = (f"``{name}`` with ``split_capacity`` applied at "
+                    "``info.pipeline_chunks`` (1 degenerates to the "
+                    "unchunked plan).")
+    return body
 
 
-def _chunks(buf, n_chunks: int, axis: int = 1):
-    """Split ``buf`` into ``n_chunks`` equal slices along ``axis``."""
-    c = buf.shape[axis]
-    cs = c // n_chunks
-    return [lax.slice_in_dim(buf, i * cs, (i + 1) * cs, axis=axis)
-            for i in range(n_chunks)]
-
-
-# --- pipelined baseline ------------------------------------------------------
-
-def baseline_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
-    """Baseline schedule with the EP-AlltoAll / FFN / EP-AlltoAll chain
-    chunked over the capacity dim.  The ESP-AllGather and the gate stay
-    whole (they precede routing); each chunk then carries its own pair of
-    EP-AlltoAlls around its FFN slice, so the return AlltoAll of chunk i
-    overlaps the FFN of chunk i+1."""
-    Ne, Ns = info.n_ep, info.n_esp
-    E = info.gate.n_experts
-    g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)        # (S*Ns, M)
-    cap_g = info.cap * Ns
-    gate = topk_gate(g, wg, info.gate, cap_g)
-    eidx, slot, w, aux = gate
-    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
-                 flat=gate.flat(cap_g, E))                      # (E, T*Ns, M)
-    n = clamp_chunks(cap_g, info.pipeline_chunks)
-    parts = []
-    for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
-        cs = ch.shape[1]
-        sb = ch.reshape(Ne, E // Ne, cs, -1)
-        rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)
-        xb = coll.to_expert_batch(rb)                           # (El, Ne*cs, M)
-        h = expert_ffn(xb, w1, w3, w2, info)
-        h = lax.psum(h, info.esp_axes)
-        back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
-                                       info.ep_axes, info.comm)
-        parts.append(back.reshape(E, cs, -1))
-    full = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
-    out = combine(full, eidx, slot, w, cap_g, info.kernel,
-                  flat=gate.flat(cap_g, E))
-    y = coll.mp_split(out, info.esp_axes, Ns, axis=0)           # (S, M)
-    return y, _aux_mean(aux, info)
-
-
-# --- pipelined S1 ------------------------------------------------------------
-
-def s1_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo, *,
-                 seqpar: bool = False):
-    """S1 with the fused EP&ESP-AlltoAll / FFN chain chunked over the
-    per-shard capacity dim.  Entry MP-Split, gate and exit MP-AllGather
-    are those of the unchunked S1 (they bracket the whole pool)."""
-    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
-    E = info.gate.n_experts
-    xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
-    c1 = info.cap if seqpar else info.cap // Nm
-    gate = topk_gate(xs, wg, info.gate, c1)
-    eidx, slot, w, aux = gate
-    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
-                 flat=gate.flat(c1, E))                         # (E, c1, M)
-    n = clamp_chunks(c1, info.pipeline_chunks)
-    parts = []
-    for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
-        sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
-        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                         info.comm, split_axis=1,
-                                         concat_axis=1)
-        xb = coll.to_expert_batch_em(rb)                        # (El, G*cs, M)
-        h = expert_ffn(xb, w1, w3, w2, info)
-        back = coll.wire_ep_esp_all_to_all(
-            coll.from_expert_batch_em(h, info.combined_group),
-            info.ep_axes, info.esp_axes, info.comm, split_axis=1,
-            concat_axis=1)
-        parts.append(coll.undump_reduce_em(back, Ne, Ns))       # (E, cs, M)
-    mine = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
-    y = combine(mine, eidx, slot, w, c1, info.kernel,
-                flat=gate.flat(c1, E))                          # (S/Nm, M)
-    if not seqpar:
-        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm,
-                                    axis=0)
-    return y, _aux_mean(aux, info)
-
-
-# --- pipelined S2 ------------------------------------------------------------
-
-def s2_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
-    """S2 with the *whole* dispatch-AlltoAll / FFN / SAA chain chunked:
-    this extends the SAA overlap (which the unchunked S2 applies to the
-    combine AlltoAll + MP-AllGather only) across the dispatch AlltoAll
-    and the expert FFN as well, so every chunk's combine+AllGather rides
-    in the shadow of later chunks' dispatch+FFN."""
-    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
-    E = info.gate.n_experts
-    gate = topk_gate(x, wg, info.gate, info.cap)
-    eidx, slot, w, aux = gate
-    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
-                 flat=gate.flat(info.cap, E))                   # (E, T, M)
-    ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)             # (E, T/Nm, M)
-    c = ds.shape[1]
-    n = clamp_chunks(c, info.pipeline_chunks)
-    parts = []
-    for ch in _chunks(ds, n, axis=1):                           # (E, cs, M)
-        sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
-        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                         info.comm, split_axis=1,
-                                         concat_axis=1)
-        xb = coll.to_expert_batch_em(rb)
-        h = expert_ffn(xb, w1, w3, w2, info)
-        y4 = coll.from_expert_batch_em(h, info.combined_group)
-        back = coll.wire_ep_esp_all_to_all(y4, info.ep_axes,
-                                           info.esp_axes, info.comm,
-                                           split_axis=1, concat_axis=1)
-        comb = coll.undump_reduce_em(back, Ne, Ns)              # (E, cs, M)
-        if Nm == 1:
-            parts.append(comb[:, None])                         # (E, 1, cs, M)
-        else:
-            parts.append(coll.wire_all_gather_stacked(
-                comb, tuple(info.mp_axes), Nm, info.comm,
-                axis=1))                                        # (E, Nm, cs, M)
-    # (E, Nm, n, cs, M) -> (E, Nm * c, M): position mp*c + i*cs + s is the
-    # original (mp_rank, slot) order, so the layout is n_chunks-invariant
-    # (same bookkeeping as collectives.saa_combine_allgather).
-    stacked = jnp.stack(parts, axis=2)
-    full = stacked.reshape(E, Nm * c, -1)                       # (E, T, M)
-    y = combine(full, eidx, slot, w, info.cap, info.kernel,
-                flat=gate.flat(info.cap, E))                    # (S, M)
-    return y, _aux_mean(aux, info)
-
+baseline_pipe_body = _pipe_body("baseline")
+s1_pipe_body = _pipe_body("s1")
+s2_pipe_body = _pipe_body("s2")
+s1_seqpar_pipe_body = _pipe_body("s1_seqpar")
+s2h_pipe_body = _pipe_body("s2h")
 
 PIPELINE_BODY = {
     "baseline_pipe": baseline_pipe_body,
     "s1_pipe": s1_pipe_body,
     "s2_pipe": s2_pipe_body,
-    "s1_seqpar_pipe": lambda *a, **k: s1_pipe_body(*a, seqpar=True, **k),
+    "s1_seqpar_pipe": s1_seqpar_pipe_body,
+    "s2h_pipe": s2h_pipe_body,
 }
 BODY.update(PIPELINE_BODY)

@@ -1,0 +1,463 @@
+"""The schedule-plan IR: Parm's schedule space as *data*, not code.
+
+PR 2 and PR 3 multiplied the hand-written schedule bodies: four base
+schedules x {unchunked, pipelined} x wire dtypes, each separately
+threading ``flat_slots`` caching, ``CommConfig`` encoding and aux-loss
+plumbing.  FSMoE (arXiv:2501.10714) models an MoE layer as a graph of
+schedulable comm/compute *tasks* precisely because that makes new
+schedules cheap; this module is that graph.
+
+A :class:`Plan` is a tuple of :class:`Stage` nodes — ``gate``,
+``dispatch_a2a``, ``ag_mp``, ``expert_ffn``, ``combine_a2a``,
+``allreduce``, ... — with explicit data deps (stage names), logical axis
+groups (``"ep"``/``"esp"``/``"mp"``, resolved to mesh axis names at
+execution), and wire annotations.  Three consumers walk the same graph:
+
+  * ``repro.core.executor`` lowers a plan to jax inside a shard_map
+    body, emitting the identical ``wire_*`` collectives and registry
+    kernels the hand-written bodies used (exact-parity-tested against
+    the golden legacy bodies in ``tests/helpers/legacy_bodies.py``);
+  * ``PerfModel.t_plan`` walks it to predict the layer time (one cost
+    model source of truth — no per-schedule closed form to keep in sync);
+  * ``launch/dryrun.py --dump-plan`` serializes it for debugging.
+
+Axes of the schedule space are *graph transforms*, not new bodies:
+:func:`split_capacity` turns any plan into its chunk-pipelined variant
+(PR 2's ``*_pipe`` family, generated), :func:`apply_wire` stamps the
+collective payload dtype (PR 3's wire family, generated).  New schedules
+register a ~20-line builder with :func:`register_plan` and are
+automatically part of the autoscheduler's candidate grid.
+
+The doctest examples run under
+``python -m doctest src/repro/core/plan.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+#: Stage kinds the executor and the cost model understand.
+KINDS = (
+    "gate",          # top-k routing over a token pool -> GateResult
+    "dispatch",      # local scatter into the (E, cap, M) capacity buffer
+    "mp_split",      # take this rank's 1/N slice (free fwd, AG bwd)
+    "dispatch_a2a",  # EP (plain) or EP&ESP (fused) AlltoAll, token-bound
+    "expert_ffn",    # per-expert FFN through the kernel registry
+    "allreduce",     # in-network partial-sum reduction (baseline ESP)
+    "combine_a2a",   # return AlltoAll (+ local ESP reduce / SAA / hier)
+    "ag_mp",         # AllGather over an MP-like group
+    "combine",       # local gather + gate-weight mix back to token order
+    "rs_mp",         # exit split (reduce-scatter-shaped: free fwd, AG bwd)
+    "slice",         # capacity-dim micro-chunk slice (split_capacity)
+    "merge",         # chunk reassembly (split_capacity)
+)
+
+#: Logical axis groups a stage may communicate over.
+AXIS_KEYS = ("ep", "esp", "mp")
+
+#: Payload-size symbols (paper Table I terms) for ``PerfModel.t_plan``.
+SIZES = ("blm", "etm", "blm*esp", "etm*esp", "etm*esp/mp")
+
+#: Reserved environment name for the layer input.
+INPUT = "x"
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One node of a schedule plan.
+
+    ``deps`` name producer stages (``"x"`` is the layer input); ``axes``
+    are logical group keys from :data:`AXIS_KEYS` (the executor resolves
+    them to mesh axis names via ``MoEShardInfo``); ``wire=True`` lets
+    :func:`apply_wire` put this stage's payload on the fabric in the
+    plan's wire dtype; ``size`` is the payload symbol ``t_plan`` charges;
+    ``chunk=True`` marks the stage as part of the :func:`split_capacity`
+    region.  ``params`` holds static kind-specific knobs as a sorted
+    tuple of pairs (kept hashable); read them with :meth:`p`.
+    """
+
+    name: str
+    kind: str
+    deps: tuple = ()
+    axes: tuple = ()
+    wire: bool = False
+    size: str = ""
+    chunk: bool = False
+    params: tuple = ()
+
+    def p(self, key: str, default=None):
+        """Kind-specific param lookup.
+
+        >>> stage("s", "gate", deps=("x",), cap="pool").p("cap")
+        'pool'
+        """
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def with_params(self, **kw) -> "Stage":
+        """Copy of this stage with ``kw`` merged into ``params``."""
+        d = dict(self.params)
+        d.update(kw)
+        return dataclasses.replace(self, params=tuple(sorted(d.items())))
+
+
+def stage(name: str, kind: str, deps=(), *, axes=(), wire=False, size="",
+          chunk=False, **params) -> Stage:
+    """Convenience constructor packing ``**params`` into the sorted
+    tuple form :class:`Stage` stores.
+
+    >>> stage("g", "gate", deps=("x",), cap="pool").kind
+    'gate'
+    """
+    return Stage(name=name, kind=kind, deps=tuple(deps), axes=tuple(axes),
+                 wire=wire, size=size, chunk=chunk,
+                 params=tuple(sorted(params.items())))
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A full schedule as a stage graph plus its transform metadata.
+
+    ``base`` is the underlying paper schedule (for the cost model's
+    compute term — the baseline redundantly computes all MP copies);
+    ``output`` names the stage whose value is the layer output.
+    ``chunk_input``/``chunk_output``/``chunk_axis``/``chunk_size``/
+    ``merge`` describe the :func:`split_capacity` region; ``n_chunks``
+    and ``comm`` record what transforms have been applied.
+    """
+
+    name: str
+    stages: tuple
+    output: str
+    base: str = ""
+    n_chunks: int = 1
+    comm: object = None          # CommConfig once apply_wire has run
+    chunk_input: str = ""        # stage whose output the region slices
+    chunk_output: str = ""       # region stage feeding the merge
+    chunk_axis: int = 1
+    chunk_size: int = 0          # capacity-dim size (for chunk clamping)
+    merge: str = "concat"        # "concat" | "stack_mp"
+
+    def stage_names(self):
+        return tuple(s.name for s in self.stages)
+
+    def find(self, name: str) -> Stage:
+        for s in self.stages:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+class PlanError(ValueError):
+    """A malformed plan: cycle, dangling dep, bad kind/axis/param."""
+
+
+def validate(plan: Plan):
+    """Check a plan and return its stages in a stable topological order.
+
+    Rejects duplicate or reserved stage names, unknown kinds, axis keys
+    outside :data:`AXIS_KEYS`, dangling deps, a missing output stage,
+    and dependency cycles (Kahn's algorithm; ties resolve in listed
+    order, which is also the order the executor emits ops in).
+
+    >>> p = Plan("t", (stage("a", "gate", deps=("x",)),), output="a")
+    >>> [s.name for s in validate(p)]
+    ['a']
+    >>> bad = Plan("t", (stage("a", "gate", deps=("b",)),
+    ...                  stage("b", "dispatch", deps=("a",))), output="a")
+    >>> try:
+    ...     validate(bad)
+    ... except PlanError as e:
+    ...     print(e)
+    plan 't': dependency cycle through ['a', 'b']
+    """
+    names = [s.name for s in plan.stages]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise PlanError(f"plan {plan.name!r}: duplicate stage names {dupes}")
+    if INPUT in names:
+        raise PlanError(f"plan {plan.name!r}: stage name {INPUT!r} is "
+                        "reserved for the layer input")
+    known = set(names)
+    for s in plan.stages:
+        if s.kind not in KINDS:
+            raise PlanError(f"plan {plan.name!r}: stage {s.name!r} has "
+                            f"unknown kind {s.kind!r} (want one of {KINDS})")
+        for ax in s.axes:
+            if ax not in AXIS_KEYS:
+                raise PlanError(
+                    f"plan {plan.name!r}: stage {s.name!r} names bad axis "
+                    f"{ax!r} (want one of {AXIS_KEYS})")
+        if s.size and s.size not in SIZES:
+            # an unknown symbol would silently price the collective at
+            # zero bandwidth in PerfModel.t_plan, skewing autosched
+            raise PlanError(
+                f"plan {plan.name!r}: stage {s.name!r} has unknown size "
+                f"symbol {s.size!r} (want one of {SIZES})")
+        for d in s.deps:
+            if d != INPUT and d not in known:
+                raise PlanError(f"plan {plan.name!r}: stage {s.name!r} "
+                                f"depends on undefined stage {d!r}")
+    if plan.output not in known:
+        raise PlanError(f"plan {plan.name!r}: output stage "
+                        f"{plan.output!r} is not defined")
+    # Kahn's algorithm, preferring listed order among ready stages so the
+    # executor's op order is deterministic and matches the builders'.
+    by_name = {s.name: s for s in plan.stages}
+    indeg = {n: sum(1 for d in by_name[n].deps if d != INPUT)
+             for n in names}
+    dependents: dict = {n: [] for n in names}
+    for s in plan.stages:
+        for d in s.deps:
+            if d != INPUT:
+                dependents[d].append(s.name)
+    order, ready = [], [n for n in names if indeg[n] == 0]
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for m in dependents[n]:
+            indeg[m] -= 1
+            if indeg[m] == 0:
+                ready.append(m)
+        ready.sort(key=names.index)
+    if len(order) != len(names):
+        cyc = sorted(set(names) - set(order), key=names.index)
+        raise PlanError(f"plan {plan.name!r}: dependency cycle through "
+                        f"{cyc}")
+    return tuple(by_name[n] for n in order)
+
+
+# --- graph transforms --------------------------------------------------------
+
+def clamp_chunks(cap: int, want: int) -> int:
+    """Largest divisor of ``cap`` that is <= ``want`` (and >= 1).
+
+    >>> clamp_chunks(16, 5), clamp_chunks(7, 2), clamp_chunks(12, 0)
+    (4, 1, 1)
+    """
+    n = max(1, min(want, cap))
+    while cap % n:
+        n -= 1
+    return n
+
+
+def split_capacity(plan: Plan, n_chunks: int, *, clamp: bool = True) -> Plan:
+    """Chunk-pipeline transform: replicate the plan's chunkable region
+    ``n_chunks`` times over capacity-dim micro-chunks.
+
+    Each clone gets its own ``slice`` entry node and a remapped dep set,
+    so the chunks are independent subgraphs in HLO — XLA's async
+    collective scheduler overlaps chunk i+1's communication with chunk
+    i's FFN, which is exactly what the hand-written ``*_pipe`` bodies
+    used to spell out.  A ``merge`` node reassembles the parts
+    (``plan.merge`` mode).  Stages may declare chunk-dependent params:
+
+      * ``alt=(v0, v1, ...)`` alternates the stage's ``hier`` hop order
+        per chunk (the s2h intra/inter overlap);
+      * an SAA combine collapses to depth 1 inside a chunk (the chunk
+        itself *is* the SAA unit — same decomposition, one level up).
+
+    ``n_chunks`` clamps to the largest divisor of ``plan.chunk_size``
+    unless ``clamp=False`` (the cost model scores unclamped grids, same
+    as the legacy ``t_pipelined``).  ``n_chunks <= 1`` or a plan with no
+    chunk region returns the plan unchanged.
+    """
+    chunked = [s for s in plan.stages if s.chunk]
+    n = max(1, n_chunks)
+    if clamp and plan.chunk_size:
+        n = clamp_chunks(plan.chunk_size, n)
+    if n <= 1 or not chunked:
+        return dataclasses.replace(plan, n_chunks=1)
+    if not plan.chunk_input or not plan.chunk_output:
+        raise PlanError(f"plan {plan.name!r}: chunk stages but no "
+                        "chunk_input/chunk_output region declared")
+    names = [s.name for s in plan.stages]
+    first = min(names.index(s.name) for s in chunked)
+    last = max(names.index(s.name) for s in chunked)
+    if any(not s.chunk for s in plan.stages[first:last + 1]):
+        raise PlanError(f"plan {plan.name!r}: chunk region must be "
+                        "contiguous in stage order")
+    region = {s.name for s in chunked}
+    pre, post = plan.stages[:first], plan.stages[last + 1:]
+    for s in post:
+        bad = [d for d in s.deps if d in region and d != plan.chunk_output]
+        if bad:
+            raise PlanError(
+                f"plan {plan.name!r}: stage {s.name!r} depends on chunk-"
+                f"internal stage(s) {bad}; only {plan.chunk_output!r} is "
+                "visible after the merge")
+
+    out = list(pre)
+    for i in range(n):
+        out.append(stage(f"chunk{i}/slice", "slice",
+                         deps=(plan.chunk_input,), chunk=True,
+                         index=i, n=n, axis=plan.chunk_axis,
+                         chunk_index=i))
+        for s in chunked:
+            deps = tuple(
+                f"chunk{i}/slice" if d == plan.chunk_input
+                else (f"{d}@{i}" if d in region else d)
+                for d in s.deps)
+            c = dataclasses.replace(s, name=f"{s.name}@{i}", deps=deps)
+            c = c.with_params(chunk_index=i)
+            alt = s.p("alt")
+            if alt:
+                c = c.with_params(hier=alt[i % len(alt)])
+            if s.kind == "combine_a2a" and s.p("saa"):
+                c = c.with_params(saa_chunks=1)
+            out.append(c)
+    out.append(stage("merge", "merge",
+                     deps=tuple(f"{plan.chunk_output}@{i}"
+                                for i in range(n)),
+                     mode=plan.merge, axis=plan.chunk_axis))
+    for s in post:
+        deps = tuple("merge" if d == plan.chunk_output else d
+                     for d in s.deps)
+        out.append(dataclasses.replace(s, deps=deps))
+    output = "merge" if plan.output == plan.chunk_output else plan.output
+    return dataclasses.replace(plan, stages=tuple(out), n_chunks=n,
+                               output=output)
+
+
+def apply_wire(plan: Plan, comm) -> Plan:
+    """Wire-precision transform: stamp the collective payload format.
+
+    Stages with ``wire=True`` will ship their payload in
+    ``comm.wire_dtype`` (the executor passes ``comm`` to the ``wire_*``
+    collective twins); wire-exempt stages (the baseline's pre-gate
+    AllGather and in-network AllReduce) are untouched.  ``comm`` must be
+    concrete — ``"auto"`` is resolved by ``autosched.decide`` before any
+    plan executes.
+    """
+    if comm is not None and getattr(comm, "wire_dtype", "f32") == "auto":
+        raise PlanError("apply_wire needs a concrete wire dtype; resolve "
+                        "CommConfig.wire_dtype='auto' via autosched first")
+    return dataclasses.replace(plan, comm=comm)
+
+
+# --- the plan registry -------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlanEntry:
+    """One registered schedule: its builder plus autosched eligibility.
+
+    ``analytic``/``measured`` gate which decision grids enumerate it
+    (``s1_seqpar`` is neither: it needs the sequence-parallel activation
+    contract, so it is only ever forced; ``baseline`` is measured-only —
+    Algorithm 1 proves S1/S2 dominate it analytically, §IV-B).
+    """
+
+    builder: Callable
+    analytic: bool = True
+    measured: bool = True
+
+
+PLANS: dict = {}
+
+
+def register_plan(name: str, builder: Optional[Callable] = None, *,
+                  analytic: bool = True, measured: bool = True):
+    """Register a schedule plan builder (usable as a decorator).
+
+    ``builder(info) -> Plan`` takes the ``MoEShardInfo`` (or any object
+    with the same static fields) and returns the *unchunked, unwired*
+    base plan.  Registration makes the schedule selectable by name and —
+    per its flags — part of the autoscheduler's candidate grids.
+    """
+    def deco(fn):
+        PLANS[name] = PlanEntry(builder=fn, analytic=analytic,
+                                measured=measured)
+        return fn
+    return deco if builder is None else deco(builder)
+
+
+def analytic_schedules() -> tuple:
+    """Registered schedules the analytic decision grid enumerates."""
+    return tuple(n for n, e in PLANS.items() if e.analytic)
+
+
+def measured_schedules() -> tuple:
+    """Registered schedules the measured decision grid enumerates."""
+    return tuple(n for n, e in PLANS.items() if e.measured)
+
+
+def build_plan(name: str, info, n_chunks: Optional[int] = None) -> Plan:
+    """Build the executable plan for one schedule on one layer layout:
+    base plan -> :func:`split_capacity` (clamped) -> :func:`apply_wire`.
+
+    ``n_chunks`` defaults to ``info.pipeline_chunks``; pass ``1`` for
+    the always-unchunked public body aliases.
+    """
+    if name not in PLANS:
+        raise KeyError(f"no plan registered for schedule {name!r} "
+                       f"(have {sorted(PLANS)})")
+    base = PLANS[name].builder(info)
+    want = info.pipeline_chunks if n_chunks is None else n_chunks
+    p = split_capacity(base, want)
+    return apply_wire(p, getattr(info, "comm", None))
+
+
+def plan_for_shape(name: str, shape, n_chunks: int = 1) -> Plan:
+    """Build a plan from a ``MoELayerShape`` alone (cost-model scoring).
+
+    Constructs a minimal stand-in layout (dummy axis names, capacity
+    from the shape's ``T``) and expands the chunk region *unclamped*, so
+    scored grids match the requested candidates exactly — the runtime
+    clamps real chunk counts before asking for a decision.
+    """
+    from repro.core.gating import GateConfig
+    from repro.core.schedules import MoEShardInfo
+
+    cap = max(int(shape.T), 1)
+    info = MoEShardInfo(
+        ep_axes=("ep",), esp_axes=("esp",), mp_axes=("mp",),
+        n_ep=shape.n_ep, n_esp=shape.n_esp, n_mp=shape.n_mp,
+        tokens=shape.B * shape.L, cap=cap,
+        gate=GateConfig(n_experts=shape.E, top_k=shape.k,
+                        capacity_factor=shape.f))
+    base = PLANS[name].builder(info)
+    return split_capacity(base, n_chunks, clamp=False)
+
+
+def plan_summary(plan: Plan) -> dict:
+    """JSON-ready description of a plan's stage graph (the
+    ``launch/dryrun.py --dump-plan`` artifact payload)."""
+    wd = getattr(plan.comm, "wire_dtype", "f32") if plan.comm else "f32"
+    return {
+        "name": plan.name,
+        "base": plan.base or plan.name,
+        "n_chunks": plan.n_chunks,
+        "wire_dtype": wd,
+        "merge": plan.merge if plan.n_chunks > 1 else None,
+        "output": plan.output,
+        "stages": [
+            {"name": s.name, "kind": s.kind, "deps": list(s.deps),
+             "axes": list(s.axes),
+             "wire": (wd if s.wire else None),
+             "chunk": s.p("chunk_index") if s.chunk else None,
+             **({"hier": s.p("hier")} if s.p("hier") else {})}
+            for s in plan.stages],
+    }
+
+
+def format_plan(plan: Plan) -> str:
+    """One line per stage, for run logs and ``--dump-plan`` printouts."""
+    wd = getattr(plan.comm, "wire_dtype", "f32") if plan.comm else "f32"
+    head = (f"plan {plan.name} (base={plan.base or plan.name}, "
+            f"n_chunks={plan.n_chunks}, wire={wd})")
+    lines = [head]
+    for s in plan.stages:
+        bits = [s.kind]
+        if s.axes:
+            bits.append("axes=" + "x".join(s.axes))
+        if s.wire:
+            bits.append(f"wire={wd}")
+        if s.p("hier"):
+            bits.append(f"hier={s.p('hier')}")
+        deps = ", ".join(s.deps) or "-"
+        lines.append(f"  {s.name:18s} {' '.join(bits):34s} <- {deps}")
+    return "\n".join(lines)

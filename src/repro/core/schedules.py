@@ -1,9 +1,11 @@
-"""The three MP+EP+ESP communication schedules of the Parm paper.
+"""The Parm MP+EP+ESP communication schedules, as declarative plans.
 
-Each schedule is a shard_map body operating on this device's local slice
-of the MoE-layer input tokens.  All three compute the same mathematical
-function (verified by tests/test_moe_schedules.py); they differ only in
-where communication happens and how much of it there is:
+Each schedule is a ~20-line *plan builder* (see ``repro.core.plan``)
+returning a stage graph; ``repro.core.executor`` lowers it inside a
+shard_map body.  All schedules compute the same mathematical function
+(verified against the golden legacy bodies by
+``tests/test_plan_executor.py``); they differ only in where
+communication happens and how much of it there is:
 
   baseline (Fig. 3a):  ESP-AllGather -> Gate -> EP-AlltoAll -> Experts
                        -> ESP-AllReduce -> EP-AlltoAll -> ESP-Split
@@ -11,26 +13,36 @@ where communication happens and how much of it there is:
                        -> EP&ESP-AlltoAll(+Combine) -> MP-AllGather(BLM)
   S2       (Fig. 3c):  Gate -> MP-Split -> EP&ESP-AlltoAll -> Experts
                        -> SAA{EP&ESP-AlltoAll + MP-AllGather(ETM)} -> Un-dispatch
+  S2H      (beyond paper, MegaScale-style): S2 with each fused AlltoAll
+           decomposed into an intra-group (ESP, fast links) and an
+           inter-group (EP, slow links) hop; successive capacity chunks
+           run the hops in opposite orders, so one chunk's intra-node
+           A2A rides in the shadow of another's inter-node A2A (Parm
+           §IV's intra/inter overlap).
 
-Plus a beyond-paper ``s1_seqpar`` variant: under a sequence-parallel
-activation contract the MoE boundary is already MP-split, so S1's final
-MP-AllGather disappears entirely (see EXPERIMENTS.md §Perf).
+Plus the beyond-paper ``s1_seqpar`` variant: under a sequence-parallel
+activation contract the MoE boundary is already MP-split, so S1's entry
+split and exit MP-AllGather disappear entirely (see EXPERIMENTS.md §Perf).
+
+The chunk-pipelined ``*_pipe`` family and the wire-precision variants
+are *generated* from these same builders by the ``split_capacity`` and
+``apply_wire`` graph transforms — there is one definition per schedule,
+not one per (schedule x chunking x wire) combination.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-from jax import lax
-
-from repro.core import collectives as coll
 from repro.core.collectives import CommConfig
-from repro.core.gating import GateConfig, combine, dispatch, topk_gate
-from repro.kernels.registry import KernelConfig, get_op
+from repro.core.executor import _aux_mean, execute, expert_ffn  # noqa: F401
+from repro.core.gating import GateConfig
+from repro.core.plan import Plan, build_plan, register_plan, stage
+from repro.kernels.registry import KernelConfig
 
-SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar",
+SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "s2h",
              "baseline_pipe", "s1_pipe", "s2_pipe", "s1_seqpar_pipe",
-             "auto")
+             "s2h_pipe", "auto")
 
 
 @dataclass(frozen=True)
@@ -57,138 +69,149 @@ class MoEShardInfo:
         return self.n_ep * self.n_esp
 
 
-def expert_ffn(xb, w1, w3, w2, info: MoEShardInfo):
-    """Per-expert FFN on this device's (El, t, M) batch.
+# --- plan builders -----------------------------------------------------------
 
-    Weights are the local ESP shard (hidden dim sliced N_ESP ways), so the
-    output is a *partial sum* that the caller reduces across the ESP group
-    (psum in the baseline, the combine-AlltoAll's local reduction in S1/S2).
-    Compute is the registry's ``expert_ffn`` op under ``info.kernel``.
-    """
-    op = get_op("expert_ffn", cfg=info.kernel, act=info.act)
-    return op(xb, w1, w3 if info.glu else None, w2)
-
-
-def _aux_mean(aux, info):
-    axes = tuple(dict.fromkeys(info.ep_axes + info.esp_axes + info.mp_axes))
-    return {k: (lax.pmean(v, axes) if v.ndim == 0 else v)
-            for k, v in aux.items()}
-
-
-# --- baseline ----------------------------------------------------------------
-
-def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+@register_plan("baseline", analytic=False)   # measured-only: §IV-B
+def plan_baseline(info) -> Plan:
     """DeepSpeed-MoE's schedule. In the merged (MP==ESP) production mapping
     the ESP-AllGather materializes N_MP identical token copies, and every
-    expert shard then computes them all — the redundancy Parm removes."""
-    Ne, Ns = info.n_ep, info.n_esp
-    E = info.gate.n_experts
-    # ESP-AllGather of the raw input (cost AG(B*L*M*N_ESP), Eq. 1).
-    # Deliberately NOT wire-compressed: it feeds the gate, and wire
-    # rounding pre-gate tokens would change routing decisions.
-    g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)       # (S*Ns, M)
-    cap_g = info.cap * Ns
-    gate = topk_gate(g, wg, info.gate, cap_g)
-    eidx, slot, w, aux = gate
-    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
-                 flat=gate.flat(cap_g, E))                     # (E, T*Ns, M)
-    # EP-AlltoAll dispatch (cost A2A(E*T*M*N_ESP), wire dtype).
-    sb = d.reshape(Ne, E // Ne, cap_g, -1)
-    rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)  # (Ne, El, T*Ns, M)
-    xb = coll.to_expert_batch(rb)                              # (El, Ne*T*Ns, M)
-    h = expert_ffn(xb, w1, w3, w2, info)
-    # ESP-AllReduce of partial sums (cost AR(E*T*M*N_ESP)).  In-network
-    # arithmetic: no decode point, so it stays at compute width.
-    h = lax.psum(h, info.esp_axes)
-    # EP-AlltoAll combine (cost A2A(E*T*M*N_ESP), wire dtype).
-    back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
-                                   info.ep_axes, info.comm)
-    out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g,
-                  info.kernel, flat=gate.flat(cap_g, E))
-    # ESP-Split: free forward, AllGather in backward (paper Fig. 3 note).
-    y = coll.mp_split(out, info.esp_axes, Ns, axis=0)          # (S, M)
-    return y, _aux_mean(aux, info)
+    expert shard then computes them all — the redundancy Parm removes.
+    The pre-gate AllGather and the in-network AllReduce are wire-exempt
+    (routing bit-invariance / no decode point)."""
+    return Plan("baseline", base="baseline", stages=(
+        stage("ag_in", "ag_mp", deps=("x",), axes=("esp",), axis=0,
+              size="blm*esp"),
+        stage("gate", "gate", deps=("ag_in",), cap="esp_pool"),
+        stage("disp", "dispatch", deps=("ag_in", "gate")),
+        stage("a2a_d", "dispatch_a2a", deps=("disp",), axes=("ep",),
+              wire=True, size="etm*esp", chunk=True),
+        stage("ffn", "expert_ffn", deps=("a2a_d",), chunk=True),
+        stage("ar", "allreduce", deps=("ffn",), axes=("esp",),
+              size="etm*esp", chunk=True),
+        stage("a2a_c", "combine_a2a", deps=("ar",), axes=("ep",),
+              wire=True, size="etm*esp", chunk=True),
+        stage("comb", "combine", deps=("a2a_c", "gate")),
+        stage("out", "rs_mp", deps=("comb",), axes=("esp",), axis=0),
+    ), output="out", chunk_input="disp", chunk_output="a2a_c",
+        chunk_axis=1, chunk_size=info.cap * info.n_esp)
 
 
-# --- S1 ----------------------------------------------------------------------
-
-def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
-    """PauseMP before the gate; restore with MP-AllGather(B*L*M) after the
-    combine.  With ``seqpar=True`` the boundary contract is already
-    MP-split, so both the entry split and the exit gather vanish."""
-    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
-    E = info.gate.n_experts
-    xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
-    # Under the seqpar contract info.tokens/info.cap already describe the
-    # MP-split pool; otherwise the per-shard capacity is T / N_MP.
-    c1 = info.cap if seqpar else info.cap // Nm
-    gate = topk_gate(xs, wg, info.gate, c1)
-    eidx, slot, w, aux = gate
-    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
-                 flat=gate.flat(c1, E))                        # (E, T/Nm, M)
-    # EP&ESP-AlltoAll dispatch (Dump + fused AlltoAll; cost A2A(ETM*Ns/Nm),
-    # wire dtype).  Expert-major (El, G, c, M) buffers: the expert-batch
-    # view is a free reshape instead of a full-buffer relayout (§Perf A2).
-    sb = coll.dump_em(d, Ne, Ns)                               # (El, G, c1, M)
-    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                     info.comm, split_axis=1,
-                                     concat_axis=1)
-    xb = coll.to_expert_batch_em(rb)                           # (El, G*c1, M)
-    h = expert_ffn(xb, w1, w3, w2, info)
-    # EP&ESP-AlltoAll combine + local ESP reduction (cost A2A(ETM*Ns/Nm),
-    # wire dtype; the ESP partial-sum reduction happens after decode).
-    back = coll.wire_ep_esp_all_to_all(
-        coll.from_expert_batch_em(h, info.combined_group),
-        info.ep_axes, info.esp_axes, info.comm, split_axis=1,
-        concat_axis=1)
-    mine = coll.undump_reduce_em(back, Ne, Ns)                 # (E, c1, M)
-    y = combine(mine, eidx, slot, w, c1, info.kernel,
-                flat=gate.flat(c1, E))                         # (S/Nm, M)
-    if not seqpar:
-        # MP-AllGather to restore the replicated contract (cost AG(BLM),
-        # wire dtype — post-combine outputs, routing already done).
-        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm, axis=0)
-    return y, _aux_mean(aux, info)
+def _plan_s1(info, *, seqpar: bool) -> Plan:
+    name = "s1_seqpar" if seqpar else "s1"
+    src = "x" if seqpar else "split"
+    pre = () if seqpar else (
+        stage("split", "mp_split", deps=("x",), axes=("mp",), axis=0),)
+    post = () if seqpar else (
+        stage("ag_out", "ag_mp", deps=("comb",), axes=("mp",), axis=0,
+              wire=True, size="blm"),)
+    return Plan(name, base=name, stages=pre + (
+        stage("gate", "gate", deps=(src,),
+              cap="pool" if seqpar else "mp_shard"),
+        stage("disp", "dispatch", deps=(src, "gate")),
+        stage("a2a_d", "dispatch_a2a", deps=("disp",), axes=("ep", "esp"),
+              wire=True, size="etm*esp/mp", chunk=True, fused=True),
+        stage("ffn", "expert_ffn", deps=("a2a_d",), chunk=True),
+        stage("a2a_c", "combine_a2a", deps=("ffn",), axes=("ep", "esp"),
+              wire=True, size="etm*esp/mp", chunk=True, fused=True),
+        stage("comb", "combine", deps=("a2a_c", "gate")),
+    ) + post, output="comb" if seqpar else "ag_out",
+        chunk_input="disp", chunk_output="a2a_c", chunk_axis=1,
+        chunk_size=info.cap if seqpar else info.cap // max(info.n_mp, 1))
 
 
-# --- S2 ----------------------------------------------------------------------
+@register_plan("s1")
+def plan_s1(info) -> Plan:
+    """PauseMP before the gate; restore with MP-AllGather(BLM) after the
+    combine.  Both AlltoAlls are fused over the combined EP x ESP group."""
+    return _plan_s1(info, seqpar=False)
 
-def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
-    """Gate on the full input, PauseMP on the capacity dim, and overlap the
-    combine EP&ESP-AlltoAll with the MP-AllGather(ETM) via SAA."""
-    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
-    E = info.gate.n_experts
-    gate = topk_gate(x, wg, info.gate, info.cap)
-    eidx, slot, w, aux = gate
-    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
-                 flat=gate.flat(info.cap, E))                  # (E, T, M)
-    ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)            # (E, T/Nm, M)
-    sb = coll.dump_em(ds, Ne, Ns)                              # (El, G, c, M)
-    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
-                                     info.comm, split_axis=1,
-                                     concat_axis=1)
-    xb = coll.to_expert_batch_em(rb)
-    h = expert_ffn(xb, w1, w3, w2, info)
-    y4 = coll.from_expert_batch_em(h, info.combined_group)     # (El, G, T/Nm, M)
-    # SAA: combine-AlltoAll chunks overlapped with MP-AllGather (Fig. 5),
-    # every chunk of both collectives in the wire dtype.
-    full = coll.saa_combine_allgather(
-        y4, info.ep_axes, info.esp_axes, info.mp_axes,
-        n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks,
-        comm=info.comm)                                        # (E, T, M)
-    y = combine(full, eidx, slot, w, info.cap, info.kernel,
-                flat=gate.flat(info.cap, E))                   # (S, M)
-    return y, _aux_mean(aux, info)
 
+@register_plan("s1_seqpar", analytic=False, measured=False)  # forced-only
+def plan_s1_seqpar(info) -> Plan:
+    """S1 under a sequence-parallel activation contract: the boundary is
+    already MP-split, so the entry split and exit gather vanish."""
+    return _plan_s1(info, seqpar=True)
+
+
+def _plan_s2_like(info, name: str, a2a_extra: dict,
+                  combine_extra: dict) -> Plan:
+    return Plan(name, base=name, stages=(
+        stage("gate", "gate", deps=("x",), cap="pool"),
+        stage("disp", "dispatch", deps=("x", "gate")),
+        stage("split", "mp_split", deps=("disp",), axes=("mp",), axis=1),
+        stage("a2a_d", "dispatch_a2a", deps=("split",),
+              axes=("ep", "esp"), wire=True, size="etm*esp/mp",
+              chunk=True, fused=True, **a2a_extra),
+        stage("ffn", "expert_ffn", deps=("a2a_d",), chunk=True),
+        stage("a2a_c", "combine_a2a", deps=("ffn",),
+              axes=("ep", "esp", "mp"), wire=True, size="etm*esp/mp",
+              chunk=True, fused=True, **combine_extra),
+        stage("comb", "combine", deps=("a2a_c", "gate")),
+    ), output="comb", chunk_input="split", chunk_output="a2a_c",
+        chunk_axis=1, chunk_size=info.cap // max(info.n_mp, 1),
+        merge="stack_mp")
+
+
+@register_plan("s2")
+def plan_s2(info) -> Plan:
+    """Gate on the full input, PauseMP on the capacity dim, and overlap
+    the combine EP&ESP-AlltoAll with the MP-AllGather(ETM) via SAA.
+    Under ``split_capacity`` the SAA stage collapses to depth 1 per
+    chunk — the chunk itself becomes the SAA unit (the legacy
+    ``s2_pipe`` decomposition)."""
+    return _plan_s2_like(info, "s2", {},
+                         {"saa": True, "saa_chunks": info.saa_chunks})
+
+
+@register_plan("s2h")
+def plan_s2h(info) -> Plan:
+    """Hierarchical S2: each fused EP&ESP-AlltoAll decomposes into an
+    intra-group hop over ESP (fast, intra-node links) and an inter-group
+    hop over EP (slow, inter-node links) — bitwise the same data
+    movement as the fused collective.  ``alt`` makes ``split_capacity``
+    alternate the hop order per capacity chunk, so chunk i's intra-node
+    A2A overlaps chunk i+1's inter-node A2A (MegaScale-MoE's
+    bidirectional hierarchical AlltoAll; run with ``pipeline_chunks >= 2``
+    to engage the overlap).  Expressible only in the IR: no legacy body
+    ever carried an intra/inter decomposition."""
+    hier = {"hier": "esp_first", "alt": ("esp_first", "ep_first")}
+    return _plan_s2_like(info, "s2h", dict(hier),
+                         dict(hier, stack_ag=True))
+
+
+# --- thin body aliases (the public schedule API) -----------------------------
+# External callers keep seeing the classic ``*_body(x, wg, w1, w3, w2,
+# info)`` functions and the BODY registry; each is now a plan build +
+# execute.  The unchunked aliases pin n_chunks=1 (the pipelined family in
+# ``repro.core.pipeline`` reads ``info.pipeline_chunks``), matching the
+# legacy bodies they replaced.
+
+def _plan_body(name, n_chunks):
+    def body(x, wg, w1, w3, w2, info: MoEShardInfo):
+        return execute(build_plan(name, info, n_chunks=n_chunks),
+                       x, wg, w1, w3, w2, info)
+    body.__name__ = f"{name}_body"
+    body.__qualname__ = body.__name__
+    body.__doc__ = (f"Plan-built ``{name}`` schedule body "
+                    f"(see ``plan_{name}``).")
+    return body
+
+
+baseline_body = _plan_body("baseline", 1)
+s1_body = _plan_body("s1", 1)
+s2_body = _plan_body("s2", 1)
+s1_seqpar_body = _plan_body("s1_seqpar", 1)
+s2h_body = _plan_body("s2h", 1)
 
 BODY = {
     "baseline": baseline_body,
     "s1": s1_body,
     "s2": s2_body,
-    "s1_seqpar": lambda *a, **k: s1_body(*a, seqpar=True, **k),
+    "s1_seqpar": s1_seqpar_body,
+    "s2h": s2h_body,
 }
 
 # Register the chunk-pipelined variants (*_pipe) into BODY.  The import
 # sits at the bottom to break the schedules <-> pipeline cycle: pipeline
-# needs MoEShardInfo/expert_ffn/_aux_mean from this module.
+# needs MoEShardInfo from this module.
 from repro.core import pipeline as _pipeline  # noqa: E402,F401

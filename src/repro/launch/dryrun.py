@@ -56,6 +56,21 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "artifacts", "dryrun")
 
 
+def _moe_pool_cap(cfg, shape, sizes, nb, sched_name):
+    """Per-device token pool and capacity exactly as apply_moe computes
+    them: the token-shard group is the batch axes plus — under the
+    seqpar contract — the MP axes (moe.shard_pool_capacity)."""
+    from repro.core.moe import shard_pool_capacity
+    from repro.core.pipeline import UNCHUNKED_OF
+    tokens_global = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    seqpar = UNCHUNKED_OF.get(sched_name, sched_name) == "s1_seqpar"
+    n_shard = max(nb, 1) * (max(sizes["mp"], 1) if seqpar else 1)
+    s_local, cap = shard_pool_capacity(tokens_global, n_shard,
+                                       sizes["mp"], cfg.moe.gate_config())
+    return max(s_local, 1), cap
+
+
 def count_params(shapes) -> int:
     import math
     return sum(math.prod(l.shape) if l.shape else 1
@@ -90,7 +105,8 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
               saa_chunks: int = None, seq_parallel: bool = False,
               pipeline_chunks: int = None, run_step: bool = False,
               reduced: bool = False, seq: int = None,
-              batch_size: int = None, wire_dtype: str = None) -> dict:
+              batch_size: int = None, wire_dtype: str = None,
+              dump_plan: bool = False) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -149,17 +165,14 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     sched_auto = (cfg.moe is not None and not sched
                   and cfg.moe.schedule == "auto")
     if cfg.moe is not None and (sched_auto or wire_pick == "auto"):
-        from repro.core.gating import capacity
         from repro.core.pipeline import UNCHUNKED_OF, clamp_chunks
 
-        s_local = max(shape.global_batch * (
-            shape.seq_len if shape.kind != "decode" else 1) // max(nb, 1), 1)
         sizes = dims.sizes(mesh)
-        # mirror apply_moe's capacity + chunk-candidate clamping so the
-        # recorded decision matches what the trace will actually compile
-        align = max(8, sizes["mp"])
-        cap = max(align, -(-capacity(s_local, cfg.moe.gate_config())
-                           // align) * align)
+        # mirror apply_moe's pool/capacity + chunk-candidate clamping so
+        # the recorded decision matches what the trace will compile
+        # (shard_pool_capacity is the same helper apply_moe calls)
+        s_local, cap = _moe_pool_cap(cfg, shape, sizes, nb,
+                                     sched or cfg.moe.schedule)
         cands = tuple(sorted({clamp_chunks(cap // max(sizes["mp"], 1), n)
                               for n in autosched.DEFAULT_CHUNKS}))
         forced = None
@@ -188,6 +201,30 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     else:
         sched_pick = sched or (cfg.moe.schedule if cfg.moe is not None
                                else "n/a")
+
+    plan_dump = None
+    if dump_plan and cfg.moe is not None and sched_pick != "n/a":
+        # serialize the chosen schedule's stage graph exactly as the MoE
+        # layers will build it: same capacity, chunk clamp and wire dtype
+        from repro.core.collectives import CommConfig
+        from repro.core.pipeline import UNCHUNKED_OF
+        from repro.core.plan import build_plan, format_plan, plan_summary
+        from repro.core.schedules import MoEShardInfo
+        sizes = dims.sizes(mesh)
+        s_local, cap = _moe_pool_cap(cfg, shape, sizes, nb, sched_pick)
+        winfo = MoEShardInfo(
+            ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
+            mp_axes=tuple(dims.mp), n_ep=sizes["ep"], n_esp=sizes["esp"],
+            n_mp=sizes["mp"], tokens=s_local, cap=cap,
+            gate=cfg.moe.gate_config(), glu=cfg.moe.glu,
+            saa_chunks=cfg.moe.saa_chunks,
+            pipeline_chunks=max(chunks_pick, 1),
+            comm=CommConfig(
+                wire_dtype=wire_pick if wire_pick != "auto" else "f32",
+                scaling=(cfg.moe.comm or CommConfig()).scaling))
+        p = build_plan(UNCHUNKED_OF.get(sched_pick, sched_pick), winfo)
+        plan_dump = plan_summary(p)
+        print(format_plan(p), flush=True)
 
     t0 = time.perf_counter()
     if shape.kind == "train":
@@ -309,6 +346,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         "variant": (variant + ("+reduced" if reduced else "")).lstrip("+"),
         "schedule": sched_pick, "pipeline_chunks": chunks_pick,
         "wire_dtype": wire_pick,
+        "plan": plan_dump,
         "step_metrics": step_metrics,
         "chips": chips, "dtype": dtype,
         "n_params": n_params, "n_active_params": n_active,
@@ -348,8 +386,12 @@ def main():
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "both"])
     ap.add_argument("--schedule", default=None,
-                    help="force a Parm schedule (baseline/s1/s2/s1_seqpar "
-                         "or a pipelined *_pipe variant)")
+                    help="force a Parm schedule (baseline/s1/s2/s1_seqpar/"
+                         "s2h or a pipelined *_pipe variant)")
+    ap.add_argument("--dump-plan", action="store_true",
+                    help="print the chosen schedule's plan-IR stage graph "
+                         "and record it (stages, deps, wire dtypes, chunk "
+                         "count) in the artifact JSON")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="micro-chunk count for the pipelined bodies")
     ap.add_argument("--wire-dtype", default=None,
@@ -410,7 +452,8 @@ def main():
                                     run_step=args.run_step,
                                     reduced=args.reduced, seq=args.seq,
                                     batch_size=args.batch,
-                                    wire_dtype=args.wire_dtype)
+                                    wire_dtype=args.wire_dtype,
+                                    dump_plan=args.dump_plan)
                     sfx = f"__{args.schedule}" if args.schedule else ""
                     if args.tag:
                         sfx += f"__{args.tag}"

@@ -34,8 +34,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--schedule", default=None,
-                    help="Parm schedule override (baseline/s1/s2/s1_seqpar, "
-                         "their *_pipe pipelined variants, or auto)")
+                    help="Parm schedule override (baseline/s1/s2/s1_seqpar/"
+                         "s2h, their *_pipe pipelined variants, or auto; "
+                         "any schedule registered in repro.core.plan works)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="micro-chunk count for the pipelined bodies "
                          "(1 = unchunked)")

@@ -1,0 +1,224 @@
+"""The eight hand-written Parm schedule bodies, frozen as golden oracles.
+
+These are the PR 1-3 implementations verbatim (baseline/s1/s2/s1_seqpar
+and their chunk-pipelined ``*_pipe`` variants), moved out of
+``src/repro/core/{schedules,pipeline}.py`` when the declarative plan IR
+(``repro.core.plan`` + ``repro.core.executor``) replaced them.  They
+exist only so ``tests/test_plan_executor.py`` can assert exact parity —
+forward, gradients, routing and drop masks — between every plan-built
+schedule and the body it replaced, per (schedule x n_chunks x
+wire_dtype).  Do not extend them; new schedules are plan builders.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.gating import combine, dispatch, topk_gate
+from repro.core.schedules import MoEShardInfo, _aux_mean, expert_ffn
+
+
+# --- baseline ----------------------------------------------------------------
+
+def baseline_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    Ne, Ns = info.n_ep, info.n_esp
+    E = info.gate.n_experts
+    g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)       # (S*Ns, M)
+    cap_g = info.cap * Ns
+    gate = topk_gate(g, wg, info.gate, cap_g)
+    eidx, slot, w, aux = gate
+    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
+                 flat=gate.flat(cap_g, E))                     # (E, T*Ns, M)
+    sb = d.reshape(Ne, E // Ne, cap_g, -1)
+    rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)  # (Ne, El, T*Ns, M)
+    xb = coll.to_expert_batch(rb)                              # (El, Ne*T*Ns, M)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    h = lax.psum(h, info.esp_axes)
+    back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
+                                   info.ep_axes, info.comm)
+    out = combine(back.reshape(E, cap_g, -1), eidx, slot, w, cap_g,
+                  info.kernel, flat=gate.flat(cap_g, E))
+    y = coll.mp_split(out, info.esp_axes, Ns, axis=0)          # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+# --- S1 ----------------------------------------------------------------------
+
+def s1_body(x, wg, w1, w3, w2, info: MoEShardInfo, *, seqpar: bool = False):
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
+    c1 = info.cap if seqpar else info.cap // Nm
+    gate = topk_gate(xs, wg, info.gate, c1)
+    eidx, slot, w, aux = gate
+    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
+                 flat=gate.flat(c1, E))                        # (E, T/Nm, M)
+    sb = coll.dump_em(d, Ne, Ns)                               # (El, G, c1, M)
+    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                     info.comm, split_axis=1,
+                                     concat_axis=1)
+    xb = coll.to_expert_batch_em(rb)                           # (El, G*c1, M)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    back = coll.wire_ep_esp_all_to_all(
+        coll.from_expert_batch_em(h, info.combined_group),
+        info.ep_axes, info.esp_axes, info.comm, split_axis=1,
+        concat_axis=1)
+    mine = coll.undump_reduce_em(back, Ne, Ns)                 # (E, c1, M)
+    y = combine(mine, eidx, slot, w, c1, info.kernel,
+                flat=gate.flat(c1, E))                         # (S/Nm, M)
+    if not seqpar:
+        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm, axis=0)
+    return y, _aux_mean(aux, info)
+
+
+# --- S2 ----------------------------------------------------------------------
+
+def s2_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    gate = topk_gate(x, wg, info.gate, info.cap)
+    eidx, slot, w, aux = gate
+    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
+                 flat=gate.flat(info.cap, E))                  # (E, T, M)
+    ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)            # (E, T/Nm, M)
+    sb = coll.dump_em(ds, Ne, Ns)                              # (El, G, c, M)
+    rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                     info.comm, split_axis=1,
+                                     concat_axis=1)
+    xb = coll.to_expert_batch_em(rb)
+    h = expert_ffn(xb, w1, w3, w2, info)
+    y4 = coll.from_expert_batch_em(h, info.combined_group)     # (El, G, T/Nm, M)
+    full = coll.saa_combine_allgather(
+        y4, info.ep_axes, info.esp_axes, info.mp_axes,
+        n_ep=Ne, n_esp=Ns, n_mp=Nm, n_chunks=info.saa_chunks,
+        comm=info.comm)                                        # (E, T, M)
+    y = combine(full, eidx, slot, w, info.cap, info.kernel,
+                flat=gate.flat(info.cap, E))                   # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+# --- pipelined variants (PR 2) -----------------------------------------------
+
+def clamp_chunks(cap: int, want: int) -> int:
+    n = max(1, min(want, cap))
+    while cap % n:
+        n -= 1
+    return n
+
+
+def _chunks(buf, n_chunks: int, axis: int = 1):
+    c = buf.shape[axis]
+    cs = c // n_chunks
+    return [lax.slice_in_dim(buf, i * cs, (i + 1) * cs, axis=axis)
+            for i in range(n_chunks)]
+
+
+def baseline_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    Ne, Ns = info.n_ep, info.n_esp
+    E = info.gate.n_experts
+    g = coll.mp_all_gather(x, info.esp_axes, Ns, axis=0)        # (S*Ns, M)
+    cap_g = info.cap * Ns
+    gate = topk_gate(g, wg, info.gate, cap_g)
+    eidx, slot, w, aux = gate
+    d = dispatch(g, eidx, slot, cap_g, E, info.kernel,
+                 flat=gate.flat(cap_g, E))                      # (E, T*Ns, M)
+    n = clamp_chunks(cap_g, info.pipeline_chunks)
+    parts = []
+    for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
+        cs = ch.shape[1]
+        sb = ch.reshape(Ne, E // Ne, cs, -1)
+        rb = coll.wire_ep_all_to_all(sb, info.ep_axes, info.comm)
+        xb = coll.to_expert_batch(rb)                           # (El, Ne*cs, M)
+        h = expert_ffn(xb, w1, w3, w2, info)
+        h = lax.psum(h, info.esp_axes)
+        back = coll.wire_ep_all_to_all(coll.from_expert_batch(h, Ne),
+                                       info.ep_axes, info.comm)
+        parts.append(back.reshape(E, cs, -1))
+    full = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
+    out = combine(full, eidx, slot, w, cap_g, info.kernel,
+                  flat=gate.flat(cap_g, E))
+    y = coll.mp_split(out, info.esp_axes, Ns, axis=0)           # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+def s1_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo, *,
+                 seqpar: bool = False):
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    xs = x if seqpar else coll.mp_split(x, info.mp_axes, Nm, axis=0)
+    c1 = info.cap if seqpar else info.cap // Nm
+    gate = topk_gate(xs, wg, info.gate, c1)
+    eidx, slot, w, aux = gate
+    d = dispatch(xs, eidx, slot, c1, E, info.kernel,
+                 flat=gate.flat(c1, E))                         # (E, c1, M)
+    n = clamp_chunks(c1, info.pipeline_chunks)
+    parts = []
+    for ch in _chunks(d, n, axis=1):                            # (E, cs, M)
+        sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
+        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                         info.comm, split_axis=1,
+                                         concat_axis=1)
+        xb = coll.to_expert_batch_em(rb)                        # (El, G*cs, M)
+        h = expert_ffn(xb, w1, w3, w2, info)
+        back = coll.wire_ep_esp_all_to_all(
+            coll.from_expert_batch_em(h, info.combined_group),
+            info.ep_axes, info.esp_axes, info.comm, split_axis=1,
+            concat_axis=1)
+        parts.append(coll.undump_reduce_em(back, Ne, Ns))       # (E, cs, M)
+    mine = parts[0] if n == 1 else jnp.concatenate(parts, axis=1)
+    y = combine(mine, eidx, slot, w, c1, info.kernel,
+                flat=gate.flat(c1, E))                          # (S/Nm, M)
+    if not seqpar:
+        y = coll.wire_mp_all_gather(y, info.mp_axes, Nm, info.comm,
+                                    axis=0)
+    return y, _aux_mean(aux, info)
+
+
+def s2_pipe_body(x, wg, w1, w3, w2, info: MoEShardInfo):
+    Ne, Ns, Nm = info.n_ep, info.n_esp, info.n_mp
+    E = info.gate.n_experts
+    gate = topk_gate(x, wg, info.gate, info.cap)
+    eidx, slot, w, aux = gate
+    d = dispatch(x, eidx, slot, info.cap, E, info.kernel,
+                 flat=gate.flat(info.cap, E))                   # (E, T, M)
+    ds = coll.mp_split(d, info.mp_axes, Nm, axis=1)             # (E, T/Nm, M)
+    c = ds.shape[1]
+    n = clamp_chunks(c, info.pipeline_chunks)
+    parts = []
+    for ch in _chunks(ds, n, axis=1):                           # (E, cs, M)
+        sb = coll.dump_em(ch, Ne, Ns)                           # (El, G, cs, M)
+        rb = coll.wire_ep_esp_all_to_all(sb, info.ep_axes, info.esp_axes,
+                                         info.comm, split_axis=1,
+                                         concat_axis=1)
+        xb = coll.to_expert_batch_em(rb)
+        h = expert_ffn(xb, w1, w3, w2, info)
+        y4 = coll.from_expert_batch_em(h, info.combined_group)
+        back = coll.wire_ep_esp_all_to_all(y4, info.ep_axes,
+                                           info.esp_axes, info.comm,
+                                           split_axis=1, concat_axis=1)
+        comb = coll.undump_reduce_em(back, Ne, Ns)              # (E, cs, M)
+        if Nm == 1:
+            parts.append(comb[:, None])                         # (E, 1, cs, M)
+        else:
+            parts.append(coll.wire_all_gather_stacked(
+                comb, tuple(info.mp_axes), Nm, info.comm,
+                axis=1))                                        # (E, Nm, cs, M)
+    stacked = jnp.stack(parts, axis=2)
+    full = stacked.reshape(E, Nm * c, -1)                       # (E, T, M)
+    y = combine(full, eidx, slot, w, info.cap, info.kernel,
+                flat=gate.flat(info.cap, E))                    # (S, M)
+    return y, _aux_mean(aux, info)
+
+
+LEGACY_BODY = {
+    "baseline": baseline_body,
+    "s1": s1_body,
+    "s2": s2_body,
+    "s1_seqpar": lambda *a, **k: s1_body(*a, seqpar=True, **k),
+    "baseline_pipe": baseline_pipe_body,
+    "s1_pipe": s1_pipe_body,
+    "s2_pipe": s2_pipe_body,
+    "s1_seqpar_pipe": lambda *a, **k: s1_pipe_body(*a, seqpar=True, **k),
+}

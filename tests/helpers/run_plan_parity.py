@@ -1,0 +1,139 @@
+"""Subprocess helper: plan-executor parity vs the golden legacy bodies.
+
+Run as:  python tests/helpers/run_plan_parity.py <mode>
+  mode = merged   : mesh (ep=4, model=2), MP==ESP — FULL matrix: every
+                    schedule x n_chunks in {1,2,4} x wire in {f32,bf16}
+  mode = distinct : mesh (ep=2, esp=2, mp=2) — reduced grid
+  mode = drops    : merged mesh, capacity_factor < 1 — reduced grid plus
+                    bit-identical drop-mask assertions
+
+For every combination, the plan-built schedule (``repro.core.plan`` +
+``repro.core.executor``) and the hand-written legacy body it replaced
+(``tests/helpers/legacy_bodies.py``, swapped into ``schedules.BODY`` for
+the reference trace) run inside ONE jitted function that returns both
+paths' forward outputs, aux scalars and parameter gradients:
+
+  * forward outputs within a tight f32 envelope of the legacy body's,
+  * gradients within the run_schedule_equiv envelopes,
+  * gate-derived aux scalars (aux_loss / z_loss / drop_frac)
+    bit-identical — the executor runs the identical gate,
+  * in drops mode the zero-row drop masks bit-identical.
+
+``s2h`` (hierarchical, IR-only — no legacy body ever existed) is checked
+against the legacy **s2** body: the two-hop AlltoAll decomposition is
+pure data movement, so they compute the same function.
+
+Prints "OK <mode>" on success; asserts otherwise.
+"""
+import os
+import sys
+from contextlib import contextmanager
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import legacy_bodies
+import repro.core.schedules as S
+from repro.core.collectives import CommConfig
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+from repro.parallel.mesh import ParallelDims, make_mesh
+
+FWD_TOL = dict(rtol=2e-4, atol=2e-5)    # f32 reassociation headroom only
+GRAD_TOL = dict(rtol=5e-3, atol=5e-4)
+
+
+@contextmanager
+def legacy_world():
+    """Swap the golden legacy bodies into the live BODY registry (the
+    dict is shared with apply_moe, so patching it redirects the trace)."""
+    saved = dict(S.BODY)
+    S.BODY.update(legacy_bodies.LEGACY_BODY)
+    try:
+        yield
+    finally:
+        S.BODY.clear()
+        S.BODY.update(saved)
+
+
+def main(mode: str):
+    if mode in ("merged", "drops"):
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+        scheds = ["baseline", "s1", "s2", "s1_seqpar", "s2h"]
+    else:
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+        scheds = ["baseline", "s1", "s2", "s2h"]
+
+    # the full matrix runs once (merged); the other modes keep CI time
+    # bounded with a reduced grid over the same code paths
+    full = mode == "merged"
+    chunk_grid = (1, 2, 4) if full else (1, 2)
+    wire_grid = ("f32", "bf16") if mode != "distinct" else ("f32",)
+
+    f = 0.5 if mode == "drops" else 8.0
+    cfg0 = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                     capacity_factor=f, schedule="baseline")
+    params = init_moe_params(jax.random.PRNGKey(0), cfg0)
+    B = 32 if mode == "drops" else 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 16, 32))
+
+    def run_pair(sched, nc, wire):
+        """One jit: (y, aux, grads) for the plan path AND the golden
+        legacy path (s2h's golden reference is the legacy s2 body)."""
+        cfg = replace(cfg0, pipeline_chunks=nc,
+                      comm=CommConfig(wire_dtype=wire))
+        golden = "s2" if sched == "s2h" else sched
+
+        def loss(p, x, s):
+            y, aux = apply_moe(x, p, mesh=mesh, dims=dims, cfg=cfg,
+                               schedule=s)
+            return (jnp.sum(y ** 2) + aux["aux_loss"] + aux["z_loss"],
+                    (y, aux))
+
+        def both(p, x):
+            (_, (y1, a1)), g1 = jax.value_and_grad(
+                loss, has_aux=True)(p, x, sched)
+            with legacy_world():
+                (_, (y2, a2)), g2 = jax.value_and_grad(
+                    loss, has_aux=True)(p, x, golden)
+            return y1, a1, g1, y2, a2, g2
+
+        out = jax.jit(both)(params, x)
+        return jax.tree.map(np.asarray, out)
+
+    for sched in scheds:
+        for nc in chunk_grid:
+            for wire in wire_grid:
+                tag = f"{sched} nc={nc} wire={wire}"
+                y, aux, g, y_ref, aux_ref, g_ref = run_pair(sched, nc,
+                                                            wire)
+                np.testing.assert_allclose(y, y_ref, err_msg=tag,
+                                           **FWD_TOL)
+                # the executor runs the identical pre-wire gate: every
+                # gate-derived scalar must be bit-identical
+                for k in ("aux_loss", "z_loss", "drop_frac"):
+                    assert float(aux[k]) == float(aux_ref[k]), \
+                        (tag, k, aux, aux_ref)
+                if mode == "drops":
+                    assert float(aux_ref["drop_frac"]) > 0.0, tag
+                    # dropped tokens are exact zeros: identical zero
+                    # masks <=> identical drop sets, bit-for-bit
+                    np.testing.assert_array_equal(
+                        (np.abs(y) == 0.0).all(axis=-1),
+                        (np.abs(y_ref) == 0.0).all(axis=-1),
+                        err_msg=f"{tag} drop mask")
+                jax.tree.map(
+                    lambda a, b: np.testing.assert_allclose(
+                        a, b, err_msg=f"{tag} grad", **GRAD_TOL),
+                    g, g_ref)
+    print("OK", mode)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "merged")

@@ -31,17 +31,49 @@ def fresh_cache():
 
 class TestAnalytic:
     def test_decision_is_argmin_of_perf_model(self):
+        """The analytic grid is the plan registry x chunk candidates,
+        scored by walking each candidate's plan graph (t_plan)."""
+        from repro.core import plan as planlib
         pm = toy_model()
         s = shape()
         d = decide(s, perf_model=pm)
-        cands = {(sc, n): pm.t_pipelined(s, sc, n)
-                 for sc in ("s1", "s2") for n in (1, 2, 4, 8)}
+        cands = {(sc, n): pm.t_plan(planlib.plan_for_shape(sc, s, n), s)
+                 for sc in planlib.analytic_schedules()
+                 for n in (1, 2, 4, 8)}
         best = min(cands, key=cands.get)
-        assert (d.schedule, d.n_chunks) == best
+        assert cands[(d.schedule, d.n_chunks)] == cands[best]
         assert d.source == "analytic"
         # times are ranked fastest-first and cover every candidate
         assert len(d.times) == len(cands)
         assert [t for _, t in d.times] == sorted(t for _, t in d.times)
+
+    def test_registered_schedule_joins_the_grid(self):
+        """Satellite acceptance: registering a plan makes it a candidate
+        without touching autosched."""
+        from repro.core import plan as planlib
+        assert "s2h" in planlib.analytic_schedules()
+        d = decide(shape(), perf_model=toy_model())
+        assert any(c[0] == "s2h" for c, _ in d.times)
+        d2 = decide(shape(L=512), perf_model=toy_model(), mode="measured",
+                    measure=lambda cands: {c: 1.0 for c in cands})
+        assert any(c[0] == "s2h" for c, _ in d2.times)
+
+    def test_late_registration_invalidates_default_grid(self):
+        """The cache key carries the resolved schedule grid: a plan
+        registered AFTER a cached decision must still be scored on the
+        next decide() for the same shape."""
+        from repro.core import plan as planlib
+        pm = toy_model()
+        d1 = decide(shape(), perf_model=pm)
+        assert not any(c[0] == "s1_late" for c, _ in d1.times)
+        planlib.register_plan(
+            "s1_late", lambda i: planlib.PLANS["s1"].builder(i),
+            analytic=True, measured=False)
+        try:
+            d2 = decide(shape(), perf_model=pm)
+            assert any(c[0] == "s1_late" for c, _ in d2.times)
+        finally:
+            planlib.PLANS.pop("s1_late", None)
 
     def test_cached_and_deterministic(self):
         pm = toy_model()

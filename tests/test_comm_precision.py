@@ -169,13 +169,15 @@ class TestPerfModelWire:
 
 class TestJointDecision:
     def test_argmin_over_triple_grid(self):
+        from repro.core import plan as planlib
         pm = toy_model()
         s = shape()
         d = autosched.decide(s, perf_model=pm,
                              wire_candidates=("f32", "bf16"))
-        cands = {(sc, n, w): pm.t_pipelined(s, sc, n, wire_dtype=w)
-                 for sc in ("s1", "s2") for n in (1, 2, 4, 8)
-                 for w in ("f32", "bf16")}
+        cands = {(sc, n, w): pm.t_plan(planlib.plan_for_shape(sc, s, n),
+                                       s, wire_dtype=w)
+                 for sc in planlib.analytic_schedules()
+                 for n in (1, 2, 4, 8) for w in ("f32", "bf16")}
         best = min(cands.values())
         assert cands[(d.schedule, d.n_chunks, d.wire_dtype)] == best
         assert len(d.times) == len(cands)
