@@ -1,0 +1,101 @@
+"""Serving-engine benchmark: throughput + latency percentiles over the
+(decode batch x schedule x wire) grid.
+
+Each cell serves a synthetic request trace (mixed prompt lengths, fixed
+generation budget) through the continuous-batching engine on the
+reduced MoE arch and reports microseconds per generated token plus the
+derived tok/s and p50/p95/p99 request-latency percentiles — the serving
+analogue of the paper's per-layer schedule sweeps: decode-time pools
+pick a different (schedule, wire) point than training, and this is the
+bench that shows it.
+
+Run under 8 fake CPU devices (benchmarks/run.py does this):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.collectives import CommConfig
+from repro.models import build_model
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.serve import Engine, latency_stats
+
+ARCH = "qwen3-moe-30b-a3b"
+
+
+def serve_once(cfg, mesh, dims, *, max_batch, schedule, wire, n_requests,
+               gen, seed=0):
+    if wire != "f32":
+        cfg = replace(cfg, moe=replace(
+            cfg.moe, comm=CommConfig(wire_dtype=wire)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, mesh, dims, max_batch=max_batch, max_len=64,
+                    schedule=None if schedule == "auto" else schedule)
+    rng = np.random.RandomState(seed)
+    # warmup: compile prefill buckets + the decode step
+    engine.submit(rng.randint(0, cfg.vocab_size, 8), 2)
+    engine.run(params)
+    import time
+    for _ in range(n_requests):
+        engine.submit(rng.randint(0, cfg.vocab_size, rng.randint(4, 13)),
+                      gen)
+    t0 = time.perf_counter()
+    done = engine.run(params)
+    dt = time.perf_counter() - t0
+    stats = latency_stats(done)
+    n_tok = stats["n_tokens"]
+    return 1e6 * dt / max(n_tok, 1), stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one tiny grid cell per axis")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=8)
+    args, _ = ap.parse_known_args()
+
+    n_dev = jax.device_count()
+    d = max(1, n_dev // 2) if n_dev > 1 else 1
+    mesh = make_mesh((d, max(n_dev // d, 1)), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    cfg = get_config(ARCH).reduced()
+
+    # decode batch must put >= n_mp tokens on every shard for the real
+    # decode-schedule path; below that the replicated fallback serves
+    min_batch = max(2 * d, 2)
+    if args.smoke:
+        grid = [(min_batch, "auto", "f32"), (min_batch, "s1d", "bf16")]
+        args.requests, args.gen = 6, 4
+    else:
+        grid = [(b, s, w)
+                for b in (min_batch, 2 * min_batch)
+                for s in ("auto", "s1d", "s2")
+                for w in ("f32", "bf16")]
+
+    for max_batch, schedule, wire in grid:
+        us_tok, stats = serve_once(
+            cfg, mesh, dims, max_batch=max_batch, schedule=schedule,
+            wire=wire, n_requests=args.requests, gen=args.gen)
+        emit(f"serve_{ARCH}_b{max_batch}_{schedule}_{wire}", us_tok,
+             f"tok_per_s={stats['tok_per_s']:.1f};"
+             f"p50_ms={stats['p50_ms']:.0f};"
+             f"p95_ms={stats['p95_ms']:.0f};"
+             f"p99_ms={stats['p99_ms']:.0f};"
+             f"ttft_p50_ms={stats['ttft_p50_ms']:.0f}")
+    if args.smoke:
+        print("# bench_serve smoke ok")
+
+
+if __name__ == "__main__":
+    main()

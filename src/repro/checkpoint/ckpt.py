@@ -57,6 +57,18 @@ def save_checkpoint(path: str, tree, step: int = 0) -> str:
     os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
     flat = _flatten(jax.tree.map(np.asarray, tree))
     flat["__step__"] = np.asarray(step)
+    # ml_dtypes leaves (bfloat16 / float8_*): np.savez demotes them to a
+    # raw void dtype that np.load hands back as |V2 arrays jax rejects.
+    # Ship the raw bits as same-width uints and record the true dtype, so
+    # restore is bit-exact (save -> restore -> one-more-step parity,
+    # tests/test_checkpoint.py).
+    exotic = {}
+    for k, a in list(flat.items()):
+        if isinstance(a, np.ndarray) and a.dtype.isbuiltin != 1:
+            exotic[k] = str(a.dtype)
+            flat[k] = a.view(np.dtype(f"u{a.dtype.itemsize}"))
+    flat["__dtypes__"] = np.frombuffer(
+        json.dumps(exotic).encode(), dtype=np.uint8)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
     os.close(fd)
@@ -75,6 +87,11 @@ def load_checkpoint(path: str, shardings=None):
     with np.load(path) as z:
         flat = {k: z[k] for k in z.files}
     step = int(flat.pop("__step__", 0))
+    dtypes = flat.pop("__dtypes__", None)
+    if dtypes is not None:
+        # restore ml_dtypes leaves from their uint bit-carriers (bit-exact)
+        for k, name in json.loads(bytes(dtypes.tobytes()).decode()).items():
+            flat[k] = flat[k].view(np.dtype(name))
     tree = _unflatten(flat)
     if shardings is not None:
         tree = jax.tree.map(

@@ -107,8 +107,9 @@ def cache_summary(exclude=()) -> str:
         if key in exclude:
             continue
         shape, mode = key[0], key[1]
+        cls = " decode" if getattr(shape, "infer", False) else ""
         lines.append(
-            f"autosched[{mode}] BxL={shape.B}x{shape.L} M={shape.M} "
+            f"autosched[{mode}{cls}] BxL={shape.B}x{shape.L} M={shape.M} "
             f"E={shape.E} ep/esp/mp={shape.n_ep}/{shape.n_esp}/{shape.n_mp}"
             f" -> {d.schedule} x{d.n_chunks} chunks wire={d.wire_dtype}"
             f" ({d.source})")
@@ -147,12 +148,16 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
     # Resolve the schedule grid BEFORE the cache lookup: the registry can
     # grow (register_plan) after a decision was cached, and the stale
     # entry must not shadow the widened grid.
+    # The decode shape class (shape.infer) widens the grid to the
+    # decode-dedicated plans (s1d) — and, being part of ``shape``, also
+    # keys the cache, so a decode decision can never evict a training/
+    # prefill decision for the same sizes.
     if schedules is not None:
         scheds = tuple(schedules)
     elif mode == "measured":
-        scheds = planlib.measured_schedules()
+        scheds = planlib.measured_schedules(infer=shape.infer)
     else:
-        scheds = planlib.analytic_schedules()
+        scheds = planlib.analytic_schedules(infer=shape.infer)
     key = (shape, mode, tuple(chunk_candidates), pm, wire_candidates,
            scheds)
     hit = _CACHE.get(key)

@@ -115,7 +115,7 @@ def moe_param_specs(cfg: MoEConfig, mesh, dims: ParallelDims) -> dict:
 
 
 def shard_pool_capacity(tokens_global: int, n_token_shard: int, n_mp: int,
-                        gate_cfg: GateConfig):
+                        gate_cfg: GateConfig, infer: bool = False):
     """(s_local, cap) for one device's token pool — THE capacity formula.
 
     ``s_local`` is the per-shard pool (``tokens_global`` split over the
@@ -124,11 +124,21 @@ def shard_pool_capacity(tokens_global: int, n_token_shard: int, n_mp: int,
     S1/S2 capacity splits stay divisible.  ``apply_moe`` computes its
     capacities through this helper and ``launch/dryrun.py`` mirrors it,
     so the recorded decisions/plans match what actually compiles.
+
+    ``infer=True`` (decode-time pools) raises ``cap`` to cover the whole
+    pool: a decode batch mixes live requests with idle padding rows, and
+    Parm-style capacity drops would let one request's token be displaced
+    by batch *composition* — with ``cap >= pool`` every token always has
+    a slot, so a row's decode output is independent of its batch mates
+    (the invariant the serving engine's parity tests pin down).  The
+    memory cost is E * pool * M, negligible at decode sizes.
     """
     s_local = tokens_global // max(n_token_shard, 1)
     align = max(8, n_mp)
     cap = max(align, -(-capacity(max(s_local, 1), gate_cfg)
                        // align) * align)
+    if infer:
+        cap = max(cap, -(-max(s_local, 1) // align) * align)
     return s_local, cap
 
 
@@ -174,11 +184,17 @@ def select_schedule(cfg: MoEConfig, shape: MoELayerShape,
 
 def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
               schedule: Optional[str] = None,
-              perf_model: Optional[PerfModel] = None):
+              perf_model: Optional[PerfModel] = None,
+              infer: bool = False):
     """Run one MoE layer under the configured Parm schedule.
 
     x: (B, L, M) activations; replicated over MP axes (or MP-split over
     them under the ``s1_seqpar`` contract).  Returns (y, aux).
+
+    ``infer=True`` marks a decode-time call (``decode_block``): the
+    layer shape joins the *decode* shape class — its own autosched cache
+    entries, the decode-widened schedule grid (``s1d``), no capacity
+    chunking, and drop-free capacity (``shard_pool_capacity``).
     """
     B, L, M = x.shape
     sizes = dims.sizes(mesh)
@@ -201,7 +217,7 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
     n_token_shard = axis_size(mesh, token_shard)
 
     s_local, cap = shard_pool_capacity(tokens_global, n_token_shard,
-                                       n_mp, gate_cfg)
+                                       n_mp, gate_cfg, infer=infer)
     divisible = (tokens_global % max(n_token_shard, 1) == 0
                  and (seqpar or s_local % max(n_mp, 1) == 0)
                  and s_local > 0)
@@ -216,12 +232,16 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         shape = MoELayerShape(
             B=max(s_local // max(L, 1), 1), L=min(L, s_local), M=M,
             H=cfg.d_ff, E=cfg.n_experts, k=cfg.top_k,
-            f=cfg.capacity_factor, n_mp=n_mp, n_esp=n_esp, n_ep=n_ep)
+            f=cfg.capacity_factor, n_mp=n_mp, n_esp=n_esp, n_ep=n_ep,
+            infer=infer)
         # Only score chunk counts the bodies can actually run: every
         # schedule's chunked dim is a multiple of cap/N_MP, so clamping
         # against it keeps scored == executed (and dedups candidates).
-        cands = tuple(sorted({clamp_chunks(cap // max(n_mp, 1), n)
-                              for n in autosched.DEFAULT_CHUNKS}))
+        # Decode pools never chunk: the per-chunk alphas dominate at a
+        # handful of tokens, so the decode grid is pinned to n_chunks=1.
+        cands = ((1,) if infer else
+                 tuple(sorted({clamp_chunks(cap // max(n_mp, 1), n)
+                               for n in autosched.DEFAULT_CHUNKS})))
         # A forced schedule with wire="auto" restricts the decision to
         # that schedule (and the forced chunk count): only the wire axis
         # is still free.

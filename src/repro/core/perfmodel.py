@@ -37,6 +37,12 @@ DCI_BW = 6.25e9           # inter-pod data-center interconnect per chip (est.)
 WIRE_DTYPES = ("f32", "bf16", "fp8_e4m3")
 WIRE_BYTES = {"f32": 4.0, "bf16": 2.0, "fp8_e4m3": 1.0}
 
+#: Schedules whose expert FFN is NOT MP-split: every MP rank computes the
+#: full expert batch (the baseline's redundancy — and, deliberately, the
+#: decode-dedicated ``s1d``, where the pool is tiny and the redundant
+#: compute is cheaper than the extra collective).
+REDUNDANT_COMPUTE = ("baseline", "s1d")
+
 
 @dataclass(frozen=True)
 class AlphaBeta:
@@ -87,6 +93,11 @@ class MoELayerShape:
     n_mp: int = 1
     n_esp: int = 1
     n_ep: int = 1
+    # Shape *class*, not a size: True for decode-time (inference) pools.
+    # It is part of the autosched cache key, so a decode decision can
+    # never evict a training/prefill decision for a coinciding size, and
+    # it widens the schedule grid to the decode-dedicated plans (s1d).
+    infer: bool = False
 
     @property
     def T(self) -> float:
@@ -192,7 +203,7 @@ class PerfModel:
         — the very redundancy Parm removes (paper Fig. 3a).
         """
         slots = s.E * s.T * s.n_esp
-        if schedule != "baseline":
+        if schedule not in REDUNDANT_COMPUTE:
             slots /= s.n_mp
         return 6.0 * slots * s.M * s.H / s.n_esp / self.flops_per_s
 
@@ -329,6 +340,25 @@ class PerfModel:
         tc = max(per_chunk.values(), default=0.0)
         tf = self.t_ffn(s, plan.base or plan.name) / n
         return fixed + tc + (n - 1) * max(tc, tf) + tf
+
+    # --- decode latency model (repro.serve) ---------------------------------
+    def t_decode(self, s: MoELayerShape, wire_dtype=None) -> float:
+        """Predicted seconds for one MoE layer at *decode* time: the best
+        candidate of the decode grid (``plan.analytic_schedules(infer=
+        True)``, which adds the decode-dedicated plans, e.g. ``s1d``) at
+        ``n_chunks=1`` — decode pools are a handful of tokens, far too
+        small for capacity chunking to pay for its alphas.
+
+        The serving engine uses this for batch-bucket sizing
+        (``repro.serve.engine.suggest_max_batch``): decode steps are
+        alpha-dominated, so per-token latency falls with batch until the
+        bandwidth terms take over.
+        """
+        from repro.core import plan as planlib  # lazy: avoid module cycle
+        return min(
+            self.t_plan(planlib.plan_for_shape(name, s, 1), s,
+                        wire_dtype=wire_dtype)
+            for name in planlib.analytic_schedules(infer=True))
 
     # --- Algorithm 1 --------------------------------------------------------
     def algorithm1(self, s: MoELayerShape) -> str:

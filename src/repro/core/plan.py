@@ -349,40 +349,52 @@ class PlanEntry:
     (``s1_seqpar`` is neither: it needs the sequence-parallel activation
     contract, so it is only ever forced; ``baseline`` is measured-only —
     Algorithm 1 proves S1/S2 dominate it analytically, §IV-B).
+    ``decode_only`` marks decode-dedicated schedules (``s1d``): they are
+    enumerated only for the *inference* shape class — decode pools are a
+    handful of tokens, where trading redundant MP compute for one fewer
+    collective wins, which is never true at training sizes.
     """
 
     builder: Callable
     analytic: bool = True
     measured: bool = True
+    decode_only: bool = False
 
 
 PLANS: dict = {}
 
 
 def register_plan(name: str, builder: Optional[Callable] = None, *,
-                  analytic: bool = True, measured: bool = True):
+                  analytic: bool = True, measured: bool = True,
+                  decode_only: bool = False):
     """Register a schedule plan builder (usable as a decorator).
 
     ``builder(info) -> Plan`` takes the ``MoEShardInfo`` (or any object
     with the same static fields) and returns the *unchunked, unwired*
     base plan.  Registration makes the schedule selectable by name and —
-    per its flags — part of the autoscheduler's candidate grids.
+    per its flags — part of the autoscheduler's candidate grids
+    (``decode_only=True`` restricts it to the decode grids).
     """
     def deco(fn):
         PLANS[name] = PlanEntry(builder=fn, analytic=analytic,
-                                measured=measured)
+                                measured=measured, decode_only=decode_only)
         return fn
     return deco if builder is None else deco(builder)
 
 
-def analytic_schedules() -> tuple:
-    """Registered schedules the analytic decision grid enumerates."""
-    return tuple(n for n, e in PLANS.items() if e.analytic)
+def analytic_schedules(infer: bool = False) -> tuple:
+    """Registered schedules the analytic decision grid enumerates.
+    ``infer=True`` is the decode grid: it adds the decode-dedicated
+    plans the training grid never scores."""
+    return tuple(n for n, e in PLANS.items()
+                 if e.analytic and (infer or not e.decode_only))
 
 
-def measured_schedules() -> tuple:
-    """Registered schedules the measured decision grid enumerates."""
-    return tuple(n for n, e in PLANS.items() if e.measured)
+def measured_schedules(infer: bool = False) -> tuple:
+    """Registered schedules the measured decision grid enumerates
+    (``infer=True``: the decode grid, incl. decode-only plans)."""
+    return tuple(n for n, e in PLANS.items()
+                 if e.measured and (infer or not e.decode_only))
 
 
 def build_plan(name: str, info, n_chunks: Optional[int] = None) -> Plan:

@@ -19,6 +19,10 @@ communication happens and how much of it there is:
            run the hops in opposite orders, so one chunk's intra-node
            A2A rides in the shadow of another's inter-node A2A (Parm
            §IV's intra/inter overlap).
+  S1D      (decode-dedicated, serving engine): S1 without PauseMP —
+           every MP rank redundantly computes the tiny decode pool,
+           trading n_mp x compute for one fewer collective.  Only ever
+           scored for the inference shape class (``decode_only``).
 
 Plus the beyond-paper ``s1_seqpar`` variant: under a sequence-parallel
 activation contract the MoE boundary is already MP-split, so S1's entry
@@ -40,7 +44,7 @@ from repro.core.gating import GateConfig
 from repro.core.plan import Plan, build_plan, register_plan, stage
 from repro.kernels.registry import KernelConfig
 
-SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "s2h",
+SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "s2h", "s1d",
              "baseline_pipe", "s1_pipe", "s2_pipe", "s1_seqpar_pipe",
              "s2h_pipe", "auto")
 
@@ -179,6 +183,33 @@ def plan_s2h(info) -> Plan:
                          dict(hier, stack_ag=True))
 
 
+@register_plan("s1d", decode_only=True)
+def plan_s1d(info) -> Plan:
+    """Decode-dedicated schedule (serving engine): S1 with PauseMP *not*
+    engaged.  A decode pool is a handful of tokens, so every MP rank
+    gates the full (replicated) pool, dispatches the full capacity
+    buffer through one fused EP&ESP-AlltoAll, and redundantly computes
+    the expert FFN — no entry split, no exit MP-AllGather.  At training
+    sizes the ``n_mp``x comm/compute blow-up makes this strictly worse
+    than S1/S2 (hence ``decode_only``); at decode sizes every collective
+    is alpha-dominated and dropping the AllGather wins outright — the
+    regime-dependent-schedule point of the paper, cashed in for serving.
+    No stage touches the MP axes, so MP ranks stay bitwise replicated;
+    with ``n_mp == 1`` the graph is exactly S1's.  No chunk region:
+    decode pools are too small for capacity pipelining to pay for its
+    per-chunk startup (``split_capacity`` is a no-op on this plan)."""
+    return Plan("s1d", base="s1d", stages=(
+        stage("gate", "gate", deps=("x",), cap="pool"),
+        stage("disp", "dispatch", deps=("x", "gate")),
+        stage("a2a_d", "dispatch_a2a", deps=("disp",), axes=("ep", "esp"),
+              wire=True, size="etm*esp", fused=True),
+        stage("ffn", "expert_ffn", deps=("a2a_d",)),
+        stage("a2a_c", "combine_a2a", deps=("ffn",), axes=("ep", "esp"),
+              wire=True, size="etm*esp", fused=True),
+        stage("comb", "combine", deps=("a2a_c", "gate")),
+    ), output="comb")
+
+
 # --- thin body aliases (the public schedule API) -----------------------------
 # External callers keep seeing the classic ``*_body(x, wg, w1, w3, w2,
 # info)`` functions and the BODY registry; each is now a plan build +
@@ -202,6 +233,7 @@ s1_body = _plan_body("s1", 1)
 s2_body = _plan_body("s2", 1)
 s1_seqpar_body = _plan_body("s1_seqpar", 1)
 s2h_body = _plan_body("s2h", 1)
+s1d_body = _plan_body("s1d", 1)
 
 BODY = {
     "baseline": baseline_body,
@@ -209,6 +241,7 @@ BODY = {
     "s2": s2_body,
     "s1_seqpar": s1_seqpar_body,
     "s2h": s2h_body,
+    "s1d": s1d_body,
 }
 
 # Register the chunk-pipelined variants (*_pipe) into BODY.  The import

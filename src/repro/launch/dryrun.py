@@ -59,7 +59,8 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def _moe_pool_cap(cfg, shape, sizes, nb, sched_name):
     """Per-device token pool and capacity exactly as apply_moe computes
     them: the token-shard group is the batch axes plus — under the
-    seqpar contract — the MP axes (moe.shard_pool_capacity)."""
+    seqpar contract — the MP axes (moe.shard_pool_capacity).  Decode
+    shapes mirror the inference class (drop-free capacity)."""
     from repro.core.moe import shard_pool_capacity
     from repro.core.pipeline import UNCHUNKED_OF
     tokens_global = shape.global_batch * (
@@ -67,7 +68,8 @@ def _moe_pool_cap(cfg, shape, sizes, nb, sched_name):
     seqpar = UNCHUNKED_OF.get(sched_name, sched_name) == "s1_seqpar"
     n_shard = max(nb, 1) * (max(sizes["mp"], 1) if seqpar else 1)
     s_local, cap = shard_pool_capacity(tokens_global, n_shard,
-                                       sizes["mp"], cfg.moe.gate_config())
+                                       sizes["mp"], cfg.moe.gate_config(),
+                                       infer=shape.kind == "decode")
     return max(s_local, 1), cap
 
 
@@ -173,8 +175,11 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         # (shard_pool_capacity is the same helper apply_moe calls)
         s_local, cap = _moe_pool_cap(cfg, shape, sizes, nb,
                                      sched or cfg.moe.schedule)
-        cands = tuple(sorted({clamp_chunks(cap // max(sizes["mp"], 1), n)
-                              for n in autosched.DEFAULT_CHUNKS}))
+        infer = shape.kind == "decode"
+        # decode pools never chunk (mirrors apply_moe's infer grid)
+        cands = ((1,) if infer else
+                 tuple(sorted({clamp_chunks(cap // max(sizes["mp"], 1), n)
+                               for n in autosched.DEFAULT_CHUNKS})))
         forced = None
         if not sched_auto:
             # forced schedule + wire="auto": wire-only decision, exactly
@@ -189,7 +194,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             B=1, L=s_local, M=cfg.d_model, H=cfg.moe.d_ff,
             E=cfg.moe.n_experts, k=cfg.moe.top_k,
             f=cfg.moe.capacity_factor, n_mp=sizes["mp"],
-            n_esp=sizes["esp"], n_ep=sizes["ep"]),
+            n_esp=sizes["esp"], n_ep=sizes["ep"], infer=infer),
             chunk_candidates=cands, wire_candidates=wire_cands,
             schedules=forced)
         if sched_auto:

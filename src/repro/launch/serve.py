@@ -1,77 +1,118 @@
-"""Serving launcher: batched greedy decoding against a KV cache.
+"""Serving launcher: continuous-batching engine over synthetic traffic.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-      --batch 4 --prompt-len 16 --gen 32
+      --requests 16 --arrival-rate 8 --max-batch 8 --gen 32 --schedule auto
+
+Thin CLI over ``repro.serve.Engine``: synthesizes ``--requests`` random
+prompts (lengths uniform in [4, --prompt-len]), optionally spreads their
+arrivals at ``--arrival-rate`` req/s, serves them with continuous
+batching + decode-dedicated MoE schedules, and prints throughput and
+latency percentiles.  ``--smoke`` caps everything for CI and exits 0 on
+a clean run.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
 from repro.parallel.mesh import ParallelDims, make_mesh
-from repro.train import make_serve_step
+from repro.serve import Engine, SamplerConfig, latency_stats
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--schedule", default=None)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
+def build_engine(args, cfg, model):
     n_dev = jax.device_count()
     d = max(1, n_dev // 2) if n_dev > 1 else 1
     mesh = make_mesh((d, max(n_dev // d, 1)), ("data", "model"))
     dims = (ParallelDims(ep=("data",), esp=("model",), mp=("model",))
             if cfg.moe is not None
             else ParallelDims(dp=("data",), mp=("model",)))
+    schedule = None if args.schedule in (None, "auto") else args.schedule
+    max_batch = args.max_batch
+    if max_batch <= 0:               # perf-model bucket sizing (t_decode)
+        from repro.serve import suggest_max_batch
+        sizes = dims.sizes(mesh)
+        max_batch = suggest_max_batch(
+            cfg, n_ep=sizes["ep"], n_esp=sizes["esp"], n_mp=sizes["mp"],
+            candidates=(1, 2, 4, 8, 16, 32))
+        print(f"auto max-batch (t_decode): {max_batch}")
+    return Engine(model, mesh, dims, max_batch=max_batch,
+                  max_len=args.max_len, schedule=schedule,
+                  prefill_batch=args.prefill_batch), mesh, dims
 
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="requests/s (0 = all arrive at t=0)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="decode batch / KV slots (0 = auto via t_decode)")
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max synthetic prompt length")
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--prefill-batch", type=int, default=1)
+    ap.add_argument("--schedule", default=None,
+                    help="force one MoE schedule (default: auto decisions)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny run, assert clean completion")
+    args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.gen = min(args.gen, 8)
+        args.max_len = min(args.max_len, 64)
+        args.prompt_len = min(args.prompt_len, 12)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
     model = build_model(cfg)
+    engine, mesh, dims = build_engine(args, cfg, model)
     params = model.init(jax.random.PRNGKey(0))
-    B = args.batch
-    max_len = args.prompt_len + args.gen
-    cache = model.init_cache(B, max_len)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (B, args.prompt_len), 0, cfg.vocab_size)
-    batch = {"tokens": prompt}
-    if cfg.arch_type == "vlm":
-        batch["ctx_embeds"] = jnp.zeros((B, cfg.n_ctx_tokens, cfg.d_model))
-    if cfg.arch_type == "audio":
-        batch["ctx_embeds"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model))
-    ctx_kv = model.ctx_kv(params, batch, mesh=mesh, dims=dims) \
-        if model.has_cross else None
 
-    serve = jax.jit(make_serve_step(model, mesh, dims, args.schedule))
+    rng = np.random.RandomState(args.seed)
+    sampler = SamplerConfig(temperature=args.temperature,
+                            top_k=args.top_k, seed=args.seed)
+    for i in range(args.requests):
+        plen = int(rng.randint(4, max(args.prompt_len, 5)))
+        engine.submit(rng.randint(0, cfg.vocab_size, plen), args.gen,
+                      sampler=sampler,
+                      arrival=(i / args.arrival_rate
+                               if args.arrival_rate > 0 else 0.0))
+    done = engine.run(params, progress=not args.smoke)
 
-    # prefill by stepping the prompt (simple serving loop)
-    tok = prompt[:, :1]
-    t0 = time.perf_counter()
-    out_tokens = []
-    for t in range(max_len - 1):
-        b = {"tokens": (prompt[:, t:t + 1] if t < args.prompt_len - 1
-                        else tok), "step": jnp.int32(t)}
-        if ctx_kv is not None:
-            tok, cache = serve(params, cache, b, ctx_kv)
-        else:
-            tok, cache = serve(params, cache, b)
-        if t >= args.prompt_len - 1:
-            out_tokens.append(int(tok[0, 0]))
-    dt = time.perf_counter() - t0
-    print(f"generated {len(out_tokens)} tokens x batch {B} "
-          f"in {dt:.2f}s ({B * len(out_tokens) / dt:.1f} tok/s)")
-    print("sample:", out_tokens[:16])
+    stats = latency_stats(done)
+    s = engine.stats
+    print(f"served {stats['n_requests']} requests / "
+          f"{stats['n_tokens']} tokens: {stats['tok_per_s']:.1f} tok/s  "
+          f"p50 {stats['p50_ms']:.0f}ms  p95 {stats['p95_ms']:.0f}ms  "
+          f"p99 {stats['p99_ms']:.0f}ms  "
+          f"ttft_p50 {stats['ttft_p50_ms']:.0f}ms")
+    print(f"engine: {s['prefill_calls']} prefill calls "
+          f"({s['prefill_tokens']} tokens), {s['decode_calls']} decode "
+          f"rounds ({s['decode_tokens']} tokens), max_active "
+          f"{s['max_active']}/{engine.max_batch}")
+    from repro.core import autosched
+    summary = autosched.cache_summary()
+    if summary:
+        print(summary)
+    print("sample:", done[0].tokens[:16])
+    if args.smoke:
+        assert len(done) == args.requests, "smoke: not all requests done"
+        assert all(len(c.tokens) > 0 for c in done)
+        print("SERVE SMOKE OK")
 
 
 if __name__ == "__main__":

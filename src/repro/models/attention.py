@@ -266,13 +266,82 @@ def init_cache(cfg: AttnConfig, batch, max_len, dtype=jnp.float32):
     return {
         "k": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.zeros((W,), jnp.int32) - 1,   # absolute position per slot
+        # absolute position per slot, tracked per row: the serving
+        # engine's continuous batching puts every request at its own
+        # position, so slot validity is per (row, slot), not per slot
+        "pos": jnp.zeros((batch, W), jnp.int32) - 1,
     }
+
+
+def prefill_attn(p, cfg: AttnConfig, x, cache, lengths, *, kernel=None):
+    """Batched one-shot prefill: whole-prompt self-attention + KV fill.
+
+    ``x`` is the (B, L, D) right-padded prompt batch, ``lengths`` the
+    (B,) valid token counts.  One call computes the causal attention
+    over every prompt position AND writes the (rope-rotated) K/V into
+    the decode cache at positions ``0..L-1``; the per-row ``pos`` map
+    marks only slots ``< lengths[b]`` valid, so padding (and any stale
+    K/V from a previous occupant of the cache row) is invisible to later
+    decode steps.  Causality keeps padded positions from influencing
+    valid ones, so each row's result is independent of how much padding
+    its prefill bucket carries.
+
+    Requires a full-length cache (``W >= L``): the engine rejects
+    sliding-window archs rather than re-deriving ring-buffer fills.
+    """
+    B, L, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = cache["k"].shape[1]
+    if W < L:
+        raise ValueError(f"prefill_attn needs cache W={W} >= prompt L={L}")
+    q = (x @ p["wq"]).reshape(B, L, H, hd)
+    k = (x @ p["wk"]).reshape(B, L, K, hd)
+    v = (x @ p["wv"]).reshape(B, L, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(K, hd)
+        v = v + p["bv"].reshape(K, hd)
+    positions = jnp.arange(L)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # cache fill: K/V land at their absolute positions (post-rope, the
+    # same values decode_attn would have written one token at a time)
+    widx = jnp.arange(W)
+    valid = (widx[None, :] < lengths[:, None]) & (widx < L)[None]
+    new_cache = {
+        "k": lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+        "v": lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+        "pos": jnp.where(valid, widx[None, :], -1).astype(jnp.int32),
+    }
+
+    from repro.kernels.registry import get_op, resolve_backend
+    want_pallas = kernel is not None and \
+        resolve_backend(cfg=kernel) == "pallas"
+    if want_pallas and cfg.chunk is None:
+        op = get_op("flash_attention", cfg=kernel, causal=cfg.causal,
+                    window=cfg.window, scale=cfg.scale)
+        out = op(q, k, v)
+    else:
+        kk = _repeat_kv(k, H // K)
+        vv = _repeat_kv(v, H // K)
+        if L > cfg.flash_threshold:
+            out = sdpa_flash_scan(q, kk, vv, cfg, positions, positions)
+        else:
+            out = sdpa_full(q, kk, vv,
+                            _mask_bias(cfg, positions, positions),
+                            cfg.scale)
+    return out.reshape(B, L, H * hd) @ p["wo"], new_cache
 
 
 def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
                 mesh=None, mp_axes=None):
-    """One-token decode. x: (B, 1, D); ``step`` scalar absolute position.
+    """One-token decode. x: (B, 1, D); ``step`` is the absolute position —
+    a scalar (classic lockstep serving: every row at the same position)
+    or a ``(B,)`` vector (continuous batching: each row at its own).
 
     Full-attention caches are length max_len; sliding-window caches are
     ring buffers of size ``window`` (slot = pos % window).
@@ -298,13 +367,22 @@ def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
         q = q + p["bq"].reshape(H, hd)
         k = k + p["bk"].reshape(K, hd)
         v = v + p["bv"].reshape(K, hd)
+    vec = jnp.ndim(step) > 0                 # per-row positions (engine)
     if cfg.use_rope:
-        pos = jnp.full((1,), step)
+        pos = step[:, None] if vec else jnp.full((1,), step)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     W = cache["k"].shape[1]
     slot = step % W
-    if cfg.masked_cache_update:
+    if vec:
+        # per-row slot write: each request appends at its own position
+        onehot = jnp.arange(W)[None, :] == slot[:, None]      # (B, W)
+        ck = jnp.where(onehot[..., None, None],
+                       k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(onehot[..., None, None],
+                       v.astype(cache["v"].dtype), cache["v"])
+        cpos = jnp.where(onehot, step[:, None], cache["pos"])
+    elif cfg.masked_cache_update:
         # elementwise masked write: partitions cleanly when the cache
         # length dim is sharded (context-parallel decode), unlike a
         # dynamic-update-slice at a data-dependent offset which makes
@@ -314,13 +392,13 @@ def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
                        k.astype(cache["k"].dtype), cache["k"])
         cv = jnp.where(onehot[None, :, None, None],
                        v.astype(cache["v"].dtype), cache["v"])
-        cpos = jnp.where(onehot, step, cache["pos"])
+        cpos = jnp.where(onehot[None, :], step, cache["pos"])
     else:
         ck = lax.dynamic_update_slice_in_dim(
             cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
         cv = lax.dynamic_update_slice_in_dim(
             cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-        cpos = cache["pos"].at[slot].set(step)
+        cpos = cache["pos"].at[:, slot].set(step)
     new_cache = {"k": ck, "v": cv, "pos": cpos}
 
     kk = _repeat_kv(ck, H // K)
@@ -334,12 +412,13 @@ def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
         from jax.sharding import NamedSharding
         s = lax.with_sharding_constraint(
             s, NamedSharding(mesh, P(None, None, None, tuple(mp_axes))))
-    valid = (cpos >= 0) & (cpos <= step)
+    step_b = step[:, None] if vec else step
+    valid = (cpos >= 0) & (cpos <= step_b)                    # (B, W)
     if cfg.window is not None:
-        valid &= cpos > step - cfg.window
+        valid &= cpos > step_b - cfg.window
     if cfg.chunk is not None:
-        valid &= (cpos // cfg.chunk) == (step // cfg.chunk)
-    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        valid &= (cpos // cfg.chunk) == (step_b // cfg.chunk)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     pr = jax.nn.softmax(s, -1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", pr, vv)
     return out.reshape(B, 1, H * hd) @ p["wo"], new_cache

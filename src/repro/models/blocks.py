@@ -248,6 +248,49 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     return c
 
 
+def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, lengths, *,
+                  mesh, dims, schedule=None):
+    """Whole-prompt block forward that also fills the decode cache.
+
+    The serving engine's batched one-shot prefill: identical math to
+    ``apply_block`` plus the KV-cache write of ``prefill_attn``.  Only
+    attention-backed kinds participate (SSM/cross archs would need
+    recurrent-state extraction; the engine rejects them up front).
+    Returns (x, new_cache).
+    """
+    base = base_kind(kind)
+    if base not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"prefill_block: kind {kind!r} has no cache-filling prefill "
+            "(serving engine supports dense/moe decoder stacks)")
+    acfg = attn_config(cfg, kind)
+    eps = cfg.norm_eps
+    kcfg = cfg.kernel_cfg
+
+    def norm(pn, h):
+        return apply_norm(pn, h, eps, kcfg)
+
+    h = norm(p["norm1"], x)
+    a, c2 = attn_mod.prefill_attn(p["attn"], acfg, h, cache["attn"],
+                                  lengths, kernel=kcfg)
+    new_cache = dict(cache)
+    new_cache["attn"] = c2
+    if cfg.parallel_block:
+        f = apply_ffn(p["ffn"], h, cfg.ffn_act)
+        return x + (a + f), new_cache
+    x = x + a
+    h2 = norm(p["norm2"], x)
+    if _moe_kind(kind):
+        # prefill pools are training-shaped: the MoE layer takes the
+        # *prefill* autosched decision (infer=False), distinct from the
+        # decode decision the same layer makes under decode_block
+        y, _ = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
+                         cfg=_moe_cfg(cfg, kcfg), schedule=schedule)
+    else:
+        y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
+    return x + y, new_cache
+
+
 def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,
                  mesh, dims, ctx_kv=None, schedule=None):
     """One-token decode. Returns (x, new_cache)."""
@@ -279,8 +322,11 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,
         x = x + a
         h2 = norm(p["norm2"], x)
         if _moe_kind(kind):
+            # infer=True: decode shape class — own autosched cache line,
+            # decode-widened grid (s1d), drop-free capacity
             y, _ = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
-                             cfg=_moe_cfg(cfg, kcfg), schedule=schedule)
+                             cfg=_moe_cfg(cfg, kcfg), schedule=schedule,
+                             infer=True)
         else:
             y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x + y, new_cache

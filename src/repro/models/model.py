@@ -249,9 +249,52 @@ class Model:
             out[f"run{r}"] = jax.vmap(kv_one)(params[f"run{r}"])
         return out
 
+    def prefill_step(self, params, cache, batch, *, lengths, mesh,
+                     dims: ParallelDims, schedule: Optional[str] = None):
+        """Batched one-shot prefill: ONE forward over the right-padded
+        prompts that fills every layer's KV cache (the serving engine's
+        admission path — never a per-token loop).
+
+        ``lengths`` (B,) are the valid prompt lengths; returns
+        ``(last_logits, new_cache)`` where ``last_logits[b]`` is the
+        (V,)-vector at row b's own final prompt position — the logits
+        the first generated token is sampled from.
+        """
+        cfg = self.cfg
+        self._mesh, self._dims = mesh, dims
+        bad = [k for k, _ in self.runs
+               if blk.base_kind(k) not in ("dense", "moe")]
+        if bad:
+            raise NotImplementedError(
+                f"prefill_step: unsupported block kinds {bad} "
+                "(cache-filling prefill covers dense/moe decoder stacks)")
+        tokens = batch["tokens"]
+        B, L = tokens.shape
+        x = embed(params["embed"], tokens)
+        if not cfg.use_rope:
+            x = x + sinusoidal_positions(L, cfg.d_model).astype(x.dtype)
+        new_cache = {}
+        for r, (kind, n) in enumerate(self.runs):
+            def step(h, scanned, kind=kind):
+                layer_params, layer_cache = scanned
+                return blk.prefill_block(
+                    layer_params, cfg, kind, h, layer_cache, lengths,
+                    mesh=mesh, dims=dims, schedule=schedule)
+
+            x, new_cache[f"run{r}"] = lax.scan(
+                step, x, (params[f"run{r}"], cache[f"run{r}"]))
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps,
+                       cfg.kernel_cfg)
+        idx = jnp.clip(lengths - 1, 0, L - 1)
+        h_last = x[jnp.arange(B), idx]                     # (B, D)
+        logits = self._head(params, h_last[:, None, :])[:, 0]
+        return logits, new_cache
+
     def decode_step(self, params, cache, batch, *, mesh, dims,
                     schedule=None, ctx_kv=None):
-        """One serve step: (B, 1) token -> (B, 1, V) logits + new cache."""
+        """One serve step: (B, 1) token -> (B, 1, V) logits + new cache.
+        ``batch["step"]`` is the absolute position — a scalar (lockstep)
+        or a (B,) vector (continuous batching, one position per row)."""
         cfg = self.cfg
         self._mesh, self._dims = mesh, dims
         tokens = batch["tokens"]
@@ -259,8 +302,12 @@ class Model:
         x = embed(params["embed"], tokens)
         if not cfg.use_rope and cfg.arch_type not in ("ssm",):
             pe = sinusoidal_positions(2048, cfg.d_model)
-            x = x + lax.dynamic_index_in_dim(
-                pe, jnp.minimum(step, 2047), keepdims=True).astype(x.dtype)
+            idx = jnp.minimum(step, 2047)
+            if jnp.ndim(idx) > 0:
+                x = x + jnp.take(pe, idx, axis=0)[:, None, :].astype(x.dtype)
+            else:
+                x = x + lax.dynamic_index_in_dim(
+                    pe, idx, keepdims=True).astype(x.dtype)
         new_cache = {}
         for r, (kind, n) in enumerate(self.runs):
             ckv = ctx_kv.get(f"run{r}") if ctx_kv else None

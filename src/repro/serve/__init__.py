@@ -1,0 +1,14 @@
+"""Continuous-batching MoE serving: engine, KV-slot pool, sampling.
+
+See docs/serving.md for the architecture walkthrough.
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    Completion,
+    Engine,
+    Request,
+    latency_stats,
+    suggest_max_batch,
+)
+from repro.serve.kvcache import KVCachePool  # noqa: F401
+from repro.serve.sampler import SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,334 @@
+"""Continuous-batching MoE serving engine.
+
+``launch/serve.py`` used to drive one fixed batch token-by-token —
+prompt positions included — with every decode step running the
+*training*-shaped MoE schedules.  The engine replaces that with a
+request lifecycle:
+
+  submit -> queue -> admit (KV slot + batched ONE-SHOT prefill)
+         -> decode rounds (continuous batch over the whole slot pool)
+         -> finish (EOS / token budget) -> evict slot -> detokenize
+
+Scheduling interleaves the two phases prefill-first: each ``step()``
+either admits waiting requests (one jitted prefill over the whole
+group's padded prompts — never ``prompt_len`` calls) or runs one decode
+round over all ``max_batch`` pool rows at per-row positions.  Requests
+join and leave the decode batch mid-run; idle rows ride along as
+padding, which keeps the decode step's shapes FIXED — one compilation,
+no matter how requests come and go.  Prefill shapes are bucketed
+(prompt length rounded up to a power of two, group size capped by
+``prefill_batch``), bounding compilations at log(max_len) x
+prefill_batch.
+
+MoE layers run decode-DEDICATED schedule decisions: ``decode_block``
+marks its ``apply_moe`` calls ``infer=True``, giving decode pools their
+own autosched cache class (never evicting the training/prefill
+decision), the decode-widened plan grid (``s1d``), n_chunks pinned to
+1, and drop-free capacity — a row's output is independent of its batch
+mates, which is what makes continuous batching safe for routed experts
+(and what the bitwise parity test in tests/test_serve.py pins down).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.models import blocks as blk
+from repro.serve.kvcache import KVCachePool
+from repro.serve.sampler import SamplerConfig
+from repro.train.loop import (make_engine_decode_step,
+                              make_engine_prefill_step)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request: prompt token ids + budget + sampling."""
+
+    rid: int
+    prompt: tuple                      # token ids, len >= 1
+    max_new_tokens: int = 16
+    sampler: SamplerConfig = SamplerConfig()
+    arrival: float = 0.0               # seconds after run start
+
+
+@dataclass
+class Completion:
+    """A finished request: generated ids, text, and latency breakdown."""
+
+    rid: int
+    prompt: tuple
+    tokens: list
+    text: str
+    timing: dict = field(default_factory=dict)   # ttft / latency seconds
+
+
+class _State:
+    __slots__ = ("req", "slot", "pos", "last_tok", "generated",
+                 "t_submit", "t_admit", "t_first", "t_done")
+
+    def __init__(self, req, slot, t_submit, t_admit):
+        self.req, self.slot = req, slot
+        self.pos = len(req.prompt)     # next absolute position to decode
+        self.last_tok = None
+        self.generated = []
+        self.t_submit, self.t_admit = t_submit, t_admit
+        self.t_first = self.t_done = None
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class Engine:
+    """Continuous-batching serving engine over a KV-slot pool.
+
+    ``max_batch`` is the decode batch (= KV pool slots); ``max_len`` the
+    per-slot KV length (prompt + generation budget must fit).
+    ``prefill_batch`` caps how many admissions share one prefill call
+    (1 = each request prefills alone, which makes a request's prefill
+    bitwise independent of its queue mates).  ``schedule`` forces one
+    MoE schedule for prefill AND decode; None lets each phase's
+    autosched decision stand.
+    """
+
+    def __init__(self, model, mesh, dims, *, max_batch: int = 8,
+                 max_len: int = 256, schedule=None, prefill_batch: int = 1,
+                 eos_token=None, detokenize=None):
+        cfg = model.cfg
+        bad = [k for k, _ in model.runs
+               if blk.base_kind(k) not in ("dense", "moe")]
+        if bad:
+            raise NotImplementedError(
+                f"Engine supports dense/moe decoder stacks; {cfg.name} "
+                f"has block kinds {bad}")
+        if cfg.attn_window is not None and cfg.attn_window < max_len:
+            raise NotImplementedError(
+                "Engine needs full-length KV rows (attn_window "
+                f"{cfg.attn_window} < max_len {max_len})")
+        self.model, self.mesh, self.dims = model, mesh, dims
+        self.max_batch, self.max_len = int(max_batch), int(max_len)
+        self.prefill_batch = max(int(prefill_batch), 1)
+        self.eos_token = eos_token
+        self.detokenize = detokenize or (
+            lambda ids: " ".join(str(t) for t in ids))
+        self.pool = KVCachePool(model, self.max_batch, self.max_len)
+        # donate the pool: each step's input cache is dead once the
+        # updated one lands, so XLA aliases them in place instead of
+        # copying the whole KV pool every generated token
+        self._prefill = jax.jit(make_engine_prefill_step(
+            model, mesh, dims, schedule), donate_argnums=(1,))
+        self._decode = jax.jit(make_engine_decode_step(
+            model, mesh, dims, schedule), donate_argnums=(1,))
+        self.queue: deque = deque()
+        self._run_t0 = None             # run() wall-clock origin
+        self.active: dict = {}          # slot -> _State
+        self.stats = {"prefill_calls": 0, "decode_calls": 0,
+                      "prefill_tokens": 0, "decode_tokens": 0,
+                      "max_active": 0, "admitted": 0}
+        self._rid = 0
+
+    # --- request intake -----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               sampler: SamplerConfig = SamplerConfig(),
+               arrival: float = 0.0, rid=None) -> int:
+        """Queue one request (admission control: prompt + budget must fit
+        a KV slot).  Returns the request id."""
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_len {self.max_len}")
+        if rid is None:
+            rid, self._rid = self._rid, self._rid + 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(max_new_tokens), sampler=sampler,
+                      arrival=float(arrival))
+        self.queue.append((req, time.perf_counter()))
+        return rid
+
+    # --- one scheduler tick -------------------------------------------------
+    def step(self, params, now=None) -> list:
+        """Admit+prefill a waiting group if possible, else run one decode
+        round.  Returns the requests that finished this tick."""
+        group = []
+        while (self.queue and len(group) < self.prefill_batch
+               and self.pool.can_admit()):
+            req, t_submit = self.queue[0]
+            if now is not None and req.arrival > now:
+                break
+            self.queue.popleft()
+            slot = self.pool.alloc(req.rid)
+            if self._run_t0 is not None and req.arrival > 0:
+                # latency clock starts at the request's (simulated)
+                # arrival, not at the up-front submit() call — otherwise
+                # --arrival-rate offsets dominate the percentiles
+                t_submit = max(t_submit, self._run_t0 + req.arrival)
+            group.append(_State(req, slot, t_submit, time.perf_counter()))
+        if group:
+            self._prefill_group(params, group)
+        elif self.active:
+            self._decode_round(params)
+        self.stats["max_active"] = max(self.stats["max_active"],
+                                       len(self.active))
+        return self._collect_finished()
+
+    def run(self, params, requests=None, *, progress=False) -> list:
+        """Drive until every queued request completes.  ``requests`` is
+        an optional iterable of (prompt, max_new_tokens, sampler,
+        arrival) tuples / dicts to submit first.  Arrival times are
+        honoured against a wall clock started here."""
+        for r in (requests or ()):
+            if isinstance(r, dict):
+                self.submit(**r)
+            else:
+                self.submit(*r)
+        done = []
+        t0 = self._run_t0 = time.perf_counter()
+        while self.queue or self.active:
+            now = time.perf_counter() - t0
+            finished = self.step(params, now=now)
+            done.extend(finished)
+            if progress and finished:
+                print(f"[serve] {len(done)} done, {len(self.active)} "
+                      f"active, {len(self.queue)} queued", flush=True)
+            if not finished and not self.active and self.queue:
+                time.sleep(0.001)       # all arrivals in the future
+        return sorted(done, key=lambda c: c.rid)
+
+    # --- internals ----------------------------------------------------------
+    def _keys(self, states):
+        """Per-row raw (seed, position) key data — a request's stream
+        never depends on its batch mates.  The position component is the
+        absolute position of the token being SAMPLED (prompt length +
+        tokens generated so far), which advances between the prefill
+        sample and the first decode sample — ``s.pos`` alone would reuse
+        the prefill key for the first decode draw."""
+        return np.array(
+            [[s.req.sampler.seed & 0xFFFFFFFF,
+              len(s.req.prompt) + len(s.generated)] for s in states],
+            np.uint32)
+
+    def _prefill_group(self, params, group):
+        lens = [len(s.req.prompt) for s in group]
+        lb = min(max(_pow2(max(lens)), 8), self.max_len)
+        tokens = np.zeros((len(group), lb), np.int32)
+        for i, s in enumerate(group):
+            tokens[i, :lens[i]] = s.req.prompt
+        temps = np.array([s.req.sampler.temperature for s in group],
+                         np.float32)
+        topks = np.array([s.req.sampler.top_k for s in group], np.int32)
+        slots = np.array([s.slot for s in group], np.int32)
+        tok, self.pool.cache = self._prefill(
+            params, self.pool.cache, tokens,
+            np.array(lens, np.int32), slots, self._keys(group), temps,
+            topks)
+        tok = np.asarray(tok)
+        t = time.perf_counter()
+        for i, s in enumerate(group):
+            s.last_tok = int(tok[i])
+            s.generated.append(s.last_tok)
+            s.t_first = t
+            self.active[s.slot] = s
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += sum(lens)
+        self.stats["admitted"] += len(group)
+
+    def _decode_round(self, params):
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        steps = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)      # idle rows: greedy, ignored
+        topks = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        states = sorted(self.active.values(), key=lambda s: s.slot)
+        for s in states:
+            tokens[s.slot, 0] = s.last_tok
+            steps[s.slot] = s.pos
+            temps[s.slot] = s.req.sampler.temperature
+            topks[s.slot] = s.req.sampler.top_k
+        keys[[s.slot for s in states]] = self._keys(states)
+        tok, self.pool.cache = self._decode(
+            params, self.pool.cache, tokens, steps, keys, temps, topks)
+        tok = np.asarray(tok)
+        for s in states:
+            s.last_tok = int(tok[s.slot])
+            s.generated.append(s.last_tok)
+            s.pos += 1
+        self.stats["decode_calls"] += 1
+        self.stats["decode_tokens"] += len(states)
+
+    def _collect_finished(self) -> list:
+        done = []
+        for slot, s in list(self.active.items()):
+            full = len(s.generated) >= s.req.max_new_tokens
+            eos = (self.eos_token is not None
+                   and s.generated and s.generated[-1] == self.eos_token)
+            capped = s.pos >= self.max_len
+            if not (full or eos or capped):
+                continue
+            s.t_done = time.perf_counter()
+            del self.active[slot]
+            self.pool.release(s.req.rid)            # eviction on finish
+            done.append(Completion(
+                rid=s.req.rid, prompt=s.req.prompt,
+                tokens=list(s.generated),
+                text=self.detokenize(s.generated),
+                timing={"ttft": s.t_first - s.t_submit,
+                        "latency": s.t_done - s.t_submit,
+                        "queued": s.t_admit - s.t_submit}))
+        return done
+
+
+def latency_stats(completions) -> dict:
+    """Throughput + p50/p95/p99 latency summary for a finished run."""
+    if not completions:
+        return {}
+    lat = sorted(c.timing["latency"] for c in completions)
+    ttft = sorted(c.timing["ttft"] for c in completions)
+
+    def pct(xs, p):
+        return xs[min(int(p / 100.0 * len(xs)), len(xs) - 1)]
+
+    n_tok = sum(len(c.tokens) for c in completions)
+    span = max(max(lat), 1e-9)
+    return {
+        "n_requests": len(completions), "n_tokens": n_tok,
+        "tok_per_s": n_tok / span,
+        "p50_ms": 1e3 * pct(lat, 50), "p95_ms": 1e3 * pct(lat, 95),
+        "p99_ms": 1e3 * pct(lat, 99),
+        "ttft_p50_ms": 1e3 * pct(ttft, 50),
+        "ttft_p99_ms": 1e3 * pct(ttft, 99),
+    }
+
+
+def suggest_max_batch(cfg, *, n_ep: int = 1, n_esp: int = 1, n_mp: int = 1,
+                      candidates=(1, 2, 4, 8, 16, 32), perf_model=None):
+    """Decode batch-bucket sizing from the perf model (``t_decode``).
+
+    Picks the candidate maximizing predicted decode throughput
+    ``B / t_decode(B)``: decode steps are alpha-dominated, so per-token
+    latency falls with batch until the bandwidth/compute terms take
+    over.  Dense archs (no MoE layer to model) just take the largest
+    candidate.
+    """
+    from repro.core.perfmodel import MoELayerShape, tpu_v5e_model
+    if cfg.moe is None:
+        return max(candidates)
+    pm = perf_model or tpu_v5e_model(n_ep, n_esp, n_mp)
+
+    def throughput(b):
+        shape = MoELayerShape(
+            B=b, L=1, M=cfg.moe.d_model, H=cfg.moe.d_ff,
+            E=cfg.moe.n_experts, k=cfg.moe.top_k,
+            f=cfg.moe.capacity_factor, n_mp=n_mp, n_esp=n_esp,
+            n_ep=n_ep, infer=True)
+        return b / pm.t_decode(shape)
+
+    return max(candidates, key=throughput)

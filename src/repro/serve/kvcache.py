@@ -1,0 +1,85 @@
+"""Slot-based KV-cache pool: the serving engine's memory manager.
+
+``model.init_cache(B, L)`` used to be allocated per monolithic batch and
+thrown away with it.  The pool instead allocates it ONCE for
+``max_batch`` rows and treats each row as a *slot* — one resident
+request's KV state — with a free-list allocator, a request -> slot map,
+and eviction on finish.  Slots are recycled without ever touching device
+memory: a new occupant's batched prefill rewrites the row's K/V for its
+prompt and resets the per-row ``pos`` map, so stale entries from the
+previous occupant are unreachable (``pos = -1`` slots are masked out of
+every decode-attention read).
+
+This is the single-page special case of paged attention: one page per
+request, page size ``max_len``.  The free list hands out the lowest
+free slot first, which keeps allocation deterministic — a property the
+engine's bitwise parity tests rely on.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+
+class KVCachePool:
+    """A ``max_batch``-row KV cache plus slot bookkeeping.
+
+    The jax pytree itself lives in ``self.cache`` (every leaf has the
+    layer-stacked layout ``(n_layers, max_batch, ...)``); the engine's
+    jitted steps gather/scatter rows by slot index.  This class owns the
+    *host-side* lifecycle only: which row belongs to which request.
+    """
+
+    def __init__(self, model, max_batch: int, max_len: int, dtype=None):
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.cache = model.init_cache(self.max_batch, self.max_len, dtype)
+        import jax
+        for leaf in jax.tree.leaves(self.cache):
+            if leaf.ndim < 2 or leaf.shape[1] != self.max_batch:
+                raise ValueError(
+                    "KVCachePool needs every cache leaf shaped "
+                    f"(layers, max_batch, ...); got {leaf.shape}")
+        self._free = list(range(self.max_batch))   # min-heap of free slots
+        heapq.heapify(self._free)
+        self._slot_of: dict = {}                   # request id -> slot
+
+    # --- admission control --------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._slot_of)
+
+    def can_admit(self, n: int = 1) -> bool:
+        return len(self._free) >= n
+
+    # --- slot lifecycle -----------------------------------------------------
+    def alloc(self, rid) -> int:
+        """Assign the lowest free slot to request ``rid``."""
+        if rid in self._slot_of:
+            raise KeyError(f"request {rid!r} already holds slot "
+                           f"{self._slot_of[rid]}")
+        if not self._free:
+            raise RuntimeError("KV-cache pool exhausted "
+                               f"({self.max_batch} slots live)")
+        slot = heapq.heappop(self._free)
+        self._slot_of[rid] = slot
+        return slot
+
+    def release(self, rid) -> int:
+        """Evict ``rid``'s slot back to the free list (finish/cancel)."""
+        if rid not in self._slot_of:
+            raise KeyError(f"request {rid!r} holds no slot")
+        slot = self._slot_of.pop(rid)
+        heapq.heappush(self._free, slot)
+        return slot
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+    def live(self) -> dict:
+        """Snapshot of the request -> slot map."""
+        return dict(self._slot_of)

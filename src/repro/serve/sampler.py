@@ -1,0 +1,72 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k
+behind one batched, jit-friendly interface.
+
+The engine serves heterogeneous requests from ONE jitted step, so the
+sampler is vectorized over rows with *per-row* parameters instead of
+per-request python branches: ``temperature <= 0`` rows take the greedy
+argmax (bitwise the classic ``make_serve_step`` pick), ``top_k == 0``
+rows sample the full distribution, and ``top_k > 0`` rows are truncated
+to their k best logits before the Gumbel draw.  Keys are per-row raw
+``(seed, position)`` uint32 pairs — a request's sample stream depends
+only on its own seed and position, never on which batch rows it happens
+to share a step with.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+#: Static bound for per-row top-k truncation (keeps ``lax.top_k``'s k a
+#: compile-time constant while ``top_k`` itself stays a traced per-row
+#: value).  Requests may ask for any ``top_k <= TOPK_MAX``.
+TOPK_MAX = 64
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    """Per-request sampling parameters.
+
+    ``temperature <= 0`` means greedy (argmax; ``top_k``/``seed`` are
+    ignored).  ``top_k == 0`` samples the full softmax at the given
+    temperature; ``1 <= top_k <= TOPK_MAX`` truncates to the k largest
+    logits first.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0 or self.top_k > TOPK_MAX:
+            raise ValueError(f"top_k must be in [0, {TOPK_MAX}], "
+                             f"got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample(logits, keys, temperature, top_k):
+    """Draw one token per row.  All arguments are batched:
+
+    ``logits`` (B, V) float; ``keys`` (B, 2) uint32 raw PRNG key data
+    (the engine packs ``(seed, position)``); ``temperature`` (B,) float;
+    ``top_k`` (B,) int32.  Returns (B,) int32 token ids.
+    """
+    lg = logits.astype(jnp.float32)
+    B, V = lg.shape
+    greedy = jnp.argmax(lg, axis=-1)
+
+    kmax = min(TOPK_MAX, V)
+    topv, _ = jax.lax.top_k(lg, kmax)                       # (B, kmax)
+    kth = jnp.take_along_axis(
+        topv, jnp.clip(top_k - 1, 0, kmax - 1)[:, None], axis=1)
+    truncated = (top_k > 0)[:, None] & (lg < kth)
+    scaled = jnp.where(truncated, -jnp.inf,
+                       lg / jnp.maximum(temperature, 1e-6)[:, None])
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(keys)
+    sampled = jnp.argmax(scaled + gumbel, axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)

@@ -1,6 +1,8 @@
 from repro.train.loop import (  # noqa: F401
     Trainer,
     cache_specs,
+    make_engine_decode_step,
+    make_engine_prefill_step,
     make_prefill_fn,
     make_serve_step,
     make_train_step,

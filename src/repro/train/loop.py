@@ -3,7 +3,9 @@
 These are the functions the multi-pod dry-run lowers and the launchers
 execute: ``train_step`` (fwd+bwd+AdamW), ``prefill_fn`` (full-sequence
 forward) and ``serve_step`` (one token against a KV cache, with greedy
-sampling).
+sampling) — plus the serving engine's two steps
+(``make_engine_prefill_step`` / ``make_engine_decode_step``: cache-pool
+gather/scatter, per-row positions, per-row sampling).
 """
 
 from __future__ import annotations
@@ -121,6 +123,46 @@ def make_serve_step(model: Model, mesh, dims: ParallelDims,
         return next_tok[:, None], cache2
 
     return serve_step
+
+
+def make_engine_prefill_step(model: Model, mesh, dims: ParallelDims,
+                             schedule: Optional[str] = None):
+    """The serving engine's admission step: ONE jitted call per admitted
+    prefill group — batched whole-prompt forward filling the KV-cache
+    pool rows at ``slots``, then first-token sampling at each row's own
+    final prompt position.  (Never a per-token loop: the regression test
+    in tests/test_serve.py counts exactly one call per group.)
+    """
+    def prefill_step(params, pool, tokens, lengths, slots, keys, temps,
+                     topks):
+        from repro.serve.sampler import sample   # lazy: no train<->serve cycle
+        rows = jax.tree.map(lambda a: jnp.take(a, slots, axis=1), pool)
+        logits, rows2 = model.prefill_step(
+            params, rows, {"tokens": tokens}, lengths=lengths,
+            mesh=mesh, dims=dims, schedule=schedule)
+        pool2 = jax.tree.map(lambda a, r: a.at[:, slots].set(r), pool,
+                             rows2)
+        return sample(logits, keys, temps, topks), pool2
+
+    return prefill_step
+
+
+def make_engine_decode_step(model: Model, mesh, dims: ParallelDims,
+                            schedule: Optional[str] = None):
+    """The serving engine's decode step over the WHOLE cache pool: one
+    token per row at per-row positions (``steps`` is a (B,) vector, so
+    requests at different depths batch together), sampled with per-row
+    sampler parameters.  Idle rows ride along as padding — their outputs
+    are ignored and their cache rows are rewritten at re-admission.
+    """
+    def decode_step(params, pool, tokens, steps, keys, temps, topks):
+        from repro.serve.sampler import sample
+        logits, pool2 = model.decode_step(
+            params, pool, {"tokens": tokens, "step": steps},
+            mesh=mesh, dims=dims, schedule=schedule)
+        return sample(logits[:, -1], keys, temps, topks), pool2
+
+    return decode_step
 
 
 # --- driver ---------------------------------------------------------------------

@@ -1,0 +1,78 @@
+"""Multi-device serving smoke (run with 8 fake CPU devices).
+
+Drives the continuous-batching engine on the MoE arch over a (4, 2)
+data x model mesh — decode pools big enough to shard (s_local >= n_mp),
+so decode steps run the REAL decode-schedule path (s1d), not the
+replicated fallback — and checks:
+
+  * every request completes with its full token budget;
+  * the forced-s1d decode output matches forced-s2 (same pool gate ->
+    identical routing; s1d's redundant-MP dataflow must reproduce the
+    split dataflow numerically);
+  * prefill stays one jitted call per admitted request.
+
+Prints SERVE MULTIDEV OK on success.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.parallel.mesh import ParallelDims, make_mesh  # noqa: E402
+from repro.serve import Engine  # noqa: E402
+
+
+def check_s1d_matches_s2(mesh, dims):
+    """Forced decode-dedicated schedule vs S2 on the live 8-dev mesh."""
+    cfg = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                    capacity_factor=2.0, schedule="s2")
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 32))
+    y2, _ = jax.jit(lambda x, p: apply_moe(
+        x, p, mesh=mesh, dims=dims, cfg=cfg))(x, params)
+    yd, _ = jax.jit(lambda x, p: apply_moe(
+        x, p, mesh=mesh, dims=dims, cfg=cfg, schedule="s1d"))(x, params)
+    err = float(np.max(np.abs(np.asarray(y2) - np.asarray(yd))))
+    assert err < 1e-5, f"s1d vs s2 diverge on the 8-dev mesh: {err}"
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    check_s1d_matches_s2(mesh, dims)
+
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # max_batch 8 over 4 batch-axis ranks: decode s_local = 2 >= n_mp = 2,
+    # so decode MoE runs the sharded schedule path (not dense fallback)
+    engine = Engine(model, mesh, dims, max_batch=8, max_len=64)
+    rng = np.random.RandomState(0)
+    n_req, gen = 10, 6
+    for _ in range(n_req):
+        engine.submit(rng.randint(0, cfg.vocab_size, rng.randint(4, 12)),
+                      gen)
+    done = engine.run(params)
+    assert len(done) == n_req
+    assert all(len(c.tokens) == gen for c in done)
+    assert engine.stats["prefill_calls"] == n_req  # one call per admission
+    assert engine.stats["max_active"] > 1          # actually batched
+    assert engine.pool.n_live == 0                 # every slot evicted
+    from repro.core import autosched
+    summary = autosched.cache_summary()
+    assert "decode" in summary, summary
+    print(summary)
+    print("SERVE MULTIDEV OK")
+
+
+if __name__ == "__main__":
+    main()

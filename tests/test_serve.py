@@ -1,0 +1,353 @@
+"""Serving-engine tests: continuous-batching parity against the
+single-request loop (bitwise, greedy), KV-slot lifecycle, one-call
+prefill regression, decode-vs-training autosched cache separation, the
+sampler contract, and the multi-device smoke (subprocess)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro.configs.base import ModelConfig
+from repro.core import autosched
+from repro.core import plan as planlib
+from repro.core.moe import MoEConfig, shard_pool_capacity
+from repro.models import build_model
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.serve import Engine, KVCachePool, SamplerConfig, sample
+from repro.serve.engine import latency_stats, suggest_max_batch
+
+
+def tiny_moe_cfg():
+    return ModelConfig(
+        name="serve-test-moe", arch_type="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=128, rope_theta=1e4,
+        moe=MoEConfig(d_model=64, d_ff=96, n_experts=4, top_k=2,
+                      capacity_factor=2.0, schedule="auto"),
+        moe_period=1, remat=False)
+
+
+def tiny_dense_cfg():
+    return ModelConfig(
+        name="serve-test-dense", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=128, rope_theta=1e4,
+        qkv_bias=True, tie_embeddings=True, remat=False)
+
+
+def _mesh_dims(cfg):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dims = (ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+            if cfg.moe is not None
+            else ParallelDims(dp=("data",), mp=("model",)))
+    return mesh, dims
+
+
+@pytest.fixture(autouse=True)
+def fresh_sched_cache():
+    autosched.clear_cache()
+    yield
+    autosched.clear_cache()
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = tiny_moe_cfg()
+    model = build_model(cfg)
+    mesh, dims = _mesh_dims(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, mesh, dims, params
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = tiny_dense_cfg()
+    model = build_model(cfg)
+    mesh, dims = _mesh_dims(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, mesh, dims, params
+
+
+def _prompts(cfg, spec, seed=0):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, cfg.vocab_size, plen), gen)
+            for plen, gen in spec]
+
+
+class TestKVCachePool:
+    def _pool(self, dense_setup, n=3):
+        _, model, _, _, _ = dense_setup
+        return KVCachePool(model, n, 16)
+
+    def test_alloc_is_lowest_free_slot_first(self, dense_setup):
+        pool = self._pool(dense_setup)
+        assert [pool.alloc(i) for i in range(3)] == [0, 1, 2]
+
+    def test_release_recycles_slot(self, dense_setup):
+        pool = self._pool(dense_setup)
+        for i in range(3):
+            pool.alloc(i)
+        assert not pool.can_admit()
+        assert pool.release(1) == 1
+        assert pool.can_admit() and pool.n_free == 1
+        assert pool.alloc("new") == 1          # evicted slot reused
+
+    def test_exhaustion_and_double_alloc_raise(self, dense_setup):
+        pool = self._pool(dense_setup)
+        for i in range(3):
+            pool.alloc(i)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc("overflow")
+        pool.release(0)
+        with pytest.raises(KeyError, match="already holds"):
+            pool.alloc(1)
+        with pytest.raises(KeyError, match="no slot"):
+            pool.release("never-seen")
+
+    def test_cache_layout_checked(self, dense_setup):
+        _, model, _, _, _ = dense_setup
+        pool = KVCachePool(model, 4, 16)
+        for leaf in jax.tree.leaves(pool.cache):
+            assert leaf.shape[1] == 4
+
+
+class TestSampler:
+    def test_greedy_is_argmax(self):
+        logits = jnp.array(np.random.RandomState(0).randn(3, 50),
+                           jnp.float32)
+        keys = np.zeros((3, 2), np.uint32)
+        out = sample(logits, keys, jnp.zeros(3), jnp.zeros(3, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.argmax(np.asarray(logits), -1))
+
+    def test_topk_never_escapes_the_top_k(self):
+        rng = np.random.RandomState(1)
+        logits = jnp.array(rng.randn(8, 64), jnp.float32)
+        top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+        for trial in range(5):
+            keys = rng.randint(0, 2**31, (8, 2)).astype(np.uint32)
+            out = np.asarray(sample(
+                logits, keys, jnp.full(8, 0.8), jnp.full(8, 4, jnp.int32)))
+            for b in range(8):
+                assert out[b] in top4[b]
+
+    def test_same_key_same_draw(self):
+        logits = jnp.array(np.random.RandomState(2).randn(4, 32),
+                           jnp.float32)
+        keys = np.arange(8, dtype=np.uint32).reshape(4, 2)
+        a = sample(logits, keys, jnp.full(4, 1.0), jnp.zeros(4, jnp.int32))
+        b = sample(logits, keys, jnp.full(4, 1.0), jnp.zeros(4, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_config_bounds(self):
+        with pytest.raises(ValueError):
+            SamplerConfig(top_k=4096)
+        assert SamplerConfig().greedy
+        assert not SamplerConfig(temperature=0.7).greedy
+
+
+class TestEngineParity:
+    """The acceptance criterion: engine decode output is bitwise the
+    single-request greedy loop's, with concurrent requests of different
+    lengths joining and leaving the batch mid-run."""
+
+    SPEC = [(9, 12), (5, 6), (13, 4)]
+
+    def test_concurrent_bitwise_matches_solo(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        reqs = _prompts(cfg, self.SPEC)
+
+        eng = Engine(model, mesh, dims, max_batch=4, max_len=64)
+        for prompt, gen in reqs:
+            eng.submit(prompt, gen)
+        conc = {c.rid: c.tokens for c in eng.run(params)}
+        # different lengths, joining AND leaving mid-run
+        assert eng.stats["max_active"] >= 2
+        assert eng.stats["decode_calls"] > 0
+
+        for rid, (prompt, gen) in enumerate(reqs):
+            solo = Engine(model, mesh, dims, max_batch=4, max_len=64)
+            solo.submit(prompt, gen)
+            (c,) = solo.run(params)
+            assert c.tokens == conc[rid], \
+                f"request {rid} diverged under batching"
+
+    def test_dense_arch_parity(self, dense_setup):
+        cfg, model, mesh, dims, params = dense_setup
+        reqs = _prompts(cfg, [(7, 8), (11, 5)])
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        for prompt, gen in reqs:
+            eng.submit(prompt, gen)
+        conc = {c.rid: c.tokens for c in eng.run(params)}
+        assert eng.stats["max_active"] == 2
+        for rid, (prompt, gen) in enumerate(reqs):
+            solo = Engine(model, mesh, dims, max_batch=2, max_len=64)
+            solo.submit(prompt, gen)
+            (c,) = solo.run(params)
+            assert c.tokens == conc[rid]
+
+
+class TestEngineLifecycle:
+    def test_prefill_is_one_call_not_prompt_len(self, moe_setup):
+        """Regression for the seed serve loop, which stepped the prompt
+        one token at a time: prefill must be ONE jitted call."""
+        cfg, model, mesh, dims, params = moe_setup
+        (prompt, gen), = _prompts(cfg, [(17, 5)])
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        eng.submit(prompt, gen)
+        (c,) = eng.run(params)
+        assert eng.stats["prefill_calls"] == 1
+        assert eng.stats["prefill_tokens"] == 17
+        assert eng.stats["decode_calls"] == gen - 1
+        assert len(c.tokens) == gen
+
+    def test_more_requests_than_slots(self, moe_setup):
+        """Queueing + slot eviction: 5 requests over 2 slots."""
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        reqs = _prompts(cfg, [(6, 4), (9, 3), (5, 5), (8, 2), (7, 4)])
+        for prompt, gen in reqs:
+            eng.submit(prompt, gen)
+        done = eng.run(params)
+        assert len(done) == 5
+        assert eng.stats["max_active"] == 2     # never over capacity
+        assert eng.pool.n_live == 0             # all slots evicted
+        assert eng.pool.n_free == 2
+        assert [len(c.tokens) for c in done] == [g for _, g in reqs]
+
+    def test_eos_finishes_early_and_frees_slot(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        (prompt, _), = _prompts(cfg, [(9, 8)])
+        ref = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        ref.submit(prompt, 8)
+        (c,) = ref.run(params)
+        eos = c.tokens[2]
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64,
+                     eos_token=eos)
+        eng.submit(prompt, 8)
+        (c2,) = eng.run(params)
+        stop = c.tokens.index(eos) + 1          # first occurrence wins
+        assert c2.tokens == c.tokens[:stop]     # stops AT the eos token
+        assert c2.tokens[-1] == eos and len(c2.tokens) < 8
+        assert eng.pool.n_live == 0
+
+    def test_admission_control_rejects_oversized(self, moe_setup):
+        cfg, model, mesh, dims, _ = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=32)
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            eng.submit(list(range(20)), 16)
+        with pytest.raises(ValueError, match="empty"):
+            eng.submit([], 4)
+
+    def test_unsupported_arch_rejected(self):
+        from repro.configs import get_config
+        cfg = get_config("xlstm-350m").reduced()
+        model = build_model(cfg)
+        mesh, dims = _mesh_dims(cfg)
+        with pytest.raises(NotImplementedError, match="dense/moe"):
+            Engine(model, mesh, dims)
+
+    def test_temperature_sampling_serves(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        (prompt, gen), = _prompts(cfg, [(8, 6)])
+        eng.submit(prompt, gen,
+                   sampler=SamplerConfig(temperature=0.9, top_k=8, seed=7))
+        (c,) = eng.run(params)
+        assert len(c.tokens) == gen
+        assert all(0 <= t < cfg.vocab_size for t in c.tokens)
+
+    def test_latency_stats_shape(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        for prompt, gen in _prompts(cfg, [(6, 3), (7, 3)]):
+            eng.submit(prompt, gen)
+        stats = latency_stats(eng.run(params))
+        assert stats["n_requests"] == 2 and stats["n_tokens"] == 6
+        for k in ("tok_per_s", "p50_ms", "p95_ms", "p99_ms",
+                  "ttft_p50_ms"):
+            assert stats[k] > 0
+
+
+class TestDecodeAutosched:
+    """Satellite: decode decisions must never evict/overwrite training
+    decisions, and the decode grid must carry the decode-only plans."""
+
+    def _shape(self, **kw):
+        from repro.core.perfmodel import MoELayerShape
+        base = dict(B=8, L=1, M=256, H=512, E=8, k=2, f=1.25,
+                    n_mp=2, n_esp=2, n_ep=2)
+        base.update(kw)
+        return MoELayerShape(**base)
+
+    def test_decode_and_train_cache_lines_are_distinct(self):
+        from repro.core.perfmodel import AlphaBeta, PerfModel
+        ab = AlphaBeta(1e-5, 1e-9)
+        pm = PerfModel(ab, ab, ab, ab, ab, ab, flops_per_s=1e12)
+        train = autosched.decide(self._shape(), perf_model=pm)
+        decode = autosched.decide(self._shape(infer=True), perf_model=pm)
+        assert len(autosched.cache_info()) == 2
+        # the training entry survives the decode decision untouched
+        assert autosched.decide(self._shape(), perf_model=pm) is train
+        assert autosched.decide(self._shape(infer=True),
+                                perf_model=pm) is decode
+        # only the decode grid scored the decode-dedicated plan
+        assert not any(c[0] == "s1d" for c, _ in train.times)
+        assert any(c[0] == "s1d" for c, _ in decode.times)
+        # the summary tags the decode class
+        assert "decode" in autosched.cache_summary()
+
+    def test_registry_flags(self):
+        assert "s1d" not in planlib.analytic_schedules()
+        assert "s1d" in planlib.analytic_schedules(infer=True)
+        assert "s1d" not in planlib.measured_schedules()
+        assert "s1d" in planlib.measured_schedules(infer=True)
+        assert planlib.PLANS["s1d"].decode_only
+
+    def test_decode_grid_pins_one_chunk(self, moe_setup):
+        """apply_moe's decode decisions must never ask for capacity
+        chunking (the per-chunk alphas dominate at decode sizes)."""
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=4, max_len=64)
+        (prompt, gen), = _prompts(cfg, [(9, 3)])
+        eng.submit(prompt, gen)
+        eng.run(params)
+        decode_entries = [d for key, d in autosched.cache_info().items()
+                          if getattr(key[0], "infer", False)]
+        assert decode_entries, "decode decision never cached"
+        assert all(d.n_chunks == 1 for d in decode_entries)
+
+    def test_decode_capacity_is_drop_free(self):
+        from repro.core.gating import GateConfig
+        g = GateConfig(n_experts=16, top_k=1, capacity_factor=0.5)
+        s, cap_train = shard_pool_capacity(64, 1, 1, g)
+        _, cap_decode = shard_pool_capacity(64, 1, 1, g, infer=True)
+        assert cap_train < 64           # training capacity really drops
+        assert cap_decode >= 64         # decode never drops a token
+
+    def test_t_decode_and_bucket_sizing(self):
+        from repro.core.perfmodel import tpu_v5e_model
+        pm = tpu_v5e_model(2, 2, 2)
+        t1 = pm.t_decode(self._shape(B=1, infer=True))
+        t8 = pm.t_decode(self._shape(B=8, infer=True))
+        assert 0 < t1 <= t8             # more tokens never get cheaper
+        cfg = tiny_moe_cfg()
+        b = suggest_max_batch(cfg, n_ep=2, n_esp=2, n_mp=2)
+        assert b in (1, 2, 4, 8, 16, 32)
+        # alpha-dominated decode: batching always beats B=1 throughput
+        assert b > 1
+
+
+class TestMultiDevice:
+    def test_serve_multidev_smoke(self, helpers_dir):
+        r = subprocess.run(
+            [sys.executable, os.path.join(helpers_dir,
+                                          "run_serve_multidev.py")],
+            env=subprocess_env(8), capture_output=True, text=True,
+            timeout=900)
+        assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+        assert "SERVE MULTIDEV OK" in r.stdout
