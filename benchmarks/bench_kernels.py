@@ -56,16 +56,25 @@ def workloads(sizes: str):
     w3 = jax.random.normal(ks[2], (E, M, F)) * 0.05
     w2 = jax.random.normal(ks[3], (E, F, M)) * 0.05
     xs, flat, w, n_slots = _moe_routing(S, M, E, k)
+    cap = n_slots // E
     buf = jax.random.normal(ks[0], (n_slots, M))
     q = jax.random.normal(ks[1], (B, L, H, hd))
     kv_k = jax.random.normal(ks[2], (B, L, K, hd))
     kv_v = jax.random.normal(ks[3], (B, L, K, hd))
     xr = jax.random.normal(ks[0], (R, D))
     sc = jnp.ones((D,))
+    # ragged view of the expert pool: half-full groups, the dropless
+    # kernel's typical training load
+    counts = jnp.full((E, 1), T // 2, jnp.int32)
 
     return [
         ("expert_ffn", f"E{E}xT{T}xM{M}xF{F}", {"act": "silu"},
          (xe, w1, w3, w2)),
+        ("expert_ffn_ragged", f"E{E}xG1xc{T}xM{M}xF{F}", {"act": "silu"},
+         (xe[:, None], counts, w1, w3, w2)),
+        ("expert_ffn_grouped", f"S{S}xM{M}xE{E}k{k}c{cap}",
+         {"act": "silu", "cap": cap, "wire": "f32"},
+         (xs, flat, w, w1, w3, w2)),
         ("moe_dispatch", f"S{S}xM{M}xE{E}k{k}", {"n_slots": n_slots},
          (xs, flat)),
         ("moe_combine", f"S{S}xM{M}xE{E}k{k}", {}, (buf, flat, w)),
@@ -73,6 +82,58 @@ def workloads(sizes: str):
         ("flash_attention", f"B{B}xL{L}xH{H}/{K}xhd{hd}", {"causal": True},
          (q, kv_k, kv_v)),
     ]
+
+
+def grouped_vs_pool(iters: int, sizes: str, on_tpu: bool,
+                    skip_interpret: bool):
+    """Grouped-vs-pool rows across an expert-load skew sweep.
+
+    The pool path multiplies every capacity slot (FLOPs fixed at
+    E * cap); the ragged kernel multiplies only the routed rows, so its
+    FLOPs column shrinks as skew concentrates load (empty experts cost
+    nothing).  On TPU the us column tracks the FLOPs column; off-TPU the
+    pallas numbers are interpret-mode and the analytic ``gflop`` field
+    in ``derived`` is the datapoint BENCH_pr6.json diffs.
+    """
+    E, T, M, F = (4, 256, 256, 512) if sizes == "small" \
+        else (8, 1024, 1024, 4096)
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xb = jax.random.normal(ks[0], (E, 1, T, M))
+    w1 = jax.random.normal(ks[1], (E, M, F)) * 0.05
+    w3 = jax.random.normal(ks[2], (E, M, F)) * 0.05
+    w2 = jax.random.normal(ks[3], (E, F, M)) * 0.05
+    routed_total = E * T // 2            # f=2 equivalent demand
+    gflop_row = 3 * 2 * M * F / 1e9      # SwiGLU: 3 GEMMs per row
+
+    for skew in (0.0, 0.5, 1.0):
+        # expert e's share: uniform blended toward all-on-expert-0
+        share = [(1.0 - skew) / E + (skew if e == 0 else 0.0)
+                 for e in range(E)]
+        cnt = jnp.array([[min(T, round(routed_total * s))]
+                         for s in share], jnp.int32)
+        routed = int(cnt.sum())
+        for kind, backend_grid in (("pool", ("ref", "pallas")),
+                                   ("ragged", ("ref", "pallas"))):
+            rows = E * T if kind == "pool" else routed
+            for backend in backend_grid:
+                if backend == "pallas" and not on_tpu and skip_interpret:
+                    continue
+                if kind == "pool":
+                    fn = get_op("expert_ffn", backend=backend, act="silu")
+                    run = lambda: jax.block_until_ready(       # noqa: E731
+                        fn(xb[:, 0], w1, w3, w2))
+                else:
+                    fn = get_op("expert_ffn_ragged", backend=backend,
+                                act="silu")
+                    run = lambda: jax.block_until_ready(       # noqa: E731
+                        fn(xb, cnt, w1, w3, w2))
+                n = iters if (backend == "ref" or on_tpu) else \
+                    max(2, iters // 5)
+                t = time_fn(run, iters=n, warmup=2)
+                emit(f"kernels/grouped_vs_pool/{kind}/{backend}",
+                     t * 1e6,
+                     f"skew={skew} routed={routed}/{E * T} "
+                     f"gflop={rows * gflop_row:.3f}")
 
 
 def main(argv=None):
@@ -88,7 +149,7 @@ def main(argv=None):
                          "is emulation-speed, not a perf datapoint)")
     args = ap.parse_args([] if argv is None else argv)
 
-    known = [w[0] for w in workloads(args.sizes)]
+    known = [w[0] for w in workloads(args.sizes)] + ["grouped_vs_pool"]
     bad = set(args.ops or ()) - set(known)
     if bad:
         ap.error(f"unknown op(s) {sorted(bad)}; choose from {known}")
@@ -109,6 +170,10 @@ def main(argv=None):
                 max(2, args.iters // 5)
             t = time_fn(run, iters=iters, warmup=2)
             emit(f"kernels/{op_name}/{backend}", t * 1e6, tag)
+
+    if not args.ops or "grouped_vs_pool" in args.ops:
+        grouped_vs_pool(args.iters, args.sizes, on_tpu,
+                        args.skip_interpret)
 
 
 if __name__ == "__main__":

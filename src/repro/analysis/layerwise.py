@@ -115,7 +115,7 @@ def layerwise_costs(model, cfg, mesh, dims, shape, *, kind: str,
                 y, aux = blk.apply_block(p, cfg, kind_r, x, mesh=mesh,
                                          dims=dims, ctx=ctx,
                                          schedule=schedule)
-                return jnp.sum(y.astype(jnp.float32)) + aux
+                return jnp.sum(y.astype(jnp.float32)) + aux["loss"]
 
             if kind == "train":
                 def fn(p, x, ctx=None):

@@ -195,6 +195,23 @@ def _wire_moved(x, move, comm, *, bwd_move=None, bwd_post=None):
     return wired(x)
 
 
+def wire_raw_ok(comm) -> bool:
+    """True when the wire format is a plain dtype view (f32 identity or
+    bf16 cast) — the payload can then stay *encoded* across a fused
+    kernel boundary (the grouped megakernel decodes in its prologue and
+    re-encodes in its epilogue).  fp8 cannot: its piggybacked scale tail
+    changes the M dim, so it always decodes at the collective."""
+    return _active(comm) in ("f32", "bf16")
+
+
+def wire_roundtrip(x, comm=None):
+    """Encode-then-decode with no movement: the local stand-in for a
+    wire-format collective on a single-member group (the fused grouped
+    path composes this around the expert FFN when the wire dtype needs
+    a real codec, e.g. fp8)."""
+    return _wire_moved(x, lambda v: v, comm)
+
+
 def _axes(axes):
     """Normalize an axis spec (name or iterable of names) to a tuple.
 

@@ -84,12 +84,13 @@ def _gate_cap(info, spec: str) -> int:
 
 
 class _Ctx:
-    __slots__ = ("info", "wg", "w1", "w3", "w2", "comm", "gate")
+    __slots__ = ("info", "wg", "w1", "w3", "w2", "comm", "gate", "dtype")
 
-    def __init__(self, info, wg, w1, w3, w2, comm):
+    def __init__(self, info, wg, w1, w3, w2, comm, dtype):
         self.info, self.comm = info, comm
         self.wg, self.w1, self.w3, self.w2 = wg, w1, w3, w2
         self.gate = None     # (GateResult, cap) once the gate stage ran
+        self.dtype = dtype   # layer-input dtype (raw-wire decode target)
 
 
 def _emit(st, vals, ctx):
@@ -136,6 +137,13 @@ def _emit(st, vals, ctx):
             rb = coll.wire_hier_ep_esp_all_to_all(
                 sb, info.ep_axes, info.esp_axes, Ne, Ns, comm,
                 axis=1, order=hier)
+        elif st.p("raw") and coll.wire_raw_ok(comm):
+            # grouped-megakernel consumer: leave the payload *encoded*
+            # (f32/bf16 are plain casts) — the ragged kernel's f32 upcast
+            # is the decode, so the full-buffer codec pass is elided
+            rb = coll.ep_esp_all_to_all(
+                coll.wire_encode(sb, comm), info.ep_axes, info.esp_axes,
+                split_axis=1, concat_axis=1)
         else:
             rb = coll.wire_ep_esp_all_to_all(
                 sb, info.ep_axes, info.esp_axes, comm,
@@ -144,6 +152,9 @@ def _emit(st, vals, ctx):
 
     if kind == "expert_ffn":
         return expert_ffn(vals[0], ctx.w1, ctx.w3, ctx.w2, info)
+
+    if kind == "expert_ffn_grouped":
+        return _emit_grouped(st, vals, ctx)
 
     if kind == "allreduce":
         axes, _ = _group(info, st.axes[0])
@@ -167,6 +178,14 @@ def _emit(st, vals, ctx):
             back = coll.wire_hier_ep_esp_all_to_all(
                 y4, info.ep_axes, info.esp_axes, Ne, Ns, comm,
                 axis=1, order=hier)
+        elif st.p("raw") and coll.wire_raw_ok(comm):
+            # grouped-megakernel producer: the ragged kernel already cast
+            # its output to the wire dtype (the encode half of the fused
+            # codec); move it raw, decode once, then reduce in f32
+            back = coll.wire_decode(
+                coll.ep_esp_all_to_all(y4, info.ep_axes, info.esp_axes,
+                                       split_axis=1, concat_axis=1),
+                comm, ctx.dtype)
         else:
             back = coll.wire_ep_esp_all_to_all(
                 y4, info.ep_axes, info.esp_axes, comm,
@@ -206,6 +225,76 @@ def _emit(st, vals, ctx):
     raise ValueError(f"executor: unknown stage kind {kind!r}")
 
 
+def _emit_grouped(st, vals, ctx):
+    """Lower an ``expert_ffn_grouped`` stage (``plan.fuse_grouped``).
+
+    Pool form (deps: the dispatch-A2A receive buffer): exchange the
+    per-(expert, sender) routed-row counts over the same combined group
+    — a tiny (El, G) int32 AlltoAll — and run the ragged grouped-GEMM
+    kernel: token tiles beyond a group's routed count never reach the
+    MXU, so compute scales with routed tokens, not capacity.  When the
+    surrounding AlltoAlls run ``raw`` the buffer arrives in the wire
+    dtype; the kernel's f32 upcast and output cast are the fused codec.
+
+    Local form (``local=True``; deps: token slice + gate): one fused
+    megakernel doing dispatch gather -> ragged FFN -> combine scatter +
+    gate-weight mix, with the wire round-trip applied at the two pool
+    boundaries.  fp8's scale-tail codec cannot fuse, so it composes the
+    unfused ops around explicit :func:`collectives.wire_roundtrip`.
+    """
+    info = ctx.info
+    E = info.gate.n_experts
+    Ne, Ns = info.n_ep, info.n_esp
+    comm = ctx.comm if st.wire else None
+
+    if st.p("local"):
+        tokens, (g, cap) = vals
+        wd = getattr(comm, "wire_dtype", "f32") if comm is not None \
+            else "f32"
+        if coll.wire_raw_ok(comm):
+            op = get_op("expert_ffn_grouped", cfg=info.kernel,
+                        act=info.act, cap=cap, wire=wd)
+            return op(tokens, g.flat(cap, E), g.weights, ctx.w1,
+                      ctx.w3 if info.glu else None, ctx.w2)
+        # fp8 wire: compose the unfused ops around the codec round-trip
+        # (bit-identical to the pool path's encode/decode at both
+        # boundaries; the FFN itself stays ragged/dropless)
+        d = dispatch(tokens, g.expert_idx, g.slot_idx, cap, E,
+                     info.kernel, flat=g.flat(cap, E))   # (E, cap, M)
+        d = coll.wire_roundtrip(d, comm)
+        cnt = jnp.minimum(g.aux["load"], cap).astype(jnp.int32)[:, None]
+        op = get_op("expert_ffn_ragged", cfg=info.kernel, act=info.act)
+        h = op(d.reshape(E, 1, cap, -1), cnt, ctx.w1,
+               ctx.w3 if info.glu else None, ctx.w2)
+        h = coll.wire_roundtrip(h.reshape(E, cap, -1), comm)
+        return combine(h, g.expert_idx, g.slot_idx, g.weights, cap,
+                       info.kernel, flat=g.flat(cap, E))
+
+    h = vals[0]                                  # (El, G*c, M), maybe raw
+    g, cap = ctx.gate
+    G = info.combined_group
+    El, Gc, M = h.shape
+    c = Gc // G
+    # This chunk covers capacity slots [ci*c, (ci+1)*c) of every expert;
+    # GShard slots are contiguous from 0, so the chunk's routed rows per
+    # expert are clip(routed - ci*c, 0, c).
+    ci = st.p("chunk_index", 0)
+    routed = jnp.minimum(g.aux["load"], float(cap)).astype(jnp.int32)
+    cnt = jnp.clip(routed - ci * c, 0, c)                       # (E,)
+    # Receive-side ragged metadata: sender g' = (i', j') delivered its
+    # rows for OUR local expert el, so the valid-row count of block
+    # rb[el, g'] is g''s routed count for global expert i*El + el —
+    # exchanged with the dump_em-layout (El, G) counts AlltoAll.
+    snd = jnp.broadcast_to(cnt.reshape(Ne, E // Ne).T[:, :, None],
+                           (E // Ne, Ne, Ns)).reshape(E // Ne, G)
+    rcv = coll.ep_esp_all_to_all(snd, info.ep_axes, info.esp_axes,
+                                 split_axis=1, concat_axis=1)   # (El, G)
+    op = get_op("expert_ffn_ragged", cfg=info.kernel, act=info.act)
+    out = op(h.reshape(El, G, c, M), rcv, ctx.w1,
+             ctx.w3 if info.glu else None, ctx.w2)
+    return out.reshape(El, Gc, M)
+
+
 def execute(plan: Plan, x, wg, w1, w3, w2, info):
     """Run one MoE layer under ``plan`` (shard_map side).
 
@@ -214,7 +303,7 @@ def execute(plan: Plan, x, wg, w1, w3, w2, info):
     over the full device group.
     """
     order = validate(plan)
-    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None))
+    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None), x.dtype)
     env = {INPUT: x}
     for st in order:
         env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)

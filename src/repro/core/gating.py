@@ -142,6 +142,9 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int) -> "GateResult":
     z_loss = cfg.z_loss_weight * jnp.mean(
         jnp.square(jax.nn.logsumexp(logits, axis=-1)))
     aux = {"aux_loss": aux_loss, "z_loss": z_loss, "load": load,
+           # per-expert rows that actually won a slot (= the ragged
+           # grouped kernel's group sizes; load is the unclamped demand)
+           "routed": jnp.minimum(load, float(cap)),
            "drop_frac": 1.0 - jnp.mean(kept.astype(jnp.float32))}
     return GateResult(expert_idx, slot_idx, weights, aux)
 

@@ -307,11 +307,18 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
               else P(None, None))
     in_specs = (x_spec, pspecs["wg"], pspecs["w1"], w3_spec, pspecs["w2"])
     out_specs = (x_spec, {k: P() for k in
-                          ("aux_loss", "z_loss", "drop_frac")})
+                          ("aux_loss", "z_loss", "drop_frac",
+                           "expert_load")})
 
     def shard_body(xt, wg, w1, w3_, w2):
         y, aux = body(xt, wg, w1, w3_ if cfg.glu else None, w2, info)
+        # per-expert routed-row counts, averaged over the per-device gate
+        # pools (replicated so the P() out_spec holds); the decode
+        # fallback body has no capacity buffer, hence no routed counts
+        routed = aux.get("routed",
+                         jnp.zeros((cfg.n_experts,), jnp.float32))
         aux = {k: aux[k] for k in ("aux_loss", "z_loss", "drop_frac")}
+        aux["expert_load"] = lax.pmean(routed, tuple(mesh.axis_names))
         return y.astype(x.dtype), aux
 
     xt = x.reshape(tokens_global, M)

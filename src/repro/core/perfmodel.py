@@ -339,6 +339,11 @@ class PerfModel:
                 fixed += t
         tc = max(per_chunk.values(), default=0.0)
         tf = self.t_ffn(s, plan.base or plan.name) / n
+        if any(st.kind == "expert_ffn_grouped" for st in plan.stages):
+            # ragged grouped-GEMM: compute scales with *routed* tokens
+            # (k*B*L rows), not capacity (k*f*B*L slots) — the expected
+            # MXU occupancy of the predicated kernel is 1/f for f >= 1
+            tf *= min(1.0, 1.0 / max(s.f, 1e-9))
         return fixed + tc + (n - 1) * max(tc, tf) + tf
 
     # --- decode latency model (repro.serve) ---------------------------------

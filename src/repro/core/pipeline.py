@@ -33,7 +33,7 @@ from repro.core.schedules import BODY, MoEShardInfo
 
 PIPELINE_OF = {"baseline": "baseline_pipe", "s1": "s1_pipe",
                "s2": "s2_pipe", "s1_seqpar": "s1_seqpar_pipe",
-               "s2h": "s2h_pipe"}
+               "s2h": "s2h_pipe", "s1g": "s1g_pipe"}
 UNCHUNKED_OF = {v: k for k, v in PIPELINE_OF.items()}
 
 
@@ -53,6 +53,7 @@ s1_pipe_body = _pipe_body("s1")
 s2_pipe_body = _pipe_body("s2")
 s1_seqpar_pipe_body = _pipe_body("s1_seqpar")
 s2h_pipe_body = _pipe_body("s2h")
+s1g_pipe_body = _pipe_body("s1g")
 
 PIPELINE_BODY = {
     "baseline_pipe": baseline_pipe_body,
@@ -60,5 +61,6 @@ PIPELINE_BODY = {
     "s2_pipe": s2_pipe_body,
     "s1_seqpar_pipe": s1_seqpar_pipe_body,
     "s2h_pipe": s2h_pipe_body,
+    "s1g_pipe": s1g_pipe_body,
 }
 BODY.update(PIPELINE_BODY)

@@ -45,6 +45,7 @@ KINDS = (
     "mp_split",      # take this rank's 1/N slice (free fwd, AG bwd)
     "dispatch_a2a",  # EP (plain) or EP&ESP (fused) AlltoAll, token-bound
     "expert_ffn",    # per-expert FFN through the kernel registry
+    "expert_ffn_grouped",  # ragged grouped-GEMM megakernel (fuse_grouped)
     "allreduce",     # in-network partial-sum reduction (baseline ESP)
     "combine_a2a",   # return AlltoAll (+ local ESP reduce / SAA / hier)
     "ag_mp",         # AllGather over an MP-like group
@@ -337,6 +338,63 @@ def apply_wire(plan: Plan, comm) -> Plan:
         raise PlanError("apply_wire needs a concrete wire dtype; resolve "
                         "CommConfig.wire_dtype='auto' via autosched first")
     return dataclasses.replace(plan, comm=comm)
+
+
+def fuse_grouped(plan: Plan, *, local: bool = False) -> Plan:
+    """Grouped-megakernel transform: route the plan's expert FFN through
+    the dropless ragged grouped-GEMM kernel, absorbing the adjacent
+    dispatch/combine/wire work into the kernel's prologue/epilogue.
+
+    ``local=False`` (the multi-device pool form) swaps the ``expert_ffn``
+    stage's kind to ``expert_ffn_grouped`` — the executor feeds it the
+    dispatch-AlltoAll receive buffer plus exchanged per-(expert, sender)
+    routed-row counts, so capacity padding tiles are predicated off the
+    MXU — and stamps ``raw=True`` on the adjacent fused AlltoAll stages:
+    for plain-cast wire dtypes (f32/bf16) the payload stays *encoded*
+    across the kernel boundary (the kernel's f32 upcast is the decode,
+    its output cast the encode), eliding two full-buffer codec passes.
+    fp8's scale-tail payload cannot cross the boundary raw; the executor
+    falls back to the decoded path at run time (``raw`` is advisory).
+
+    ``local=True`` (single-member combined group, ``n_mp == 1``)
+    collapses dispatch -> AlltoAll -> FFN -> AlltoAll -> combine into
+    ONE ``expert_ffn_grouped`` stage: the fused megakernel gathers
+    routed token rows in its prologue and scatter-adds the gate-weighted
+    outputs in its epilogue — no (E*cap, M) intermediates in HBM.  The
+    fused stage reuses the combine stage's name so downstream deps need
+    no rewiring, and the chunk region is dissolved (``split_capacity``
+    becomes a no-op: there is no standalone AlltoAll left to overlap).
+    """
+    ffn = next((s for s in plan.stages if s.kind == "expert_ffn"), None)
+    if ffn is None:
+        raise PlanError(f"plan {plan.name!r}: fuse_grouped needs an "
+                        "expert_ffn stage")
+    if not local:
+        out = []
+        for s in plan.stages:
+            if s.name == ffn.name:
+                s = dataclasses.replace(s, kind="expert_ffn_grouped")
+            elif (s.kind in ("dispatch_a2a", "combine_a2a")
+                    and s.p("fused") and not s.p("saa")
+                    and not s.p("hier")
+                    and (ffn.name in s.deps or s.name in ffn.deps)):
+                s = s.with_params(raw=True)
+            out.append(s)
+        return dataclasses.replace(plan, stages=tuple(out))
+    gate = next(s for s in plan.stages if s.kind == "gate")
+    disp = next(s for s in plan.stages if s.kind == "dispatch")
+    comb = next(s for s in plan.stages if s.kind == "combine")
+    region = {disp.name, comb.name} | {
+        s.name for s in plan.stages
+        if s.kind in ("dispatch_a2a", "expert_ffn", "combine_a2a")}
+    token_src = next(d for d in disp.deps if d != gate.name)
+    fused = stage(comb.name, "expert_ffn_grouped",
+                  deps=(token_src, gate.name), wire=True, local=True)
+    out = tuple(fused if s.name == comb.name else s
+                for s in plan.stages
+                if s.name not in region - {comb.name})
+    return dataclasses.replace(plan, stages=out, chunk_input="",
+                               chunk_output="", chunk_size=0)
 
 
 # --- the plan registry -------------------------------------------------------

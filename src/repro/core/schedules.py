@@ -36,17 +36,19 @@ not one per (schedule x chunking x wire) combination.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 from repro.core.collectives import CommConfig
 from repro.core.executor import _aux_mean, execute, expert_ffn  # noqa: F401
 from repro.core.gating import GateConfig
-from repro.core.plan import Plan, build_plan, register_plan, stage
+from repro.core.plan import (Plan, build_plan, fuse_grouped, register_plan,
+                             stage)
 from repro.kernels.registry import KernelConfig
 
-SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "s2h", "s1d",
+SCHEDULES = ("baseline", "s1", "s2", "s1_seqpar", "s2h", "s1d", "s1g",
              "baseline_pipe", "s1_pipe", "s2_pipe", "s1_seqpar_pipe",
-             "s2h_pipe", "auto")
+             "s2h_pipe", "s1g_pipe", "auto")
 
 
 @dataclass(frozen=True)
@@ -135,6 +137,23 @@ def plan_s1_seqpar(info) -> Plan:
     """S1 under a sequence-parallel activation contract: the boundary is
     already MP-split, so the entry split and exit gather vanish."""
     return _plan_s1(info, seqpar=True)
+
+
+@register_plan("s1g")
+def plan_s1g(info) -> Plan:
+    """S1 with the dropless ragged grouped-GEMM megakernel: the same
+    stage graph as ``s1``, transformed by ``plan.fuse_grouped`` — the
+    expert FFN becomes an ``expert_ffn_grouped`` stage whose compute is
+    proportional to *routed* tokens (capacity padding tiles never reach
+    the MXU), with the dispatch gather / combine scatter and the wire
+    codec of the adjacent AlltoAlls fused into the kernel boundaries.
+    On a single-member combined group with ``n_mp == 1`` the whole
+    dispatch -> A2A -> FFN -> A2A -> combine chain collapses into one
+    fused megakernel stage.  ``base="s1"`` keeps the cost model's
+    compute term shared; ``t_plan`` adds the ragged occupancy factor."""
+    local = info.combined_group == 1 and info.n_mp == 1
+    p = fuse_grouped(_plan_s1(info, seqpar=False), local=local)
+    return dataclasses.replace(p, name="s1g", base="s1")
 
 
 def _plan_s2_like(info, name: str, a2a_extra: dict,
@@ -234,6 +253,7 @@ s2_body = _plan_body("s2", 1)
 s1_seqpar_body = _plan_body("s1_seqpar", 1)
 s2h_body = _plan_body("s2h", 1)
 s1d_body = _plan_body("s1d", 1)
+s1g_body = _plan_body("s1g", 1)
 
 BODY = {
     "baseline": baseline_body,
@@ -242,6 +262,7 @@ BODY = {
     "s1_seqpar": s1_seqpar_body,
     "s2h": s2h_body,
     "s1d": s1d_body,
+    "s1g": s1g_body,
 }
 
 # Register the chunk-pipelined variants (*_pipe) into BODY.  The import

@@ -57,11 +57,16 @@ def expert_ffn(x, w1, w3, w2, *, act="silu", block_t=128, block_f=256,
     glu = w3 is not None
     block_t = min(block_t, T)
     block_f = min(block_f, F)
-    while T % block_t:
-        block_t //= 2
+    # Token dim: pad up to the MXU-aligned tile instead of shrinking the
+    # tile to a divisor (non-power-of-two T used to degrade block_t all
+    # the way to 1 — scalar-width MXU issue).  The pad rows compute
+    # garbage that is sliced off below; they never alias real tokens.
+    t_pad = -(-T // block_t) * block_t
+    if t_pad != T:
+        x = jnp.pad(x, ((0, 0), (0, t_pad - T), (0, 0)))
     while F % block_f:
         block_f //= 2
-    n_t, n_f = T // block_t, F // block_f
+    n_t, n_f = t_pad // block_t, F // block_f
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
@@ -75,11 +80,12 @@ def expert_ffn(x, w1, w3, w2, *, act="silu", block_t=128, block_f=256,
     ]
     operands = (x, w1, w3, w2) if glu else (x, w1, w2)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(E, n_t, n_f),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
-        out_shape=jax.ShapeDtypeStruct((E, T, M), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((E, t_pad, M), x.dtype),
         interpret=interpret,
     )(*operands)
+    return out[:, :T] if t_pad != T else out

@@ -1,0 +1,265 @@
+"""Pallas TPU dropless grouped expert FFN (ragged + fully-fused forms).
+
+Two kernels implement the Parm grouped-GEMM megakernel seam:
+
+``expert_ffn_ragged``
+    The pool-path form: the (E, G, c, M) receive buffer from the
+    dispatch AlltoAll plus per-(expert, group) routed-row counts.  The
+    grid still tiles the padded capacity, but every token tile whose
+    rows are entirely beyond the routed count is *predicated off* with
+    ``pl.when`` — the MXU never sees it, so compute scales with routed
+    tokens, not capacity ("dropless" in FLOPs).  Partially-valid tiles
+    mask their tail rows to exact zero, matching the oracle bit-for-bit.
+    Compute runs in f32 (the decode half of the fused wire codec when
+    the A2A payload arrives raw bf16) and the output is cast back to the
+    input dtype (the encode half for the combine A2A).
+
+``expert_ffn_grouped_fused``
+    The single-device megakernel: dispatch gather fused into the
+    prologue (slot -> token row ids built once in jnp, rows pulled from
+    the resident token matrix per capacity tile), the two expert GEMMs
+    and activation in the body, and the combine scatter + gate-weight
+    dot fused into the epilogue — one kernel launch, no (n_slots, M)
+    f32 intermediates in HBM.  ``wire`` in {"f32", "bf16"} applies the
+    wire-codec round-trip at the two pool boundaries so the fused op is
+    numerically identical to dispatch -> encode/decode -> FFN ->
+    encode/decode -> combine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def _ragged_kernel(x_ref, cnt_ref, w1_ref, *refs, act, glu, block_t):
+    if glu:
+        w3_ref, w2_ref, o_ref = refs
+    else:
+        w2_ref, o_ref = refs
+    it, jf = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(jf == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = cnt_ref[0, 0]
+
+    @pl.when(it * block_t < cnt)          # ragged: skip empty tiles
+    def _compute():
+        x = x_ref[0, 0].astype(jnp.float32)               # (bt, M)
+        w1 = w1_ref[0].astype(jnp.float32)                # (M, bf)
+        h = lax.dot_general(x, w1, (((1,), (0,)), ((), ())))
+        if glu:
+            w3 = w3_ref[0].astype(jnp.float32)
+            h = ACT[act](h) * lax.dot_general(
+                x, w3, (((1,), (0,)), ((), ())))
+        else:
+            h = ACT[act](h)
+        w2 = w2_ref[0].astype(jnp.float32)                # (bf, M)
+        out = lax.dot_general(h, w2, (((1,), (0,)), ((), ())))
+        rows = it * block_t + lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0)
+        out = jnp.where(rows < cnt, out, 0.0)  # mask tail of partial tile
+        o_ref[...] += out.astype(o_ref.dtype)[None, None]
+
+
+def expert_ffn_ragged(xb, counts, w1, w3, w2, *, act="silu", block_t=128,
+                      block_f=256, interpret=None):
+    """xb: (E, G, c, M) pool; counts: (E, G) int32 routed rows per group;
+    w1/w3: (E, M, F); w2: (E, F, M) -> (E, G, c, M) in xb.dtype."""
+    E, G, c, M = xb.shape
+    F = w1.shape[-1]
+    glu = w3 is not None
+    block_t = min(block_t, c)
+    block_f = min(block_f, F)
+    c_pad = -(-c // block_t) * block_t
+    if c_pad != c:
+        xb = jnp.pad(xb, ((0, 0), (0, 0), (0, c_pad - c), (0, 0)))
+    while F % block_f:
+        block_f //= 2
+    n_t, n_f = c_pad // block_t, F // block_f
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_ragged_kernel, act=act, glu=glu,
+                               block_t=block_t)
+    w_in_spec = pl.BlockSpec((1, M, block_f),
+                             lambda e, g, it, jf: (e, 0, jf))
+    in_specs = [
+        pl.BlockSpec((1, 1, block_t, M), lambda e, g, it, jf: (e, g, it, 0)),
+        pl.BlockSpec((1, 1), lambda e, g, it, jf: (e, g)),
+        w_in_spec,
+        *([w_in_spec] if glu else []),
+        pl.BlockSpec((1, block_f, M), lambda e, g, it, jf: (e, jf, 0)),
+    ]
+    operands = (xb, counts, w1, w3, w2) if glu else (xb, counts, w1, w2)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, G, n_t, n_f),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_t, M),
+                               lambda e, g, it, jf: (e, g, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, G, c_pad, M), xb.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :, :c] if c_pad != c else out
+
+
+def slot_metadata(flat_idx, weights, n_tokens, n_experts, cap):
+    """Invert the gate's (token -> slot) map into the kernel's
+    (slot -> token) form: per-slot source row ids (sentinel =
+    ``n_tokens`` for empty slots), per-slot gate weights, and per-expert
+    routed-row counts.  Slots are contiguous per expert (GShard slot
+    priority), so counts are exactly the ragged group sizes."""
+    S, k = flat_idx.shape
+    flat = flat_idx.reshape(-1)
+    src = (jnp.arange(S * k, dtype=jnp.int32) // k)
+    rid = jnp.full((n_experts * cap,), n_tokens, jnp.int32)
+    rid = rid.at[flat].set(src, mode="drop")
+    ws = jnp.zeros((n_experts * cap,), jnp.float32)
+    ws = ws.at[flat].set(weights.reshape(-1).astype(jnp.float32),
+                         mode="drop")
+    counts = jnp.sum((rid < n_tokens).reshape(n_experts, cap), axis=1,
+                     dtype=jnp.int32)
+    return (rid.reshape(n_experts, cap), ws.reshape(n_experts, cap),
+            counts)
+
+
+def _fused_kernel(x_ref, rid_ref, ws_ref, cnt_ref, w1_ref, *refs,
+                  act, glu, block_t, n_f, wire):
+    if glu:
+        w3_ref, w2_ref, y_ref, xg_ref, acc_ref = refs
+    else:
+        w2_ref, y_ref, xg_ref, acc_ref = refs
+    e, it, jf = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    S = x_ref.shape[0]
+
+    def rt(v):        # fused wire round-trip at a pool boundary
+        return v.astype(jnp.bfloat16).astype(v.dtype) if wire == "bf16" \
+            else v
+
+    @pl.when((e == 0) & (it == 0) & (jf == 0))
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cnt = cnt_ref[0, 0]
+    active = it * block_t < cnt
+
+    @pl.when(jf == 0)
+    def _gather():     # dispatch prologue: pull routed rows into the tile
+        xg_ref[...] = jnp.zeros_like(xg_ref)
+
+        @pl.when(active)
+        def _rows():
+            def row(i, _):
+                rid = rid_ref[0, i]
+
+                @pl.when(rid < S)
+                def _pull(rid=rid, i=i):
+                    xg_ref[0, pl.dslice(i, 1), :] = rt(
+                        x_ref[pl.dslice(rid, 1), :].astype(jnp.float32))
+                return _
+
+            lax.fori_loop(0, block_t, row, 0)
+
+    @pl.when(jf == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(active)
+    def _compute():
+        x = xg_ref[0]                                     # (bt, M) f32
+        w1 = w1_ref[0].astype(jnp.float32)
+        h = lax.dot_general(x, w1, (((1,), (0,)), ((), ())))
+        if glu:
+            w3 = w3_ref[0].astype(jnp.float32)
+            h = ACT[act](h) * lax.dot_general(
+                x, w3, (((1,), (0,)), ((), ())))
+        else:
+            h = ACT[act](h)
+        w2 = w2_ref[0].astype(jnp.float32)
+        acc_ref[...] += lax.dot_general(
+            h, w2, (((1,), (0,)), ((), ())))[None]
+
+    @pl.when((jf == n_f - 1) & active)
+    def _scatter():    # combine epilogue: weight-dot + scatter-add
+        out = rt(acc_ref[0])
+
+        def row(i, _):
+            rid = rid_ref[0, i]
+
+            @pl.when(rid < S)
+            def _push(rid=rid, i=i):
+                w = ws_ref[0, i]
+                y_ref[pl.dslice(rid, 1), :] = (
+                    y_ref[pl.dslice(rid, 1), :]
+                    + w * lax.dynamic_slice_in_dim(out, i, 1, axis=0))
+            return _
+
+        lax.fori_loop(0, block_t, row, 0)
+
+
+def expert_ffn_grouped(x, flat_idx, weights, w1, w3, w2, *, cap,
+                       act="silu", wire="f32", block_t=128, block_f=256,
+                       interpret=None):
+    """Fused dispatch -> ragged FFN -> combine. x: (S, M);
+    flat_idx/weights: (S, k); returns (S, M) in x.dtype."""
+    S, M = x.shape
+    E, _, F = w1.shape
+    glu = w3 is not None
+    block_t = min(block_t, cap)
+    block_f = min(block_f, F)
+    c_pad = -(-cap // block_t) * block_t
+    while F % block_f:
+        block_f //= 2
+    n_t, n_f = c_pad // block_t, F // block_f
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    rid, ws, _ = slot_metadata(flat_idx, weights, S, E, cap)
+    if c_pad != cap:
+        pad = ((0, 0), (0, c_pad - cap))
+        rid = jnp.pad(rid, pad, constant_values=S)
+        ws = jnp.pad(ws, pad)
+    counts = jnp.sum((rid < S), axis=1, dtype=jnp.int32)[:, None]
+
+    kernel = functools.partial(_fused_kernel, act=act, glu=glu,
+                               block_t=block_t, n_f=n_f, wire=wire)
+    w_in_spec = pl.BlockSpec((1, M, block_f), lambda e, it, jf: (e, 0, jf))
+    in_specs = [
+        pl.BlockSpec((S, M), lambda e, it, jf: (0, 0)),
+        pl.BlockSpec((1, block_t), lambda e, it, jf: (e, it)),
+        pl.BlockSpec((1, block_t), lambda e, it, jf: (e, it)),
+        pl.BlockSpec((1, 1), lambda e, it, jf: (e, 0)),
+        w_in_spec,
+        *([w_in_spec] if glu else []),
+        pl.BlockSpec((1, block_f, M), lambda e, it, jf: (e, jf, 0)),
+    ]
+    operands = ((x, rid, ws, counts, w1, w3, w2) if glu
+                else (x, rid, ws, counts, w1, w2))
+
+    y, _, _ = pl.pallas_call(
+        kernel,
+        grid=(E, n_t, n_f),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((S, M), lambda e, it, jf: (0, 0)),
+            pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
+            pl.BlockSpec((1, block_t, M), lambda e, it, jf: (e, it, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, M), jnp.float32),
+            jax.ShapeDtypeStruct((E, c_pad, M), jnp.float32),  # gathered
+            jax.ShapeDtypeStruct((E, c_pad, M), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(*operands)
+    return y.astype(x.dtype)

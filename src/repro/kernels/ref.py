@@ -38,6 +38,42 @@ def expert_ffn_ref(x, w1, w3, w2, *, act="silu"):
     return jnp.einsum("etf,efm->etm", h, w2)
 
 
+def expert_ffn_ragged_ref(xb, counts, w1, w3, w2, *, act="silu"):
+    """Ragged grouped FFN over a (E, G, c, M) pool with per-(expert,
+    group) valid-row counts.  Compute runs in f32 (matching the pool
+    path's decoded payloads) and rows at index >= counts[e, g] are
+    forced to exact zero — the dropless contract: padding rows carry no
+    FLOPs semantically and no value numerically.  Output is cast back
+    to ``xb.dtype`` (the wire dtype on the fused raw path)."""
+    E, G, c, M = xb.shape
+    h = expert_ffn_ref(xb.reshape(E, G * c, M).astype(jnp.float32),
+                       w1, w3, w2, act=act)
+    mask = jnp.arange(c)[None, None, :] < counts[:, :, None]
+    h = h.reshape(E, G, c, M) * mask[..., None].astype(h.dtype)
+    return h.astype(xb.dtype)
+
+
+def expert_ffn_grouped_ref(x, flat_idx, weights, w1, w3, w2, *,
+                           cap, act="silu", wire="f32"):
+    """Single-device fused megakernel oracle: dispatch gather ->
+    (wire decode) -> expert FFN -> (wire encode/decode) -> combine
+    scatter + weight-dot, one op.  ``wire`` in {"f32", "bf16"} models
+    the fused codec as a round-trip at the two pool boundaries,
+    matching what dispatch_a2a/combine_a2a do between the unfused ops.
+
+    x: (S, M); flat_idx/weights: (S, k); returns (S, M) in x.dtype."""
+    E = w1.shape[0]
+
+    def rt(v):   # fused wire round-trip at a pool boundary
+        return v.astype(jnp.bfloat16).astype(v.dtype) if wire == "bf16" \
+            else v
+    buf = rt(moe_dispatch_ref(x, flat_idx, E * cap))
+    h = expert_ffn_ref(buf.reshape(E, cap, -1).astype(jnp.float32),
+                       w1, w3, w2, act=act)
+    h = rt(h.reshape(E * cap, -1))
+    return moe_combine_ref(h, flat_idx, weights).astype(x.dtype)
+
+
 def moe_dispatch_ref(x, flat_idx, n_slots):
     """Scatter tokens into the flat capacity buffer.
 

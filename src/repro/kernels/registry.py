@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import expert_ffn as _expert_ffn_mod
+from repro.kernels import expert_ffn_grouped as _grouped_mod
 from repro.kernels import flash_attention as _flash_mod
 from repro.kernels import moe_dispatch as _dispatch_mod
 from repro.kernels import ref
@@ -183,6 +184,120 @@ def _expert_ffn_pallas(cfg, static):
         block_f=cfg.block_f, interpret=cfg.interpret)
     return jax.jit(_with_ref_vjp(
         fwd, functools.partial(ref.expert_ffn_ref, act=act)))
+
+
+# --- expert_ffn_ragged / expert_ffn_grouped ----------------------------------
+# The dropless pair (PR 6).  ``expert_ffn_ragged`` is the pool-path form
+# (the executor hands it the A2A receive buffer + routed-row counts);
+# ``expert_ffn_grouped`` is the single-device megakernel fusing dispatch
+# gather and combine scatter around the ragged FFN.  Both carry analytic
+# custom_vjps: the ragged bwd is the hand-written transpose of the two
+# GEMMs with the routed-row mask folded into the cotangent (counts are
+# integral — cotangent None), and the fused bwd composes the oracle's
+# closed-form dispatch/combine transposes via its VJP with ``flat_idx``
+# held out as a non-differentiable operand.
+
+def _ragged_analytic_vjp(fwd_fn: Callable, act: str) -> Callable:
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+
+    @jax.custom_vjp
+    def op(xb, counts, w1, w3, w2):
+        return fwd_fn(xb, counts, w1, w3, w2)
+
+    def fwd(xb, counts, w1, w3, w2):
+        return fwd_fn(xb, counts, w1, w3, w2), (xb, counts, w1, w3, w2)
+
+    def bwd(res, g):
+        xb, counts, w1, w3, w2 = res
+        E, G, c, M = xb.shape
+        mask = jnp.arange(c)[None, None, :] < counts[:, :, None]
+        gm = (g * mask[..., None].astype(g.dtype)).reshape(
+            E, G * c, M).astype(jnp.float32)
+        xf = xb.reshape(E, G * c, M).astype(jnp.float32)
+        w1f = w1.astype(jnp.float32)
+        w2f = w2.astype(jnp.float32)
+        h1 = jnp.einsum("etm,emf->etf", xf, w1f)
+        if w3 is not None:
+            w3f = w3.astype(jnp.float32)
+            h3 = jnp.einsum("etm,emf->etf", xf, w3f)
+            mid, mid_vjp = jax.vjp(lambda a, b: actf(a) * b, h1, h3)
+        else:
+            mid, mid_vjp = jax.vjp(actf, h1)
+        d_w2 = jnp.einsum("etf,etm->efm", mid, gm).astype(w2.dtype)
+        d_mid = jnp.einsum("etm,efm->etf", gm, w2f)
+        if w3 is not None:
+            d_h1, d_h3 = mid_vjp(d_mid)
+            d_x = (jnp.einsum("etf,emf->etm", d_h1, w1f)
+                   + jnp.einsum("etf,emf->etm", d_h3, w3f))
+            d_w3 = jnp.einsum("etm,etf->emf", xf, d_h3).astype(w3.dtype)
+        else:
+            (d_h1,) = mid_vjp(d_mid)
+            d_x = jnp.einsum("etf,emf->etm", d_h1, w1f)
+            d_w3 = None
+        d_w1 = jnp.einsum("etm,etf->emf", xf, d_h1).astype(w1.dtype)
+        d_x = d_x.reshape(E, G, c, M).astype(xb.dtype)
+        return d_x, None, d_w1, d_w3, d_w2
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def _grouped_fused_vjp(fwd_fn: Callable, ref_fn: Callable) -> Callable:
+    @jax.custom_vjp
+    def op(x, flat_idx, weights, w1, w3, w2):
+        return fwd_fn(x, flat_idx, weights, w1, w3, w2)
+
+    def fwd(x, flat_idx, weights, w1, w3, w2):
+        return (fwd_fn(x, flat_idx, weights, w1, w3, w2),
+                (x, flat_idx, weights, w1, w3, w2))
+
+    def bwd(res, g):
+        x, flat_idx, weights, w1, w3, w2 = res
+        d = jax.vjp(
+            lambda x_, ws_, w1_, w3_, w2_: ref_fn(
+                x_, flat_idx, ws_, w1_, w3_, w2_),
+            x, weights, w1, w3, w2)[1](g)
+        return d[0], None, d[1], d[2], d[3], d[4]
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+@register("expert_ffn_ragged", "ref")
+def _expert_ffn_ragged_ref(cfg, static):
+    act = static.get("act", "silu")
+    return jax.jit(_ragged_analytic_vjp(
+        functools.partial(ref.expert_ffn_ragged_ref, act=act), act))
+
+
+@register("expert_ffn_ragged", "pallas")
+def _expert_ffn_ragged_pallas(cfg, static):
+    act = static.get("act", "silu")
+    fwd = functools.partial(
+        _grouped_mod.expert_ffn_ragged, act=act, block_t=cfg.block_t,
+        block_f=cfg.block_f, interpret=cfg.interpret)
+    return jax.jit(_ragged_analytic_vjp(fwd, act))
+
+
+def _grouped_ref_fn(static):
+    return functools.partial(
+        ref.expert_ffn_grouped_ref, cap=static["cap"],
+        act=static.get("act", "silu"), wire=static.get("wire", "f32"))
+
+
+@register("expert_ffn_grouped", "ref")
+def _expert_ffn_grouped_ref(cfg, static):
+    ref_fn = _grouped_ref_fn(static)
+    return jax.jit(_grouped_fused_vjp(ref_fn, ref_fn))
+
+
+@register("expert_ffn_grouped", "pallas")
+def _expert_ffn_grouped_pallas(cfg, static):
+    fwd = functools.partial(
+        _grouped_mod.expert_ffn_grouped, cap=static["cap"],
+        act=static.get("act", "silu"), wire=static.get("wire", "f32"),
+        block_t=cfg.block_t, block_f=cfg.block_f, interpret=cfg.interpret)
+    return jax.jit(_grouped_fused_vjp(fwd, _grouped_ref_fn(static)))
 
 
 # --- moe_dispatch / moe_combine ----------------------------------------------

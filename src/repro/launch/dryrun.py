@@ -305,7 +305,14 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             lambda l, s: jax.device_put(jnp.zeros(l.shape, l.dtype), s),
             batch, b_sh)
         _, _, metrics = compiled(params, opt_state, concrete)
-        step_metrics = {k: float(v) for k, v in metrics.items()}
+        step_metrics = {k: float(v) for k, v in metrics.items()
+                        if getattr(v, "ndim", 0) == 0}
+        el = metrics.get("expert_load")
+        if el is not None and getattr(el, "ndim", 0) == 1 and el.shape[-1]:
+            # per-expert routed-row counts (summed over layers): the
+            # dropless grouped kernel's actual group sizes
+            step_metrics["expert_load"] = [
+                float(c) for c in jax.device_get(el)]
         print(f"[step] {arch} x {shape_name} sched={sched_pick} "
               f"wire={wire_pick} "
               f"loss={step_metrics.get('loss', float('nan')):.4f}",

@@ -153,10 +153,14 @@ def block_specs(cfg: ModelConfig, kind: str, mesh, dims) -> dict:
 
 def apply_block(p, cfg: ModelConfig, kind: str, x, *, mesh, dims,
                 ctx=None, positions=None, schedule=None):
-    """Full-sequence forward. Returns (x, aux_loss_scalar)."""
+    """Full-sequence forward. Returns ``(x, aux)`` where ``aux`` is a dict:
+    ``loss`` the scalar router-loss contribution and ``expert_load`` the
+    per-expert routed-row counts — (E,) for MoE kinds, (0,) otherwise so
+    every kind scans with the same pytree structure."""
     base = base_kind(kind)
     acfg = attn_config(cfg, kind)
-    aux = jnp.float32(0.0)
+    aux = {"loss": jnp.float32(0.0),
+           "expert_load": jnp.zeros((0,), jnp.float32)}
     eps = cfg.norm_eps
     kcfg = cfg.kernel_cfg
 
@@ -177,7 +181,9 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, *, mesh, dims,
         if _moe_kind(kind):
             y, moe_aux = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
                                    cfg=_moe_cfg(cfg, kcfg), schedule=schedule)
-            aux = aux + moe_aux["aux_loss"] + moe_aux["z_loss"]
+            aux = {"loss": aux["loss"] + moe_aux["aux_loss"]
+                   + moe_aux["z_loss"],
+                   "expert_load": moe_aux["expert_load"]}
         else:
             y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
         return x + y, aux

@@ -125,6 +125,7 @@ class Model:
         # (which derives positions from block indices).
         positions = None
         aux_total = jnp.float32(0.0)
+        expert_load = jnp.zeros((0,), jnp.float32)
 
         seq_spec = None
         if cfg.seq_parallel and dims.mp and L % max(
@@ -149,11 +150,15 @@ class Model:
             if cfg.remat:
                 step = jax.checkpoint(step)
             x, auxs = lax.scan(step, x, params[f"run{r}"])
-            aux_total = aux_total + jnp.sum(auxs)
+            aux_total = aux_total + jnp.sum(auxs["loss"])
+            if auxs["expert_load"].shape[-1]:
+                run_load = jnp.sum(auxs["expert_load"], axis=0)  # (E,)
+                expert_load = run_load if not expert_load.shape[-1] \
+                    else expert_load + run_load
 
         x = apply_norm(params["final_norm"], x, cfg.norm_eps,
                        cfg.kernel_cfg)
-        return x, {"aux_loss": aux_total}
+        return x, {"aux_loss": aux_total, "expert_load": expert_load}
 
     def _head(self, params, x):
         cfg = self.cfg
@@ -210,7 +215,11 @@ class Model:
             ce = tot / jnp.maximum(n, 1.0)
         total = ce + aux["aux_loss"]
         return total, {"ce": ce, "aux": aux["aux_loss"],
-                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0)),
+                       # per-expert routed-row counts, summed over layers
+                       # ((0,) for dense models) — Trainer prints these at
+                       # step 0 and the dryrun artifact records them
+                       "expert_load": aux["expert_load"]}
 
     # --- decode ----------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:

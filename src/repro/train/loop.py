@@ -207,8 +207,18 @@ class Trainer:
                     exclude=getattr(self, "_sched_keys", ()))
                 if summary:
                     print(summary, flush=True)
+                el = metrics.get("expert_load")
+                if el is not None and getattr(el, "ndim", 0) == 1 \
+                        and el.shape[-1]:
+                    vals = " ".join(f"{float(c):.0f}"
+                                    for c in jax.device_get(el))
+                    print(f"expert load (routed rows/expert, all layers): "
+                          f"[{vals}]", flush=True)
             if step % log_every == 0 or step == n_steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
+                # vector metrics (e.g. expert_load) are step-0 diagnostics,
+                # not per-step scalars — keep the history float-only
+                m = {k: float(v) for k, v in metrics.items()
+                     if getattr(v, "ndim", 0) == 0}
                 m["step"] = step
                 m["wall_s"] = time.perf_counter() - t0
                 history.append(m)

@@ -51,7 +51,8 @@ def main(mode: str):
         assert y.shape == x.shape, (sched, y.shape)
         assert not np.isnan(np.asarray(y)).any(), sched
         outs[sched] = np.asarray(y)
-        auxes[sched] = {k: float(v) for k, v in aux.items()}
+        auxes[sched] = {k: float(v) for k, v in aux.items()
+                        if getattr(v, "ndim", 0) == 0}
         assert auxes[sched]["drop_frac"] == 0.0, (sched, auxes[sched])
 
     for sched in scheds[1:]:

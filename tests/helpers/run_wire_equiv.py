@@ -65,7 +65,8 @@ def main(mode: str):
         if not grad:
             y, aux = jax.jit(lambda x, p, c=cfg, s=sched: apply_moe(
                 x, p, mesh=mesh, dims=dims, cfg=c, schedule=s))(x, params)
-            return np.asarray(y), {k: float(v) for k, v in aux.items()}
+            return np.asarray(y), {k: float(v) for k, v in aux.items()
+                                   if getattr(v, "ndim", 0) == 0}
 
         def loss(p, x):
             y, aux = apply_moe(x, p, mesh=mesh, dims=dims, cfg=cfg,

@@ -1,0 +1,186 @@
+"""Dropless ragged grouped-GEMM megakernel: pallas-vs-oracle unit tests
+(interpret mode) plus the s1g-vs-s1 schedule parity matrix (subprocess,
+8 fake devices).
+
+The unit tests exercise the ragged contract directly — rows at index >=
+counts[e, g] are exact zeros, empty groups are skipped, tail groups
+smaller than a tile are masked — and the fused single-device form
+(dispatch gather prologue + combine scatter epilogue).  The parity
+matrix drives the same kernels through the plan executor against the
+capacity-pool path they fuse.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gating import GateConfig, capacity, topk_gate
+from repro.kernels import ref
+from repro.kernels.expert_ffn_grouped import (expert_ffn_grouped,
+                                              expert_ffn_ragged,
+                                              slot_metadata)
+from repro.kernels.registry import get_op
+
+from conftest import subprocess_env
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+
+def _run(script, *args, n_devices=8, timeout=900):
+    env = subprocess_env(n_devices)
+    env["PYTHONPATH"] = HELPERS + os.pathsep + env["PYTHONPATH"]
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _pool(E, G, c, M, F, seed=0, glu=True, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xb = jax.random.normal(ks[0], (E, G, c, M), dtype)
+    w1 = (jax.random.normal(ks[1], (E, M, F)) * 0.1).astype(dtype)
+    w3 = (jax.random.normal(ks[2], (E, M, F)) * 0.1).astype(dtype) \
+        if glu else None
+    w2 = (jax.random.normal(ks[3], (E, F, M)) * 0.1).astype(dtype)
+    return xb, w1, w3, w2
+
+
+class TestRaggedFFN:
+    @pytest.mark.parametrize("E,G,c,M,F", [
+        (4, 2, 64, 64, 128), (8, 1, 32, 96, 160), (2, 4, 128, 64, 64),
+    ])
+    @pytest.mark.parametrize("glu", [True, False])
+    def test_vs_ref(self, E, G, c, M, F, glu):
+        xb, w1, w3, w2 = _pool(E, G, c, M, F, glu=glu)
+        counts = jax.random.randint(jax.random.PRNGKey(9), (E, G), 0,
+                                    c + 1).astype(jnp.int32)
+        act = "silu" if glu else "gelu"
+        out = expert_ffn_ragged(xb, counts, w1, w3, w2, act=act)
+        exp = ref.expert_ffn_ragged_ref(xb, counts, w1, w3, w2, act=act)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_rows_beyond_count_are_exact_zero(self):
+        xb, w1, w3, w2 = _pool(4, 2, 64, 64, 128, seed=3)
+        counts = jnp.array([[64, 0], [17, 5], [0, 0], [1, 63]],
+                           jnp.int32)
+        out = np.asarray(expert_ffn_ragged(xb, counts, w1, w3, w2))
+        for e in range(4):
+            for g in range(2):
+                n = int(counts[e, g])
+                assert (out[e, g, n:] == 0.0).all(), (e, g)
+                if n:
+                    assert np.abs(out[e, g, :n]).sum() > 0.0, (e, g)
+
+    def test_zero_token_experts_and_skew(self):
+        # the ragged point: an all-but-one-empty pool must behave like
+        # the dense pool masked, tail group smaller than one tile
+        xb, w1, w3, w2 = _pool(8, 1, 96, 64, 128, seed=5)
+        counts = jnp.zeros((8, 1), jnp.int32).at[3, 0].set(96) \
+            .at[6, 0].set(7)
+        out = expert_ffn_ragged(xb, counts, w1, w3, w2)
+        exp = ref.expert_ffn_ragged_ref(xb, counts, w1, w3, w2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_bf16_io_f32_compute(self):
+        xb, w1, w3, w2 = _pool(2, 2, 64, 64, 128, dtype=jnp.bfloat16)
+        counts = jnp.array([[64, 10], [0, 33]], jnp.int32)
+        out = expert_ffn_ragged(xb, counts, w1, w3, w2)
+        exp = ref.expert_ffn_ragged_ref(xb, counts, w1, w3, w2)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    def test_registry_grad_matches_ref_grad(self):
+        xb, w1, w3, w2 = _pool(4, 1, 64, 64, 128, seed=7)
+        counts = jnp.array([[64], [11], [0], [40]], jnp.int32)
+        op = get_op("expert_ffn_ragged", backend="pallas")
+        op_ref = get_op("expert_ffn_ragged", backend="ref")
+
+        def s(f):
+            return jax.grad(lambda a: jnp.sum(
+                f(a, counts, w1, w3, w2) ** 2))(xb)
+        np.testing.assert_allclose(np.asarray(s(op)),
+                                   np.asarray(s(op_ref)),
+                                   atol=5e-4, rtol=5e-4)
+
+
+class TestFusedGrouped:
+    def _routed(self, S, M, E, k, f=2.0, seed=0):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (S, M))
+        wg = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                               (M, E)) * 0.3
+        cfg = GateConfig(n_experts=E, top_k=k, capacity_factor=f)
+        cap = capacity(S, cfg)
+        eidx, slot, w, _ = topk_gate(x, wg, cfg, cap)
+        flat = jnp.where(slot < cap, eidx * cap + slot,
+                         E * cap).astype(jnp.int32)
+        return x, flat, w, cap
+
+    @pytest.mark.parametrize("wire", ["f32", "bf16"])
+    @pytest.mark.parametrize("S,M,E,k", [(128, 64, 4, 2), (96, 96, 8, 1)])
+    def test_vs_ref(self, wire, S, M, E, k):
+        x, flat, w, cap = self._routed(S, M, E, k)
+        _, w1, w3, w2 = _pool(E, 1, cap, M, 2 * M)
+        out = expert_ffn_grouped(x, flat, w, w1, w3, w2, cap=cap,
+                                 wire=wire)
+        exp = ref.expert_ffn_grouped_ref(x, flat, w, w1, w3, w2,
+                                         cap=cap, wire=wire)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_dropped_tokens_contribute_zero(self):
+        # tight capacity: sentinel slots must gather zeros and scatter
+        # nothing back — dropped rows come out exactly zero
+        x, flat, w, cap = self._routed(256, 64, 4, 2, f=0.25, seed=2)
+        assert bool((flat == 4 * cap).any())
+        _, w1, w3, w2 = _pool(4, 1, cap, 64, 128)
+        out = np.asarray(expert_ffn_grouped(x, flat, w, w1, w3, w2,
+                                            cap=cap))
+        exp = np.asarray(ref.expert_ffn_grouped_ref(x, flat, w, w1, w3,
+                                                    w2, cap=cap))
+        np.testing.assert_allclose(out, exp, atol=5e-4, rtol=5e-4)
+        dropped = np.asarray((flat == 4 * cap).all(axis=-1))
+        assert (np.abs(out[dropped]) == 0.0).all()
+
+    def test_slot_metadata_counts_match_gate_load(self):
+        x, flat, w, cap = self._routed(128, 64, 4, 2, seed=4)
+        rid, ws, counts = slot_metadata(flat, w, 128, 4, cap)
+        onehot = np.zeros((4,), np.int64)
+        fl = np.asarray(flat).reshape(-1)
+        for v in fl[fl < 4 * cap]:
+            onehot[v // cap] += 1
+        np.testing.assert_array_equal(np.asarray(counts), onehot)
+        # slots are contiguous per expert: rid sentinel iff idx>=count
+        rid = np.asarray(rid)
+        for e in range(4):
+            assert (rid[e, :onehot[e]] < 128).all()
+            assert (rid[e, onehot[e]:] == 128).all()
+
+
+class TestGroupedScheduleParity:
+    """s1g (fuse_grouped(s1)) vs the s1 capacity-pool golden through
+    apply_moe: forward/grad envelopes, bit-identical aux scalars,
+    routed-load vectors and drop masks — per mesh mapping x n_chunks x
+    wire dtype (see tests/helpers/run_grouped_parity.py)."""
+
+    def test_merged_mesh(self):
+        assert "OK merged" in _run("run_grouped_parity.py", "merged")
+
+    def test_distinct_axes(self):
+        assert "OK distinct" in _run("run_grouped_parity.py", "distinct")
+
+    def test_skewed_load_and_empty_experts(self):
+        assert "OK skew" in _run("run_grouped_parity.py", "skew")
+
+    def test_local_fused_megakernel(self):
+        assert "OK local" in _run("run_grouped_parity.py", "local",
+                                  n_devices=1)
