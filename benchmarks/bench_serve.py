@@ -7,7 +7,9 @@ reduced MoE arch and reports microseconds per generated token plus the
 derived tok/s and p50/p95/p99 request-latency percentiles — the serving
 analogue of the paper's per-layer schedule sweeps: decode-time pools
 pick a different (schedule, wire) point than training, and this is the
-bench that shows it.
+bench that shows it.  A final pair of rows serves a shared-system-prompt
+trace with the paged pool's prefix cache off vs on (PR 7), reporting
+prefix hits / prefill tokens actually skipped.
 
 Run under 8 fake CPU devices (benchmarks/run.py does this):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -33,14 +35,15 @@ ARCH = "qwen3-moe-30b-a3b"
 
 
 def serve_once(cfg, mesh, dims, *, max_batch, schedule, wire, n_requests,
-               gen, seed=0):
+               gen, seed=0, **engine_kw):
     if wire != "f32":
         cfg = replace(cfg, moe=replace(
             cfg.moe, comm=CommConfig(wire_dtype=wire)))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(model, mesh, dims, max_batch=max_batch, max_len=64,
-                    schedule=None if schedule == "auto" else schedule)
+                    schedule=None if schedule == "auto" else schedule,
+                    **engine_kw)
     rng = np.random.RandomState(seed)
     # warmup: compile prefill buckets + the decode step
     engine.submit(rng.randint(0, cfg.vocab_size, 8), 2)
@@ -55,6 +58,30 @@ def serve_once(cfg, mesh, dims, *, max_batch, schedule, wire, n_requests,
     stats = latency_stats(done)
     n_tok = stats["n_tokens"]
     return 1e6 * dt / max(n_tok, 1), stats
+
+
+def serve_prefix(cfg, mesh, dims, *, max_batch, n_requests, gen,
+                 prefix_cache, seed=0):
+    """Shared-system-prompt trace: every request repeats a 33-token
+    prefix plus a short private tail, so the paged pool's prefix cache
+    (PR 7) can skip the bulk of every prefill after the first."""
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, mesh, dims, max_batch=max_batch, max_len=64,
+                    prefix_cache=prefix_cache)
+    rng = np.random.RandomState(seed)
+    sysp = list(rng.randint(0, cfg.vocab_size, 33))
+    engine.submit(sysp + [1], 2)       # warmup compiles + primes cache
+    engine.run(params)
+    import time
+    for _ in range(n_requests):
+        tail = list(rng.randint(0, cfg.vocab_size, rng.randint(2, 7)))
+        engine.submit(sysp + tail, gen)
+    t0 = time.perf_counter()
+    done = engine.run(params)
+    dt = time.perf_counter() - t0
+    stats = latency_stats(done)
+    return 1e6 * dt / max(stats["n_tokens"], 1), stats, engine.stats
 
 
 def main():
@@ -93,6 +120,18 @@ def main():
              f"p95_ms={stats['p95_ms']:.0f};"
              f"p99_ms={stats['p99_ms']:.0f};"
              f"ttft_p50_ms={stats['ttft_p50_ms']:.0f}")
+
+    # paged-KV prefix reuse: same shared-prefix trace, cache off vs on
+    for on in (False, True):
+        us_tok, stats, es = serve_prefix(
+            cfg, mesh, dims, max_batch=min_batch,
+            n_requests=args.requests, gen=args.gen, prefix_cache=on)
+        emit(f"serve_{ARCH}_prefix_{'on' if on else 'off'}", us_tok,
+             f"tok_per_s={stats['tok_per_s']:.1f};"
+             f"prefix_hits={es['prefix_hits']};"
+             f"prefix_tokens={es['prefix_tokens']};"
+             f"prefill_tokens={es['prefill_tokens']};"
+             f"peak_blocks={es['peak_blocks']}")
     if args.smoke:
         print("# bench_serve smoke ok")
 

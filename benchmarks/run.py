@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Analytic benches run
 in-process; measured multi-device benches run in subprocesses with 8 fake
 CPU devices (the main process must keep seeing 1 device).
 
-Every row is also collected into the canonical ``BENCH_pr6.json`` at the
+Every row is also collected into the canonical ``BENCH_pr7.json`` at the
 repo root — the machine-readable perf trajectory successive PRs diff
 against (schema: ``{"rows": [{"name", "us_per_call", "derived"}, ...]}``).
 """
@@ -40,7 +40,7 @@ SUBPROCESS = [
 ]
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_pr6.json")
+    os.path.abspath(__file__))), "BENCH_pr7.json")
 
 
 def _collect(rows: list, line: str) -> None:

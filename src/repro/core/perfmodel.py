@@ -347,20 +347,27 @@ class PerfModel:
         return fixed + tc + (n - 1) * max(tc, tf) + tf
 
     # --- decode latency model (repro.serve) ---------------------------------
-    def t_decode(self, s: MoELayerShape, wire_dtype=None) -> float:
+    def t_decode(self, s: MoELayerShape, wire_dtype=None,
+                 kv_bytes: float = 0.0) -> float:
         """Predicted seconds for one MoE layer at *decode* time: the best
         candidate of the decode grid (``plan.analytic_schedules(infer=
         True)``, which adds the decode-dedicated plans, e.g. ``s1d``) at
         ``n_chunks=1`` — decode pools are a handful of tokens, far too
         small for capacity chunking to pay for its alphas.
 
+        ``kv_bytes`` adds the paged-KV attention read for the step: the
+        decode batch streams every live page of K/V once per token, an
+        HBM-bandwidth-bound term (``kv_bytes / HBM_BW``) that grows with
+        context length while the MoE terms stay fixed.
+
         The serving engine uses this for batch-bucket sizing
         (``repro.serve.engine.suggest_max_batch``): decode steps are
         alpha-dominated, so per-token latency falls with batch until the
-        bandwidth terms take over.
+        bandwidth terms take over — and with paged KV the block budget,
+        not the row count, caps the batch.
         """
         from repro.core import plan as planlib  # lazy: avoid module cycle
-        return min(
+        return max(kv_bytes, 0.0) / HBM_BW + min(
             self.t_plan(planlib.plan_for_shape(name, s, 1), s,
                         wire_dtype=wire_dtype)
             for name in planlib.analytic_schedules(infer=True))

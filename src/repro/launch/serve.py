@@ -36,13 +36,21 @@ def build_engine(args, cfg, model):
     if max_batch <= 0:               # perf-model bucket sizing (t_decode)
         from repro.serve import suggest_max_batch
         sizes = dims.sizes(mesh)
+        # mean live context per row: half the prompt spread + the budget
+        mean_len = min((4 + args.prompt_len) / 2 + args.gen, args.max_len)
         max_batch = suggest_max_batch(
             cfg, n_ep=sizes["ep"], n_esp=sizes["esp"], n_mp=sizes["mp"],
-            candidates=(1, 2, 4, 8, 16, 32))
-        print(f"auto max-batch (t_decode): {max_batch}")
+            candidates=(1, 2, 4, 8, 16, 32),
+            n_blocks=args.n_blocks or None, block_size=args.block_size,
+            mean_len=mean_len)
+        print(f"auto max-batch (t_decode, block budget): {max_batch}")
     return Engine(model, mesh, dims, max_batch=max_batch,
                   max_len=args.max_len, schedule=schedule,
-                  prefill_batch=args.prefill_batch), mesh, dims
+                  prefill_batch=args.prefill_batch,
+                  block_size=args.block_size,
+                  n_blocks=args.n_blocks or None,
+                  prefix_cache=args.prefix_cache,
+                  prefill_chunk=args.prefill_chunk), mesh, dims
 
 
 def main():
@@ -59,6 +67,17 @@ def main():
                     help="max synthetic prompt length")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--prefill-batch", type=int, default=1)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in tokens (must divide --max-len)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="KV arena pages (0 = slab-equivalent "
+                         "max_batch * max_len / block_size)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shared-prefix reuse (--no-prefix-cache disables)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size in tokens (0 = one-shot); "
+                         "chunks alternate with decode rounds")
     ap.add_argument("--schedule", default=None,
                     help="force one MoE schedule (default: auto decisions)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -104,6 +123,10 @@ def main():
           f"({s['prefill_tokens']} tokens), {s['decode_calls']} decode "
           f"rounds ({s['decode_tokens']} tokens), max_active "
           f"{s['max_active']}/{engine.max_batch}")
+    print(f"paged kv: {s['prefix_hits']} prefix hits "
+          f"({s['prefix_tokens']} tokens reused), peak pages "
+          f"{s['peak_blocks']}/{engine.pool.n_blocks} "
+          f"(block size {engine.block_size})")
     from repro.core import autosched
     summary = autosched.cache_summary()
     if summary:

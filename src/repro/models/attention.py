@@ -337,6 +337,94 @@ def prefill_attn(p, cfg: AttnConfig, x, cache, lengths, *, kernel=None):
     return out.reshape(B, L, H * hd) @ p["wo"], new_cache
 
 
+def paged_chunk_attn(p, cfg: AttnConfig, x, arena, table, starts, lens):
+    """Unified paged attention: ONE primitive for decode, one-shot
+    prefill and chunked prefill, reading/writing the block arena through
+    per-row page tables.
+
+    ``x`` is a (B, C, D) chunk of per-row token spans: row b holds
+    ``lens[b]`` valid tokens at absolute positions ``starts[b] ..
+    starts[b] + lens[b] - 1``.  ``C = 1`` with ``lens = 1`` is a decode
+    step; ``starts = 0`` with the whole prompt is one-shot prefill;
+    anything between is a prefill chunk.  ``arena`` is this layer's
+    paged cache ``{"k","v": (N, bs, Kh, hd), "pos": (N, bs)}`` (physical
+    page 0 = the null page), ``table`` the (B, nb) int32 page table.
+
+    The chunk's rope-rotated K/V are scattered into the arena at flat
+    page slots ``table[b, p // bs] * bs + p % bs`` (invalid rows target
+    the null page and write ``pos = -1``), then every query attends the
+    full gathered ``(B, nb * bs)`` context.  Because the gather lays
+    position p at index p — exactly the slab cache's layout — and the
+    score/softmax op order below matches ``sdpa_full``/``decode_attn``,
+    outputs are bit-identical to the slab paths (masked columns are
+    exact zeros after softmax; see the paged-vs-slab oracle in
+    tests/helpers/run_paged_parity.py).
+
+    Returns ``(out (B, C, D), new_arena)``.
+    """
+    B, C, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    N, bs = arena["pos"].shape
+    nb = table.shape[1]
+    q = (x @ p["wq"]).reshape(B, C, H, hd)
+    k = (x @ p["wk"]).reshape(B, C, K, hd)
+    v = (x @ p["wv"]).reshape(B, C, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(K, hd)
+        v = v + p["bv"].reshape(K, hd)
+    offs = jnp.arange(C)
+    qpos = starts[:, None] + offs[None, :]                # (B, C) absolute
+    valid_q = offs[None, :] < lens[:, None]               # (B, C)
+    if cfg.use_rope:
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    # scatter the chunk into the arena (flat (N*bs, ...) view): invalid
+    # rows/pages land in the null page with pos -1, so they stay masked
+    blk_idx = jnp.clip(qpos // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(table, blk_idx, axis=1)    # (B, C)
+    ok = valid_q & (phys > 0) & (qpos < nb * bs)
+    flat = jnp.where(ok, phys * bs + qpos % bs, 0).reshape(-1)
+    pos_w = jnp.where(ok, qpos, -1).astype(jnp.int32).reshape(-1)
+    # invalid writes are VALUE-zeroed, not just masked: an idle row's
+    # hidden state is NaN (its whole context is masked), and a NaN in
+    # the null page would leak into live rows through the value einsum
+    # (softmax weight 0 * NaN = NaN).  Zeros keep the null page inert
+    # AND make the duplicate-index scatter at flat slot 0 deterministic.
+    okk = ok.reshape(-1)[:, None, None]
+    k_w = jnp.where(okk, k.reshape(-1, K, hd), 0).astype(arena["k"].dtype)
+    v_w = jnp.where(okk, v.reshape(-1, K, hd), 0).astype(arena["v"].dtype)
+    new_arena = {
+        "k": arena["k"].reshape(N * bs, K, hd)
+        .at[flat].set(k_w).reshape(N, bs, K, hd),
+        "v": arena["v"].reshape(N * bs, K, hd)
+        .at[flat].set(v_w).reshape(N, bs, K, hd),
+        "pos": arena["pos"].reshape(N * bs)
+        .at[flat].set(pos_w).reshape(N, bs),
+    }
+
+    # gather each row's full context: page p // bs, offset p % bs —
+    # gathered index IS the absolute position (the slab layout)
+    gk = jnp.take(new_arena["k"], table, axis=0).reshape(B, nb * bs, K, hd)
+    gv = jnp.take(new_arena["v"], table, axis=0).reshape(B, nb * bs, K, hd)
+    gpos = jnp.take(new_arena["pos"], table, axis=0).reshape(B, nb * bs)
+    kk = _repeat_kv(gk, H // K)
+    vv = _repeat_kv(gv, H // K)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * cfg.scale
+    gp = gpos[:, None, :]                                 # (B, 1, W)
+    qp = qpos[:, :, None]                                 # (B, C, 1)
+    valid = (gp >= 0) & (gp <= qp)                        # (B, C, W)
+    if cfg.window is not None:
+        valid &= gp > qp - cfg.window
+    if cfg.chunk is not None:
+        valid &= (gp // cfg.chunk) == (qp // cfg.chunk)
+    s = jnp.where(valid[:, None], s, -jnp.inf)
+    pr = jax.nn.softmax(s, -1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vv)
+    return out.reshape(B, C, H * hd) @ p["wo"], new_arena
+
+
 def decode_attn(p, cfg: AttnConfig, x, cache, step, *, kv_cache_static=None,
                 mesh=None, mp_axes=None):
     """One-token decode. x: (B, 1, D); ``step`` is the absolute position —

@@ -297,6 +297,47 @@ def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, lengths, *,
     return x + y, new_cache
 
 
+def paged_block(p, cfg: ModelConfig, kind: str, x, cache, table, starts,
+                lens, *, mesh, dims, schedule=None, infer=False):
+    """Block forward over a paged KV arena: the ONE code path behind the
+    serving engine's decode (C=1, ``infer=True``), one-shot prefill and
+    chunked prefill (``infer=False`` — prefill pools take the training-
+    shaped autosched decision, like ``prefill_block``).  Routing every
+    phase through the same primitive is what makes chunked-vs-one-shot
+    and prefix-hit-vs-cold runs bitwise comparable.  Returns
+    ``(x, new_cache)``.
+    """
+    base = base_kind(kind)
+    if base not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged_block: kind {kind!r} has no paged-cache path "
+            "(serving engine supports dense/moe decoder stacks)")
+    acfg = attn_config(cfg, kind)
+    eps = cfg.norm_eps
+    kcfg = cfg.kernel_cfg
+
+    def norm(pn, h):
+        return apply_norm(pn, h, eps, kcfg)
+
+    h = norm(p["norm1"], x)
+    a, c2 = attn_mod.paged_chunk_attn(p["attn"], acfg, h, cache["attn"],
+                                      table, starts, lens)
+    new_cache = dict(cache)
+    new_cache["attn"] = c2
+    if cfg.parallel_block:
+        f = apply_ffn(p["ffn"], h, cfg.ffn_act)
+        return x + (a + f), new_cache
+    x = x + a
+    h2 = norm(p["norm2"], x)
+    if _moe_kind(kind):
+        y, _ = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
+                         cfg=_moe_cfg(cfg, kcfg), schedule=schedule,
+                         infer=infer)
+    else:
+        y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
+    return x + y, new_cache
+
+
 def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,
                  mesh, dims, ctx_kv=None, schedule=None):
     """One-token decode. Returns (x, new_cache)."""

@@ -299,6 +299,56 @@ class Model:
         logits = self._head(params, h_last[:, None, :])[:, 0]
         return logits, new_cache
 
+    def paged_step(self, params, cache, batch, *, mesh, dims,
+                   schedule: Optional[str] = None, infer: bool = False):
+        """One step over a PAGED KV arena (the serving engine's unified
+        path): per-row token spans written/read through page tables.
+
+        ``batch`` holds ``tokens`` (B, C), ``starts`` (B,) absolute
+        position of each row's first token, ``lens`` (B,) valid counts,
+        and ``tables`` (B, max_blocks) int32 page tables into the arena
+        (``cache`` leaves are ``(layers, n_pages, block_size, ...)``).
+        ``C = 1``/``lens = 1``/``infer=True`` is a decode round; larger
+        C is a prefill chunk (``infer=False`` keeps the prefill-shaped
+        MoE autosched decision).  Returns ``(last_logits, new_cache)``
+        with ``last_logits[b]`` at row b's final valid chunk position —
+        only meaningful for rows whose span ends their prompt (or the
+        decoded token).
+        """
+        cfg = self.cfg
+        self._mesh, self._dims = mesh, dims
+        bad = [k for k, _ in self.runs
+               if blk.base_kind(k) not in ("dense", "moe")]
+        if bad:
+            raise NotImplementedError(
+                f"paged_step: unsupported block kinds {bad} "
+                "(paged serving covers dense/moe decoder stacks)")
+        tokens = batch["tokens"]
+        starts, lens, tables = batch["starts"], batch["lens"], batch["tables"]
+        B, C = tokens.shape
+        x = embed(params["embed"], tokens)
+        if not cfg.use_rope:
+            pe = sinusoidal_positions(2048, cfg.d_model)
+            qpos = jnp.minimum(starts[:, None] + jnp.arange(C), 2047)
+            x = x + jnp.take(pe, qpos, axis=0).astype(x.dtype)
+        new_cache = {}
+        for r, (kind, n) in enumerate(self.runs):
+            def step(h, scanned, kind=kind):
+                layer_params, layer_cache = scanned
+                return blk.paged_block(
+                    layer_params, cfg, kind, h, layer_cache, tables,
+                    starts, lens, mesh=mesh, dims=dims, schedule=schedule,
+                    infer=infer)
+
+            x, new_cache[f"run{r}"] = lax.scan(
+                step, x, (params[f"run{r}"], cache[f"run{r}"]))
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps,
+                       cfg.kernel_cfg)
+        idx = jnp.clip(lens - 1, 0, C - 1)
+        h_last = x[jnp.arange(B), idx]                    # (B, D)
+        logits = self._head(params, h_last[:, None, :])[:, 0]
+        return logits, new_cache
+
     def decode_step(self, params, cache, batch, *, mesh, dims,
                     schedule=None, ctx_kv=None):
         """One serve step: (B, 1) token -> (B, 1, V) logits + new cache.

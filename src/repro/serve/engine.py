@@ -1,32 +1,49 @@
-"""Continuous-batching MoE serving engine.
+"""Continuous-batching MoE serving engine over a PAGED KV cache.
 
 ``launch/serve.py`` used to drive one fixed batch token-by-token —
 prompt positions included — with every decode step running the
 *training*-shaped MoE schedules.  The engine replaces that with a
 request lifecycle:
 
-  submit -> queue -> admit (KV slot + batched ONE-SHOT prefill)
-         -> decode rounds (continuous batch over the whole slot pool)
-         -> finish (EOS / token budget) -> evict slot -> detokenize
+  submit -> queue -> admit (page-table rows + shared-prefix reuse)
+         -> prefill (one-shot or fixed-size CHUNKS interleaved with
+            decode rounds)
+         -> decode rounds (continuous batch over the whole row pool)
+         -> finish (EOS / token budget) -> release pages -> detokenize
 
-Scheduling interleaves the two phases prefill-first: each ``step()``
-either admits waiting requests (one jitted prefill over the whole
-group's padded prompts — never ``prompt_len`` calls) or runs one decode
-round over all ``max_batch`` pool rows at per-row positions.  Requests
-join and leave the decode batch mid-run; idle rows ride along as
-padding, which keeps the decode step's shapes FIXED — one compilation,
-no matter how requests come and go.  Prefill shapes are bucketed
-(prompt length rounded up to a power of two, group size capped by
-``prefill_batch``), bounding compilations at log(max_len) x
-prefill_batch.
+The KV memory model is paged (PR 7): one fixed block arena for the
+engine's lifetime, per-request page tables grown on demand, and a
+refcounted shared-prefix cache — a system prompt's full blocks are
+computed once and shared across requests (``stats["prefix_hits"]`` /
+``stats["prefix_tokens"]``).  Admission reasons about free BLOCKS (worst
+case prompt + budget), not free rows, and reserves them up front so a
+running request can never deadlock mid-decode.
 
-MoE layers run decode-DEDICATED schedule decisions: ``decode_block``
-marks its ``apply_moe`` calls ``infer=True``, giving decode pools their
-own autosched cache class (never evicting the training/prefill
-decision), the decode-widened plan grid (``s1d``), n_chunks pinned to
-1, and drop-free capacity — a row's output is independent of its batch
-mates, which is what makes continuous batching safe for routed experts
-(and what the bitwise parity test in tests/test_serve.py pins down).
+Scheduling: each ``step()`` either advances prefill (one jitted call
+over the waiting group's next chunk — never ``prompt_len`` calls) or
+runs one decode round over all ``max_batch`` rows at per-row positions.
+With ``prefill_chunk > 0`` a long prompt is split into fixed-size
+chunks and ALTERNATES with decode rounds, so one long prompt cannot
+stall the pool's decode p99.  Requests join and leave the decode batch
+mid-run; idle rows ride along with all-null page tables, which keeps
+the decode step's shapes FIXED — one compilation, no matter how
+requests come and go.  Prefill chunk shapes are bucketed (power of
+two, capped by ``prefill_chunk``), bounding compilations at
+log(max_len) x group size.
+
+Every phase — one-shot prefill, chunked prefill, prefix-hit suffix
+prefill, decode — runs through ONE paged primitive
+(``models.attention.paged_chunk_attn``), whose gather lays position p
+at index p (the slab layout).  That is what keeps the PR 5 bitwise
+guarantees: paged-vs-slab, chunked-vs-one-shot and hit-vs-cold token
+streams are bit-identical (tests/helpers/run_paged_parity.py).
+
+MoE layers keep their decode-DEDICATED schedule decisions: decode
+rounds mark ``apply_moe`` ``infer=True`` (own autosched cache class,
+decode-widened ``s1d`` grid, n_chunks pinned to 1, drop-free capacity)
+while prefill chunks stay ``infer=False`` — a row's output is
+independent of its batch mates, which is what makes continuous
+batching safe for routed experts.
 """
 
 from __future__ import annotations
@@ -68,12 +85,13 @@ class Completion:
 
 
 class _State:
-    __slots__ = ("req", "slot", "pos", "last_tok", "generated",
+    __slots__ = ("req", "slot", "pos", "fill_pos", "last_tok", "generated",
                  "t_submit", "t_admit", "t_first", "t_done")
 
-    def __init__(self, req, slot, t_submit, t_admit):
+    def __init__(self, req, slot, fill_pos, t_submit, t_admit):
         self.req, self.slot = req, slot
         self.pos = len(req.prompt)     # next absolute position to decode
+        self.fill_pos = fill_pos       # next prompt position to prefill
         self.last_tok = None
         self.generated = []
         self.t_submit, self.t_admit = t_submit, t_admit
@@ -85,20 +103,26 @@ def _pow2(n: int) -> int:
 
 
 class Engine:
-    """Continuous-batching serving engine over a KV-slot pool.
+    """Continuous-batching serving engine over a paged KV-block pool.
 
-    ``max_batch`` is the decode batch (= KV pool slots); ``max_len`` the
-    per-slot KV length (prompt + generation budget must fit).
-    ``prefill_batch`` caps how many admissions share one prefill call
-    (1 = each request prefills alone, which makes a request's prefill
-    bitwise independent of its queue mates).  ``schedule`` forces one
-    MoE schedule for prefill AND decode; None lets each phase's
-    autosched decision stand.
+    ``max_batch`` is the decode batch (= concurrent rows); ``max_len``
+    the per-request KV length (prompt + generation budget must fit).
+    ``block_size`` sets the KV page granularity and ``n_blocks`` the
+    arena size (default: slab-equivalent ``max_batch * max_len /
+    block_size``); ``prefix_cache`` enables shared-prefix reuse and
+    ``prefill_chunk`` > 0 splits prompts into chunks of that many
+    tokens, alternating with decode rounds.  ``prefill_batch`` caps how
+    many admissions share one prefill call (1 = each request prefills
+    alone, which makes a request's prefill bitwise independent of its
+    queue mates).  ``schedule`` forces one MoE schedule for prefill AND
+    decode; None lets each phase's autosched decision stand.
     """
 
     def __init__(self, model, mesh, dims, *, max_batch: int = 8,
                  max_len: int = 256, schedule=None, prefill_batch: int = 1,
-                 eos_token=None, detokenize=None):
+                 eos_token=None, detokenize=None, block_size: int = 16,
+                 n_blocks=None, prefix_cache: bool = True,
+                 prefill_chunk: int = 0):
         cfg = model.cfg
         bad = [k for k, _ in model.runs
                if blk.base_kind(k) not in ("dense", "moe")]
@@ -113,23 +137,31 @@ class Engine:
         self.model, self.mesh, self.dims = model, mesh, dims
         self.max_batch, self.max_len = int(max_batch), int(max_len)
         self.prefill_batch = max(int(prefill_batch), 1)
+        self.prefill_chunk = max(int(prefill_chunk), 0)
         self.eos_token = eos_token
         self.detokenize = detokenize or (
             lambda ids: " ".join(str(t) for t in ids))
-        self.pool = KVCachePool(model, self.max_batch, self.max_len)
-        # donate the pool: each step's input cache is dead once the
+        self.pool = KVCachePool(model, self.max_batch, self.max_len,
+                                block_size=block_size, n_blocks=n_blocks,
+                                prefix_cache=prefix_cache)
+        self.block_size = self.pool.block_size
+        # donate the arena: each step's input cache is dead once the
         # updated one lands, so XLA aliases them in place instead of
-        # copying the whole KV pool every generated token
+        # copying the whole block arena every generated token
         self._prefill = jax.jit(make_engine_prefill_step(
             model, mesh, dims, schedule), donate_argnums=(1,))
         self._decode = jax.jit(make_engine_decode_step(
             model, mesh, dims, schedule), donate_argnums=(1,))
         self.queue: deque = deque()
         self._run_t0 = None             # run() wall-clock origin
-        self.active: dict = {}          # slot -> _State
+        self.filling: list = []         # admitted, prefill in progress
+        self.active: dict = {}          # slot -> _State (decoding)
+        self._fill_turn = True          # chunked prefill <-> decode fairness
         self.stats = {"prefill_calls": 0, "decode_calls": 0,
                       "prefill_tokens": 0, "decode_tokens": 0,
-                      "max_active": 0, "admitted": 0}
+                      "max_active": 0, "admitted": 0,
+                      "prefix_hits": 0, "prefix_tokens": 0,
+                      "peak_blocks": 0}
         self._rid = 0
 
     # --- request intake -----------------------------------------------------
@@ -137,7 +169,7 @@ class Engine:
                sampler: SamplerConfig = SamplerConfig(),
                arrival: float = 0.0, rid=None) -> int:
         """Queue one request (admission control: prompt + budget must fit
-        a KV slot).  Returns the request id."""
+        ``max_len`` logical positions).  Returns the request id."""
         prompt = tuple(int(t) for t in prompt)
         if not prompt:
             raise ValueError("empty prompt")
@@ -155,28 +187,39 @@ class Engine:
 
     # --- one scheduler tick -------------------------------------------------
     def step(self, params, now=None) -> list:
-        """Admit+prefill a waiting group if possible, else run one decode
-        round.  Returns the requests that finished this tick."""
-        group = []
-        while (self.queue and len(group) < self.prefill_batch
-               and self.pool.can_admit()):
+        """Advance prefill for a waiting group (admitting by BLOCK
+        budget) or run one decode round; with chunked prefill the two
+        alternate.  Returns the requests that finished this tick."""
+        while (self.queue and len(self.filling) < self.prefill_batch):
             req, t_submit = self.queue[0]
             if now is not None and req.arrival > now:
                 break
+            if not self.pool.can_admit(len(req.prompt), req.max_new_tokens):
+                break
             self.queue.popleft()
-            slot = self.pool.alloc(req.rid)
+            row, shared_toks = self.pool.alloc(req.rid, req.prompt,
+                                               req.max_new_tokens)
+            if shared_toks:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens"] += shared_toks
             if self._run_t0 is not None and req.arrival > 0:
                 # latency clock starts at the request's (simulated)
                 # arrival, not at the up-front submit() call — otherwise
                 # --arrival-rate offsets dominate the percentiles
                 t_submit = max(t_submit, self._run_t0 + req.arrival)
-            group.append(_State(req, slot, t_submit, time.perf_counter()))
-        if group:
-            self._prefill_group(params, group)
+            self.filling.append(_State(req, row, shared_toks, t_submit,
+                                       time.perf_counter()))
+            self.stats["admitted"] += 1
+        if self.filling and (self._fill_turn or not self.active):
+            self._prefill_chunk_round(params)
+            self._fill_turn = False
         elif self.active:
             self._decode_round(params)
+            self._fill_turn = True
         self.stats["max_active"] = max(self.stats["max_active"],
                                        len(self.active))
+        self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                        self.pool.alloc_blocks.n_live)
         return self._collect_finished()
 
     def run(self, params, requests=None, *, progress=False) -> list:
@@ -191,14 +234,15 @@ class Engine:
                 self.submit(*r)
         done = []
         t0 = self._run_t0 = time.perf_counter()
-        while self.queue or self.active:
+        while self.queue or self.filling or self.active:
             now = time.perf_counter() - t0
             finished = self.step(params, now=now)
             done.extend(finished)
             if progress and finished:
                 print(f"[serve] {len(done)} done, {len(self.active)} "
                       f"active, {len(self.queue)} queued", flush=True)
-            if not finished and not self.active and self.queue:
+            if not finished and not self.active and not self.filling \
+                    and self.queue:
                 time.sleep(0.001)       # all arrivals in the future
         return sorted(done, key=lambda c: c.rid)
 
@@ -215,30 +259,73 @@ class Engine:
               len(s.req.prompt) + len(s.generated)] for s in states],
             np.uint32)
 
-    def _prefill_group(self, params, group):
-        lens = [len(s.req.prompt) for s in group]
-        lb = min(max(_pow2(max(lens)), 8), self.max_len)
-        tokens = np.zeros((len(group), lb), np.int32)
+    def _tables(self, states, n_rows):
+        """(n_rows, max_blocks) int32 page tables: listed states get
+        their pool tables at their row; every other row stays all-null
+        (its writes land in the masked null page)."""
+        t = np.zeros((n_rows, self.pool.max_blocks), np.int32)
+        for i, s in enumerate(states):
+            row = i if n_rows == len(states) else s.slot
+            ids = self.pool.table_of(s.req.rid)
+            t[row, :len(ids)] = ids
+        return t
+
+    def _flush_freed(self):
+        """Reset the ``pos`` maps of pages freed since the last jitted
+        step: a reused page must not leak its previous occupant's valid
+        positions into the next gather."""
+        freed = self.pool.drain_freed()
+        if not freed:
+            return
+        idx = np.asarray(freed, np.int32)
+        for r in self.pool.cache:
+            attn = self.pool.cache[r]["attn"]
+            attn["pos"] = attn["pos"].at[:, idx].set(-1)
+
+    def _prefill_chunk_round(self, params):
+        """One jitted prefill call over the filling group's next spans:
+        the whole remaining prompt when ``prefill_chunk`` is 0 (one-shot,
+        exactly PR 5's admission prefill), else at most ``prefill_chunk``
+        tokens per row.  Rows whose prompt completes sample their first
+        token and join the decode batch."""
+        group = self.filling[:self.prefill_batch]
+        cap = self.prefill_chunk or self.max_len
+        c_lens = [min(len(s.req.prompt) - s.fill_pos, cap) for s in group]
+        lb = min(max(_pow2(max(c_lens)), 8), self.max_len)
+        G = len(group)
+        tokens = np.zeros((G, lb), np.int32)
+        starts = np.zeros((G,), np.int32)
+        lens = np.array(c_lens, np.int32)
         for i, s in enumerate(group):
-            tokens[i, :lens[i]] = s.req.prompt
+            tokens[i, :c_lens[i]] = \
+                s.req.prompt[s.fill_pos:s.fill_pos + c_lens[i]]
+            starts[i] = s.fill_pos
+            self.pool.ensure(s.req.rid, s.fill_pos + c_lens[i] - 1)
+        tables = self._tables(group, G)
         temps = np.array([s.req.sampler.temperature for s in group],
                          np.float32)
         topks = np.array([s.req.sampler.top_k for s in group], np.int32)
-        slots = np.array([s.slot for s in group], np.int32)
+        self._flush_freed()
         tok, self.pool.cache = self._prefill(
-            params, self.pool.cache, tokens,
-            np.array(lens, np.int32), slots, self._keys(group), temps,
-            topks)
+            params, self.pool.cache, tokens, starts, lens, tables,
+            self._keys(group), temps, topks)
         tok = np.asarray(tok)
         t = time.perf_counter()
+        finished_fill = set()
         for i, s in enumerate(group):
+            s.fill_pos += c_lens[i]
+            if s.fill_pos < len(s.req.prompt):
+                continue                 # more chunks to go
             s.last_tok = int(tok[i])
             s.generated.append(s.last_tok)
             s.t_first = t
+            self.pool.commit_prefix(s.req.rid, s.req.prompt)
             self.active[s.slot] = s
+            finished_fill.add(id(s))
+        self.filling = [s for s in self.filling
+                        if id(s) not in finished_fill]
         self.stats["prefill_calls"] += 1
-        self.stats["prefill_tokens"] += sum(lens)
-        self.stats["admitted"] += len(group)
+        self.stats["prefill_tokens"] += int(sum(c_lens))
 
     def _decode_round(self, params):
         B = self.max_batch
@@ -253,9 +340,13 @@ class Engine:
             steps[s.slot] = s.pos
             temps[s.slot] = s.req.sampler.temperature
             topks[s.slot] = s.req.sampler.top_k
+            self.pool.ensure(s.req.rid, s.pos)
         keys[[s.slot for s in states]] = self._keys(states)
+        tables = self._tables(states, B)
+        self._flush_freed()
         tok, self.pool.cache = self._decode(
-            params, self.pool.cache, tokens, steps, keys, temps, topks)
+            params, self.pool.cache, tokens, steps, tables, keys, temps,
+            topks)
         tok = np.asarray(tok)
         for s in states:
             s.last_tok = int(tok[s.slot])
@@ -275,7 +366,7 @@ class Engine:
                 continue
             s.t_done = time.perf_counter()
             del self.active[slot]
-            self.pool.release(s.req.rid)            # eviction on finish
+            self.pool.release(s.req.rid)            # pages back to the arena
             done.append(Completion(
                 rid=s.req.rid, prompt=s.req.prompt,
                 tokens=list(s.generated),
@@ -309,19 +400,39 @@ def latency_stats(completions) -> dict:
 
 
 def suggest_max_batch(cfg, *, n_ep: int = 1, n_esp: int = 1, n_mp: int = 1,
-                      candidates=(1, 2, 4, 8, 16, 32), perf_model=None):
+                      candidates=(1, 2, 4, 8, 16, 32), perf_model=None,
+                      n_blocks=None, block_size: int = 16,
+                      mean_len=None):
     """Decode batch-bucket sizing from the perf model (``t_decode``).
 
     Picks the candidate maximizing predicted decode throughput
     ``B / t_decode(B)``: decode steps are alpha-dominated, so per-token
     latency falls with batch until the bandwidth/compute terms take
-    over.  Dense archs (no MoE layer to model) just take the largest
-    candidate.
+    over.  The paged-KV budget enters twice: ``t_decode`` charges each
+    row's KV read at HBM bandwidth (``kv_bytes``), and a finite arena
+    (``n_blocks`` pages of ``block_size`` tokens) caps the batch at the
+    rows it can actually hold at ``mean_len`` tokens each — the budget
+    is BLOCKS, not slots.  Dense archs (no MoE layer to model) just
+    take the largest block-feasible candidate.
     """
     from repro.core.perfmodel import MoELayerShape, tpu_v5e_model
+
+    def blocks_ok(b):
+        if n_blocks is None or not mean_len:
+            return True
+        per_row = -(-int(mean_len) // int(block_size))   # ceil
+        return b * per_row <= int(n_blocks)
+
+    feasible = [b for b in candidates if blocks_ok(b)] or [min(candidates)]
     if cfg.moe is None:
-        return max(candidates)
+        return max(feasible)
     pm = perf_model or tpu_v5e_model(n_ep, n_esp, n_mp)
+    kv_row_bytes = 0.0
+    if mean_len:
+        # per-row paged-KV read per decode step: every layer's K+V pages
+        # up to the row's length (bf16)
+        kv_row_bytes = (2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+                        * float(mean_len) * 2.0)
 
     def throughput(b):
         shape = MoELayerShape(
@@ -329,6 +440,6 @@ def suggest_max_batch(cfg, *, n_ep: int = 1, n_esp: int = 1, n_mp: int = 1,
             E=cfg.moe.n_experts, k=cfg.moe.top_k,
             f=cfg.moe.capacity_factor, n_mp=n_mp, n_esp=n_esp,
             n_ep=n_ep, infer=True)
-        return b / pm.t_decode(shape)
+        return b / pm.t_decode(shape, kv_bytes=b * kv_row_bytes)
 
-    return max(candidates, key=throughput)
+    return max(feasible, key=throughput)

@@ -4,8 +4,9 @@ These are the functions the multi-pod dry-run lowers and the launchers
 execute: ``train_step`` (fwd+bwd+AdamW), ``prefill_fn`` (full-sequence
 forward) and ``serve_step`` (one token against a KV cache, with greedy
 sampling) — plus the serving engine's two steps
-(``make_engine_prefill_step`` / ``make_engine_decode_step``: cache-pool
-gather/scatter, per-row positions, per-row sampling).
+(``make_engine_prefill_step`` / ``make_engine_decode_step``: paged-arena
+scatter/gather through page tables, per-row positions, per-row
+sampling).
 """
 
 from __future__ import annotations
@@ -127,40 +128,45 @@ def make_serve_step(model: Model, mesh, dims: ParallelDims,
 
 def make_engine_prefill_step(model: Model, mesh, dims: ParallelDims,
                              schedule: Optional[str] = None):
-    """The serving engine's admission step: ONE jitted call per admitted
-    prefill group — batched whole-prompt forward filling the KV-cache
-    pool rows at ``slots``, then first-token sampling at each row's own
-    final prompt position.  (Never a per-token loop: the regression test
-    in tests/test_serve.py counts exactly one call per group.)
+    """The serving engine's prefill step over the PAGED block arena: one
+    jitted call per admitted group (or per prefill chunk) — batched
+    forward over each row's token span at ``starts``, written into the
+    arena through ``tables``, then sampling at each row's own final
+    valid position.  (Never a per-token loop: the regression test in
+    tests/test_serve.py counts calls per group/chunk.)
     """
-    def prefill_step(params, pool, tokens, lengths, slots, keys, temps,
-                     topks):
+    def prefill_step(params, arena, tokens, starts, lens, tables, keys,
+                     temps, topks):
         from repro.serve.sampler import sample   # lazy: no train<->serve cycle
-        rows = jax.tree.map(lambda a: jnp.take(a, slots, axis=1), pool)
-        logits, rows2 = model.prefill_step(
-            params, rows, {"tokens": tokens}, lengths=lengths,
-            mesh=mesh, dims=dims, schedule=schedule)
-        pool2 = jax.tree.map(lambda a, r: a.at[:, slots].set(r), pool,
-                             rows2)
-        return sample(logits, keys, temps, topks), pool2
+        logits, arena2 = model.paged_step(
+            params, arena,
+            {"tokens": tokens, "starts": starts, "lens": lens,
+             "tables": tables},
+            mesh=mesh, dims=dims, schedule=schedule, infer=False)
+        return sample(logits, keys, temps, topks), arena2
 
     return prefill_step
 
 
 def make_engine_decode_step(model: Model, mesh, dims: ParallelDims,
                             schedule: Optional[str] = None):
-    """The serving engine's decode step over the WHOLE cache pool: one
+    """The serving engine's decode step over the PAGED block arena: one
     token per row at per-row positions (``steps`` is a (B,) vector, so
-    requests at different depths batch together), sampled with per-row
-    sampler parameters.  Idle rows ride along as padding — their outputs
-    are ignored and their cache rows are rewritten at re-admission.
+    requests at different depths batch together), reading/writing
+    through fixed-shape ``(B, max_blocks)`` page tables — one
+    compilation no matter how requests come and go.  Idle rows carry an
+    all-null table: their writes land in the masked null page and their
+    outputs are ignored.
     """
-    def decode_step(params, pool, tokens, steps, keys, temps, topks):
+    def decode_step(params, arena, tokens, steps, tables, keys, temps,
+                    topks):
         from repro.serve.sampler import sample
-        logits, pool2 = model.decode_step(
-            params, pool, {"tokens": tokens, "step": steps},
-            mesh=mesh, dims=dims, schedule=schedule)
-        return sample(logits[:, -1], keys, temps, topks), pool2
+        logits, arena2 = model.paged_step(
+            params, arena,
+            {"tokens": tokens, "starts": steps,
+             "lens": jnp.ones_like(steps), "tables": tables},
+            mesh=mesh, dims=dims, schedule=schedule, infer=True)
+        return sample(logits, keys, temps, topks), arena2
 
     return decode_step
 

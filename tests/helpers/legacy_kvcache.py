@@ -1,0 +1,237 @@
+"""PR 5's slot-per-request slab KV cache + engine, kept as the ORACLE.
+
+The serving engine migrated to a paged block arena (PR 7:
+``repro.serve.kvcache``); this module preserves the previous memory
+model verbatim — one ``max_len`` slab row per request, whole-prompt
+one-shot prefill via ``model.prefill_step``, whole-pool decode via
+``model.decode_step`` — so the paged engine can be checked against it
+bit-for-bit (``tests/helpers/run_paged_parity.py``): the same request
+trace must produce identical greedy token streams through both.
+
+Do not "fix" or modernize this file: its value is that it is the old
+code path, frozen.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampler import SamplerConfig
+from repro.serve.engine import Completion, Request, _pow2, _State
+
+
+class LegacyKVCachePool:
+    """PR 5's slab pool: a ``max_batch``-row KV cache + slot free list."""
+
+    def __init__(self, model, max_batch: int, max_len: int, dtype=None):
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.cache = model.init_cache(self.max_batch, self.max_len, dtype)
+        for leaf in jax.tree.leaves(self.cache):
+            if leaf.ndim < 2 or leaf.shape[1] != self.max_batch:
+                raise ValueError(
+                    "LegacyKVCachePool needs every cache leaf shaped "
+                    f"(layers, max_batch, ...); got {leaf.shape}")
+        self._free = list(range(self.max_batch))   # min-heap of free slots
+        heapq.heapify(self._free)
+        self._slot_of: dict = {}                   # request id -> slot
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._slot_of)
+
+    def can_admit(self, n: int = 1) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, rid) -> int:
+        if rid in self._slot_of:
+            raise KeyError(f"request {rid!r} already holds slot "
+                           f"{self._slot_of[rid]}")
+        if not self._free:
+            raise RuntimeError("KV-cache pool exhausted "
+                               f"({self.max_batch} slots live)")
+        slot = heapq.heappop(self._free)
+        self._slot_of[rid] = slot
+        return slot
+
+    def release(self, rid) -> int:
+        if rid not in self._slot_of:
+            raise KeyError(f"request {rid!r} holds no slot")
+        slot = self._slot_of.pop(rid)
+        heapq.heappush(self._free, slot)
+        return slot
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+
+def make_legacy_prefill_step(model, mesh, dims, schedule=None):
+    """PR 5's engine prefill: gather pool rows by slot, one-shot
+    ``model.prefill_step`` over the padded prompts, scatter back."""
+    def prefill_step(params, pool, tokens, lengths, slots, keys, temps,
+                     topks):
+        from repro.serve.sampler import sample
+        rows = jax.tree.map(lambda a: jnp.take(a, slots, axis=1), pool)
+        logits, rows2 = model.prefill_step(
+            params, rows, {"tokens": tokens}, lengths=lengths,
+            mesh=mesh, dims=dims, schedule=schedule)
+        pool2 = jax.tree.map(lambda a, r: a.at[:, slots].set(r), pool,
+                             rows2)
+        return sample(logits, keys, temps, topks), pool2
+
+    return prefill_step
+
+
+def make_legacy_decode_step(model, mesh, dims, schedule=None):
+    """PR 5's engine decode: whole-pool ``model.decode_step`` at per-row
+    positions + per-row sampling."""
+    def decode_step(params, pool, tokens, steps, keys, temps, topks):
+        from repro.serve.sampler import sample
+        logits, pool2 = model.decode_step(
+            params, pool, {"tokens": tokens, "step": steps},
+            mesh=mesh, dims=dims, schedule=schedule)
+        return sample(logits[:, -1], keys, temps, topks), pool2
+
+    return decode_step
+
+
+class LegacyEngine:
+    """PR 5's continuous-batching engine over the slab pool (oracle)."""
+
+    def __init__(self, model, mesh, dims, *, max_batch: int = 8,
+                 max_len: int = 256, schedule=None, prefill_batch: int = 1,
+                 eos_token=None):
+        self.model, self.mesh, self.dims = model, mesh, dims
+        self.max_batch, self.max_len = int(max_batch), int(max_len)
+        self.prefill_batch = max(int(prefill_batch), 1)
+        self.eos_token = eos_token
+        self.pool = LegacyKVCachePool(model, self.max_batch, self.max_len)
+        self._prefill = jax.jit(make_legacy_prefill_step(
+            model, mesh, dims, schedule), donate_argnums=(1,))
+        self._decode = jax.jit(make_legacy_decode_step(
+            model, mesh, dims, schedule), donate_argnums=(1,))
+        self.queue: deque = deque()
+        self.active: dict = {}
+        self.stats = {"prefill_calls": 0, "decode_calls": 0,
+                      "prefill_tokens": 0, "decode_tokens": 0,
+                      "max_active": 0, "admitted": 0}
+        self._rid = 0
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               sampler: SamplerConfig = SamplerConfig(), rid=None) -> int:
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError("prompt + max_new_tokens exceeds max_len")
+        if rid is None:
+            rid, self._rid = self._rid, self._rid + 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(max_new_tokens), sampler=sampler)
+        self.queue.append((req, time.perf_counter()))
+        return rid
+
+    def step(self, params) -> list:
+        group = []
+        while (self.queue and len(group) < self.prefill_batch
+               and self.pool.can_admit()):
+            req, t_submit = self.queue.popleft()
+            slot = self.pool.alloc(req.rid)
+            group.append(_State(req, slot, 0, t_submit,
+                                time.perf_counter()))
+        if group:
+            self._prefill_group(params, group)
+        elif self.active:
+            self._decode_round(params)
+        self.stats["max_active"] = max(self.stats["max_active"],
+                                       len(self.active))
+        return self._collect_finished()
+
+    def run(self, params) -> list:
+        done = []
+        while self.queue or self.active:
+            done.extend(self.step(params))
+        return sorted(done, key=lambda c: c.rid)
+
+    def _keys(self, states):
+        return np.array(
+            [[s.req.sampler.seed & 0xFFFFFFFF,
+              len(s.req.prompt) + len(s.generated)] for s in states],
+            np.uint32)
+
+    def _prefill_group(self, params, group):
+        lens = [len(s.req.prompt) for s in group]
+        lb = min(max(_pow2(max(lens)), 8), self.max_len)
+        tokens = np.zeros((len(group), lb), np.int32)
+        for i, s in enumerate(group):
+            tokens[i, :lens[i]] = s.req.prompt
+        temps = np.array([s.req.sampler.temperature for s in group],
+                         np.float32)
+        topks = np.array([s.req.sampler.top_k for s in group], np.int32)
+        slots = np.array([s.slot for s in group], np.int32)
+        tok, self.pool.cache = self._prefill(
+            params, self.pool.cache, tokens,
+            np.array(lens, np.int32), slots, self._keys(group), temps,
+            topks)
+        tok = np.asarray(tok)
+        t = time.perf_counter()
+        for i, s in enumerate(group):
+            s.last_tok = int(tok[i])
+            s.generated.append(s.last_tok)
+            s.t_first = t
+            self.active[s.slot] = s
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += sum(lens)
+        self.stats["admitted"] += len(group)
+
+    def _decode_round(self, params):
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        steps = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        topks = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        states = sorted(self.active.values(), key=lambda s: s.slot)
+        for s in states:
+            tokens[s.slot, 0] = s.last_tok
+            steps[s.slot] = s.pos
+            temps[s.slot] = s.req.sampler.temperature
+            topks[s.slot] = s.req.sampler.top_k
+        keys[[s.slot for s in states]] = self._keys(states)
+        tok, self.pool.cache = self._decode(
+            params, self.pool.cache, tokens, steps, keys, temps, topks)
+        tok = np.asarray(tok)
+        for s in states:
+            s.last_tok = int(tok[s.slot])
+            s.generated.append(s.last_tok)
+            s.pos += 1
+        self.stats["decode_calls"] += 1
+        self.stats["decode_tokens"] += len(states)
+
+    def _collect_finished(self) -> list:
+        done = []
+        for slot, s in list(self.active.items()):
+            full = len(s.generated) >= s.req.max_new_tokens
+            eos = (self.eos_token is not None
+                   and s.generated and s.generated[-1] == self.eos_token)
+            capped = s.pos >= self.max_len
+            if not (full or eos or capped):
+                continue
+            s.t_done = time.perf_counter()
+            del self.active[slot]
+            self.pool.release(s.req.rid)
+            done.append(Completion(
+                rid=s.req.rid, prompt=s.req.prompt,
+                tokens=list(s.generated), text="",
+                timing={"ttft": 0.0, "latency": 0.0, "queued": 0.0}))
+        return done

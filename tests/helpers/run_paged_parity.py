@@ -1,0 +1,165 @@
+"""Paged-vs-slab serving oracle: identical greedy token streams.
+
+PR 7 replaced the slot-per-request KV slab with a paged block arena
+(page tables + shared-prefix reuse + chunked prefill).  The refactor's
+contract is BITWISE: the same request trace through the paged engine
+and through PR 5's frozen slab engine (``tests/helpers/legacy_kvcache``)
+must produce identical token streams — not merely close logits.
+
+Modes (argv[1], default ``trace``):
+
+  trace     1 device.  A mixed join/leave trace (staggered prompt and
+            budget lengths over a 2-row pool, so rows join and leave the
+            decode batch mid-run next to idle rows) is served by the
+            legacy slab engine and by the paged engine; streams must
+            match token-for-token.  Then, on a shared-system-prompt
+            workload, the paged engine must be bitwise invariant to its
+            own features: prefix-cache ON == OFF (with hits actually
+            taken and prefill work actually saved) and chunked prefill
+            == one-shot (with more prefill calls, same tokens).
+  multidev  8 fake CPU devices, (4, 2) data x model mesh, MoE arch with
+            sharded decode schedules.  Legacy vs paged on the same
+            trace, prefix cache off (identical jitted shapes), again
+            token-for-token.
+
+Prints PAGED PARITY OK on success.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+MODE = sys.argv[1] if len(sys.argv) > 1 else "trace"
+if MODE == "multidev":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ModelConfig, get_config  # noqa: E402
+from repro.core.moe import MoEConfig  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.parallel.mesh import ParallelDims, make_mesh  # noqa: E402
+from repro.serve import Engine, SamplerConfig  # noqa: E402
+from legacy_kvcache import LegacyEngine  # noqa: E402
+
+
+def tiny_moe_cfg():
+    return ModelConfig(
+        name="parity-moe", arch_type="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=128, rope_theta=1e4,
+        moe=MoEConfig(d_model=64, d_ff=96, n_experts=4, top_k=2,
+                      capacity_factor=2.0, schedule="auto"),
+        moe_period=1, remat=False)
+
+
+def streams(engine, params, spec, prompts):
+    for (plen, gen), p in zip(spec, prompts):
+        engine.submit(p, gen, sampler=SamplerConfig())
+    done = engine.run(params)
+    assert len(done) == len(spec), (len(done), len(spec))
+    return {c.rid: list(c.tokens) for c in done}
+
+
+def check_match(a, b, label):
+    assert set(a) == set(b), (label, sorted(a), sorted(b))
+    for rid in sorted(a):
+        assert a[rid] == b[rid], (
+            f"{label}: rid {rid} diverges\n legacy {a[rid]}\n paged  "
+            f"{b[rid]}")
+    print(f"{label}: {len(a)} streams bitwise identical")
+
+
+def run_trace(model, mesh, dims, params, *, max_batch, max_len, spec,
+              prompts, **paged_kw):
+    legacy = streams(LegacyEngine(model, mesh, dims, max_batch=max_batch,
+                                  max_len=max_len), params, spec, prompts)
+    paged_eng = Engine(model, mesh, dims, max_batch=max_batch,
+                       max_len=max_len, **paged_kw)
+    paged = streams(paged_eng, params, spec, prompts)
+    return legacy, paged, paged_eng
+
+
+def main_trace():
+    cfg = tiny_moe_cfg()
+    model = build_model(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+
+    # mixed join/leave: budgets chosen so requests finish at different
+    # rounds and later admissions decode next to idle + mid-life rows
+    spec = [(9, 12), (5, 6), (13, 4), (4, 10), (7, 3)]
+    prompts = [list(rng.randint(1, cfg.vocab_size, n)) for n, _ in spec]
+    legacy, paged, _ = run_trace(
+        model, mesh, dims, params, max_batch=2, max_len=32, spec=spec,
+        prompts=prompts, prefix_cache=False)
+    check_match(legacy, paged, "trace legacy-vs-paged")
+
+    # shared system prompt: prefix hits and chunking must not move bits
+    sysp = list(rng.randint(1, cfg.vocab_size, 37))
+    pspec = [(37 + n, 6) for n in (3, 5, 2)]
+    pprompts = [sysp + list(rng.randint(1, cfg.vocab_size, n))
+                for n in (3, 5, 2)]
+
+    def paged_streams(**kw):
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64,
+                     schedule="s1", **kw)
+        return streams(eng, params, pspec, pprompts), eng
+
+    cold, cold_eng = paged_streams(prefix_cache=False)
+    hot, hot_eng = paged_streams(prefix_cache=True)
+    check_match(cold, hot, "prefix hit-vs-cold")
+    assert hot_eng.stats["prefix_hits"] >= 2, hot_eng.stats
+    assert hot_eng.stats["prefix_tokens"] > 0
+    # the shared prefix is computed once: later admissions prefill only
+    # their suffix tokens
+    assert (hot_eng.stats["prefill_tokens"]
+            < cold_eng.stats["prefill_tokens"]), (
+        hot_eng.stats, cold_eng.stats)
+
+    chunked, chunk_eng = paged_streams(prefix_cache=False, prefill_chunk=8)
+    check_match(cold, chunked, "chunked-vs-one-shot")
+    assert (chunk_eng.stats["prefill_calls"]
+            > cold_eng.stats["prefill_calls"])
+    assert (chunk_eng.stats["prefill_tokens"]
+            == cold_eng.stats["prefill_tokens"])
+
+    both, both_eng = paged_streams(prefix_cache=True, prefill_chunk=8)
+    check_match(cold, both, "chunked+prefix-vs-cold")
+    assert both_eng.stats["prefix_hits"] >= 2
+
+
+def main_multidev():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    spec = [(9, 6), (5, 5), (11, 4), (4, 6), (7, 3), (6, 5)]
+    prompts = [list(rng.randint(1, cfg.vocab_size, n)) for n, _ in spec]
+    legacy, paged, eng = run_trace(
+        model, mesh, dims, params, max_batch=8, max_len=64, spec=spec,
+        prompts=prompts, prefix_cache=False)
+    check_match(legacy, paged, "multidev legacy-vs-paged")
+    assert eng.pool.n_live == 0 and eng.pool.n_free_blocks \
+        == eng.pool.n_blocks, "pages leaked"
+
+
+def main():
+    if MODE == "multidev":
+        main_multidev()
+    else:
+        main_trace()
+    print("PAGED PARITY OK")
+
+
+if __name__ == "__main__":
+    main()

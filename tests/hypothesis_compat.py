@@ -5,12 +5,23 @@ the real imports when hypothesis is installed; when it is not, property
 tests become zero-arg stubs that ``pytest.skip`` at call time (the rest of
 the module's plain unit tests still collect and run).  Install the real
 thing with ``pip install -r requirements-dev.txt`` (or the ``dev`` extra).
+
+Stateful testing gets the same treatment: ``RuleBasedStateMachine`` /
+``rule`` / ``invariant`` / ``precondition`` / ``initialize`` re-export
+from ``hypothesis.stateful`` when available, and degrade to inert stand-ins
+otherwise — the machine class still DEFINES cleanly either way (so a
+seeded stdlib-``random`` fuzz walk can drive the same rule methods by
+hand; see ``tests/test_kvcache.py``), while ``run_state_machine_as_test``
+skips.
 """
 
 import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, precondition, rule,
+                                     run_state_machine_as_test)
     HAS_HYPOTHESIS = True
 except ImportError:
     HAS_HYPOTHESIS = False
@@ -38,3 +49,23 @@ except ImportError:
             stub.__doc__ = f.__doc__
             return stub
         return deco
+
+    class RuleBasedStateMachine:
+        """Inert stand-in: subclasses still define + instantiate, and the
+        rule methods stay plain callables a hand-rolled fuzz loop can
+        drive.  Only ``run_state_machine_as_test`` (hypothesis's own
+        driver) skips."""
+
+    def _passthrough_deco(*args, **kwargs):
+        if len(args) == 1 and callable(args[0]) and not kwargs:
+            return args[0]              # bare @invariant()-style use
+        return lambda f: f
+
+    rule = _passthrough_deco
+    invariant = _passthrough_deco
+    precondition = _passthrough_deco
+    initialize = _passthrough_deco
+
+    def run_state_machine_as_test(factory, settings=None):
+        pytest.skip("hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")

@@ -1,0 +1,450 @@
+"""Property-based suite for the paged KV block pool (PR 7).
+
+The ``BlockAllocator`` is plain host-side bookkeeping, which makes it a
+perfect target for model-based testing: a pure-Python mirror
+(``AllocatorModel``) applies every operation to the real allocator AND to
+its own refcount/free-set model, asserting after each step that
+
+  * allocation is deterministic lowest-free-first;
+  * no block is ever double-freed (release past zero raises);
+  * a block returns to the free heap at EXACTLY the release that takes
+    both refcounts (request + cache) to zero — never before, never after;
+  * free + live block counts conserve ``n_blocks`` at every step;
+  * the reservation ledger never goes negative or exceeds the free set.
+
+The same op table is driven two ways: a hypothesis
+``RuleBasedStateMachine`` (when hypothesis is installed) and an
+always-running seeded stdlib-``random`` fuzz walk, so the invariants are
+exercised on every CI run even without hypothesis.
+
+Pool-level tests cover construction-time validation (``max_len`` must
+divide into whole blocks; every cache leaf — including dtype-overridden
+ones — must be paged-shaped) and the prefix-sharing lifecycle.
+"""
+
+import random
+
+import pytest
+
+from hypothesis_compat import (HAS_HYPOTHESIS, RuleBasedStateMachine,
+                               invariant, rule, run_state_machine_as_test,
+                               settings, st)
+
+from repro.serve.kvcache import (NULL_BLOCK, BlockAllocator, KVCachePool,
+                                 PrefixCache)
+
+N_BLOCKS = 16
+BLOCK_SIZE = 4
+
+
+class AllocatorModel:
+    """Real allocator + pure-Python mirror; every op cross-checks both."""
+
+    def __init__(self):
+        self.a = BlockAllocator(N_BLOCKS, BLOCK_SIZE)
+        self.free = set(range(1, N_BLOCKS + 1))
+        self.req = {}                   # bid -> expected req_rc
+        self.cache = {}                 # bid -> expected cache_rc
+        self.reserved = 0
+
+    # --- ops (each returns True if it could run in the current state) ---
+    def op_alloc(self, _):
+        if not self.free:
+            with pytest.raises(RuntimeError, match="exhausted"):
+                self.a.alloc()
+            return True
+        bid = self.a.alloc()
+        assert bid == min(self.free), (
+            f"alloc gave {bid}, lowest free is {min(self.free)}")
+        assert bid != NULL_BLOCK
+        self.free.remove(bid)
+        self.req[bid] = 1
+        return True
+
+    def _live(self):
+        return sorted(set(self.req) | set(self.cache))
+
+    def op_share(self, pick):
+        live = self._live()
+        if not live:
+            return False
+        bid = live[pick % len(live)]
+        self.a.share(bid)
+        self.req[bid] = self.req.get(bid, 0) + 1
+        return True
+
+    def op_release(self, pick):
+        held = sorted(b for b, rc in self.req.items() if rc > 0)
+        if not held:
+            return False
+        bid = held[pick % len(held)]
+        last = (self.req[bid] == 1 and self.cache.get(bid, 0) == 0)
+        freed = self.a.release(bid)
+        assert freed == last, (
+            f"block {bid} freed={freed} but model says last-holder={last}")
+        self.req[bid] -= 1
+        if self.req[bid] == 0:
+            del self.req[bid]
+        if last:
+            self.free.add(bid)
+        return True
+
+    def op_cache_hold(self, pick):
+        live = self._live()
+        if not live:
+            return False
+        bid = live[pick % len(live)]
+        self.a.cache_hold(bid)
+        self.cache[bid] = self.cache.get(bid, 0) + 1
+        return True
+
+    def op_cache_drop(self, pick):
+        held = sorted(b for b, rc in self.cache.items() if rc > 0)
+        if not held:
+            return False
+        bid = held[pick % len(held)]
+        last = (self.cache[bid] == 1 and self.req.get(bid, 0) == 0)
+        freed = self.a.cache_drop(bid)
+        assert freed == last
+        self.cache[bid] -= 1
+        if self.cache[bid] == 0:
+            del self.cache[bid]
+        if last:
+            self.free.add(bid)
+        return True
+
+    def op_double_free(self, pick):
+        """Releasing a block with no request holds must raise, not
+        corrupt the free heap."""
+        unheld = sorted(self.free | (set(self.cache) - set(self.req)))
+        if not unheld:
+            return False
+        bid = unheld[pick % len(unheld)]
+        with pytest.raises(KeyError, match="double free"):
+            self.a.release(bid)
+        return True
+
+    def op_reserve(self, pick):
+        n = pick % 3
+        self.a.reserve(n)
+        self.reserved += n
+        return True
+
+    def op_unreserve(self, pick):
+        if self.reserved == 0:
+            with pytest.raises(ValueError):
+                self.a.unreserve(1)
+            return True
+        n = pick % self.reserved + 1
+        self.a.unreserve(n)
+        self.reserved -= n
+        return True
+
+    OPS = (op_alloc, op_share, op_release, op_cache_hold, op_cache_drop,
+           op_double_free, op_reserve, op_unreserve)
+
+    # --- cross-check ---------------------------------------------------
+    def audit(self):
+        self.a.check()
+        assert set(self.a._free) == self.free
+        assert self.a.n_free + self.a.n_live == N_BLOCKS
+        assert self.a.reserved == self.reserved
+        for bid in range(1, N_BLOCKS + 1):
+            assert self.a.req_rc(bid) == self.req.get(bid, 0)
+            assert self.a.cache_rc(bid) == self.cache.get(bid, 0)
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.m = AllocatorModel()
+
+    @rule(op=st.integers(min_value=0, max_value=7),
+          pick=st.integers(min_value=0, max_value=10**6))
+    def step(self, op, pick):
+        AllocatorModel.OPS[op](self.m, pick)
+
+    @invariant()
+    def conserved(self):
+        self.m.audit()
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS, reason="hypothesis not installed")
+def test_allocator_state_machine():
+    run_state_machine_as_test(
+        AllocatorMachine,
+        settings=settings(max_examples=30, stateful_step_count=40,
+                          deadline=None))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_allocator_fuzz_walk(seed):
+    """Seeded stdlib-random walk over the same op table — runs on every
+    CI box, hypothesis installed or not."""
+    rng = random.Random(seed)
+    m = AllocatorModel()
+    for _ in range(400):
+        op = rng.choice(AllocatorModel.OPS)
+        op(m, rng.randrange(10**6))
+        m.audit()
+    # drain to empty: releasing every hold must hand back every block
+    while m.req or m.cache:
+        if m.req:
+            m.op_release(rng.randrange(10**6))
+        else:
+            m.op_cache_drop(rng.randrange(10**6))
+        m.audit()
+    assert m.a.n_free == N_BLOCKS
+
+
+class TestAllocatorUnits:
+    def test_alloc_order_is_deterministic(self):
+        a = BlockAllocator(8, 4)
+        assert [a.alloc() for _ in range(8)] == list(range(1, 9))
+        a.release(3)
+        a.release(7)
+        a.release(5)
+        assert [a.alloc() for _ in range(3)] == [3, 5, 7]
+
+    def test_null_block_never_handed_out(self):
+        a = BlockAllocator(4, 4)
+        got = {a.alloc() for _ in range(4)}
+        assert NULL_BLOCK not in got
+
+    def test_refcount_zero_exactly_at_last_release(self):
+        a = BlockAllocator(4, 4)
+        bid = a.alloc()
+        a.share(bid)
+        a.cache_hold(bid)
+        assert a.release(bid) is False          # one req hold left
+        assert a.release(bid) is False          # cache hold left
+        assert a.cache_drop(bid) is True        # last hold -> freed
+        assert a.n_free == 4
+        assert a.freed_log == [bid]
+
+    def test_double_free_raises(self):
+        a = BlockAllocator(4, 4)
+        bid = a.alloc()
+        a.release(bid)
+        with pytest.raises(KeyError, match="double free"):
+            a.release(bid)
+        with pytest.raises(KeyError, match="not live"):
+            a.share(bid)
+
+    def test_reservation_ledger(self):
+        a = BlockAllocator(4, 4)
+        a.reserve(3)
+        assert a.available == 1
+        with pytest.raises(ValueError):
+            a.unreserve(4)
+        a.unreserve(3)
+        assert a.available == 4
+
+
+class TestPrefixCacheUnits:
+    def _cached(self):
+        a = BlockAllocator(8, 2)
+        pc = PrefixCache(a)
+        blocks = [a.alloc(), a.alloc()]
+        prompt = (1, 2, 3, 4, 5)        # 2 full blocks + 1 tail token
+        assert pc.insert(prompt, blocks) == 2
+        return a, pc, blocks, prompt
+
+    def test_lookup_longest_prefix_and_counters(self):
+        a, pc, blocks, prompt = self._cached()
+        assert pc.lookup((1, 2, 3, 4, 9, 9), 4) == tuple(blocks)
+        assert pc.lookup((1, 2, 9), 4) == (blocks[0],)
+        assert pc.lookup((9, 9, 9, 9), 4) == ()
+        assert (pc.hits, pc.misses) == (2, 1)
+
+    def test_eviction_refused_while_held(self):
+        a, pc, blocks, prompt = self._cached()
+        key = prompt[:4]
+        with pytest.raises(RuntimeError, match="refused"):
+            pc.evict(key)               # computing request still holds
+        for b in blocks:
+            a.release(b)
+        # the 1-block entry (1, 2) still cache-holds blocks[0], so only
+        # the deep block comes back here
+        assert pc.evict(key) == 1
+        assert pc.evict(prompt[:2]) == 1
+        assert a.n_free == 8
+
+    def test_evict_lru_skips_held_entries(self):
+        a, pc, blocks, prompt = self._cached()
+        assert pc.evict_lru(4) == 0     # every entry still held
+        for b in blocks:
+            a.release(b)
+        assert pc.evict_lru(1) >= 1
+        assert len(pc) < 2
+
+
+def tiny_dense_model():
+    from repro.configs import ModelConfig
+    from repro.models import build_model
+    return build_model(ModelConfig(
+        name="kvpool-test", arch_type="dense", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64, rope_theta=1e4,
+        remat=False))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return tiny_dense_model()
+
+
+class TestPoolConstruction:
+    def test_max_len_must_divide_into_blocks(self, model):
+        with pytest.raises(ValueError, match="not divisible"):
+            KVCachePool(model, 2, 24, block_size=16)
+
+    def test_block_size_capped_at_max_len(self, model):
+        pool = KVCachePool(model, 2, 16, block_size=64)
+        assert pool.block_size == 16 and pool.max_blocks == 1
+
+    def test_leaves_are_paged_shaped(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8)
+        import jax
+        for leaf in jax.tree.leaves(pool.cache):
+            assert leaf.shape[1] == pool.n_blocks + 1
+            if leaf.ndim >= 3:
+                assert leaf.shape[2] == 8
+
+    def test_dtype_override_is_validated_too(self, model):
+        """The old slab pool only shape-checked the default-dtype path;
+        the paged pool validates every construction."""
+        import jax
+        import jax.numpy as jnp
+        pool = KVCachePool(model, 2, 32, jnp.bfloat16, block_size=8)
+        ks = [leaf for leaf in jax.tree.leaves(pool.cache)
+              if leaf.dtype == jnp.bfloat16]
+        assert ks, "dtype override ignored"
+
+        class BadModel:
+            def init_cache(self, n, w, dtype=None):
+                import jax.numpy as jnp
+                return {"l0": {"attn": {
+                    "k": jnp.zeros((2, n - 1, w, 2, 4), jnp.float32)}}}
+
+        with pytest.raises(ValueError, match="n_blocks"):
+            KVCachePool(BadModel(), 2, 32, block_size=8)
+
+    def test_default_arena_is_slab_equivalent(self, model):
+        pool = KVCachePool(model, 4, 32, block_size=8)
+        assert pool.n_blocks == 4 * (32 // 8)
+
+
+class TestPoolLifecycle:
+    def test_rows_and_blocks_conserve(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8, prefix_cache=False)
+        row, shared = pool.alloc("a", (1, 2, 3), max_new=8)
+        assert (row, shared) == (0, 0)
+        pool.ensure("a", 2)
+        assert len(pool.table_of("a")) == 1
+        pool.ensure("a", 9)              # crosses into a second block
+        assert len(pool.table_of("a")) == 2
+        assert pool.n_free_blocks == pool.n_blocks - 2
+        pool.release("a")
+        assert pool.n_free_blocks == pool.n_blocks
+        assert pool.n_live == 0 and pool.n_free == 2
+        assert sorted(pool.drain_freed()) == [1, 2]
+
+    def test_admission_is_block_budget_not_rows(self, model):
+        # 4 blocks of 8 = 32 tokens of arena for 2 rows: a second long
+        # request must be refused even though a row is free
+        pool = KVCachePool(model, 2, 32, block_size=8, n_blocks=4,
+                           prefix_cache=False)
+        assert pool.can_admit(17, 8)
+        pool.alloc("big", tuple(range(17)), max_new=8)   # needs 4 blocks
+        assert pool.n_free == 1                          # row IS free
+        assert not pool.can_admit(9, 8)                  # blocks are not
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc("second", tuple(range(9)), max_new=8)
+
+    def test_reservation_guarantees_growth(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8, n_blocks=4,
+                           prefix_cache=False)
+        pool.alloc("a", tuple(range(9)), max_new=7)      # reserves 2
+        pool.alloc("b", tuple(range(9)), max_new=7)      # reserves 2
+        for pos in range(16):
+            pool.ensure("a", pos)
+            pool.ensure("b", pos)
+        assert pool.n_free_blocks == 0                   # fully drawn down
+        pool.release("a")
+        pool.release("b")
+
+    def test_prefix_shared_blocks_counted_once(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8)
+        prompt = tuple(range(1, 18))                     # 17 tokens
+        row_a, shared_a = pool.alloc("a", prompt, max_new=4)
+        assert shared_a == 0
+        pool.ensure("a", 16)
+        pool.commit_prefix("a", prompt)
+        row_b, shared_b = pool.alloc("b", prompt, max_new=4)
+        assert shared_b == 16                            # 2 full blocks
+        assert pool.table_of("b")[:2] == pool.table_of("a")[:2]
+        for bid in pool.table_of("b")[:2]:
+            assert pool.alloc_blocks.req_rc(bid) == 2
+        pool.release("a")
+        # cache still holds the prefix blocks: b reads valid K/V
+        for bid in pool.table_of("b")[:2]:
+            assert pool.alloc_blocks.req_rc(bid) == 1
+            assert pool.alloc_blocks.cache_rc(bid) > 0
+        pool.release("b")
+        assert pool.alloc_blocks.n_live == 2             # cache-only now
+        pool.prefix.evict_lru(2)
+        assert pool.alloc_blocks.n_live == 0
+
+    def test_prefix_eviction_refused_while_held(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8)
+        prompt = tuple(range(1, 18))
+        pool.alloc("a", prompt, max_new=4)
+        pool.ensure("a", 16)
+        pool.commit_prefix("a", prompt)
+        key = prompt[:8]
+        with pytest.raises(RuntimeError, match="refused"):
+            pool.prefix.evict(key)
+        assert pool.prefix.holders(key) == 1
+        pool.release("a")
+        pool.prefix.evict(key)
+
+    def test_lru_eviction_under_pressure(self, model):
+        # arena of only 2 blocks; a dead request's cached prefix must be
+        # evicted to admit the next request
+        pool = KVCachePool(model, 2, 16, block_size=8, n_blocks=2)
+        p1 = tuple(range(1, 10))
+        pool.alloc("a", p1, max_new=4)
+        pool.ensure("a", 8)
+        pool.commit_prefix("a", p1)
+        pool.release("a")
+        assert pool.alloc_blocks.n_live == 1             # cached block
+        assert pool.n_free_blocks == 1
+        assert pool.can_admit(9, 7)                      # via eviction
+        p2 = tuple(range(20, 29))
+        pool.alloc("b", p2, max_new=7)                   # needs 2 blocks
+        for pos in range(16):
+            pool.ensure("b", pos)
+        assert len(pool.prefix) == 0                     # p1 evicted
+        pool.release("b")
+
+    def test_shared_prefix_never_includes_final_token_block(self, model):
+        """At least one prompt token must remain to prefill — a 16-token
+        prompt with 2 cached blocks shares only the first."""
+        pool = KVCachePool(model, 2, 32, block_size=8)
+        prompt = tuple(range(1, 17))                     # exactly 2 blocks
+        pool.alloc("a", prompt, max_new=4)
+        pool.ensure("a", 15)
+        pool.commit_prefix("a", prompt)
+        _, shared = pool.alloc("b", prompt, max_new=4)
+        assert shared == 8                               # 1 block, not 2
+        pool.release("a")
+        pool.release("b")
+
+    def test_block_tables_view(self, model):
+        pool = KVCachePool(model, 2, 32, block_size=8, prefix_cache=False)
+        pool.alloc("a", (1, 2, 3), max_new=0)
+        pool.ensure("a", 2)
+        t = pool.block_tables()
+        assert t.shape == (2, 4)
+        assert t[0, 0] == pool.table_of("a")[0]
+        assert (t[1] == NULL_BLOCK).all()

@@ -79,22 +79,31 @@ def _prompts(cfg, spec, seed=0):
 
 
 class TestKVCachePool:
+    """The paged pool through the slab pool's old admission surface:
+    rows still hand out lowest-free-first, release still recycles, and
+    the arena is sized slab-equivalent by default.  (Deep allocator /
+    prefix-cache properties live in tests/test_kvcache.py.)"""
+
     def _pool(self, dense_setup, n=3):
         _, model, _, _, _ = dense_setup
-        return KVCachePool(model, n, 16)
+        return KVCachePool(model, n, 16, prefix_cache=False)
 
-    def test_alloc_is_lowest_free_slot_first(self, dense_setup):
+    def test_alloc_is_lowest_free_row_first(self, dense_setup):
         pool = self._pool(dense_setup)
-        assert [pool.alloc(i) for i in range(3)] == [0, 1, 2]
+        assert [pool.alloc(i)[0] for i in range(3)] == [0, 1, 2]
 
-    def test_release_recycles_slot(self, dense_setup):
+    def test_release_recycles_row_and_blocks(self, dense_setup):
         pool = self._pool(dense_setup)
         for i in range(3):
-            pool.alloc(i)
+            pool.alloc(i, (1, 2, 3), max_new=4)
+            pool.ensure(i, 2)
         assert not pool.can_admit()
+        held = pool.table_of(1)
         assert pool.release(1) == 1
         assert pool.can_admit() and pool.n_free == 1
-        assert pool.alloc("new") == 1          # evicted slot reused
+        assert set(held) <= set(pool.drain_freed())    # pages recycled
+        row, shared = pool.alloc("new")
+        assert (row, shared) == (1, 0)                 # evicted row reused
 
     def test_exhaustion_and_double_alloc_raise(self, dense_setup):
         pool = self._pool(dense_setup)
@@ -105,14 +114,22 @@ class TestKVCachePool:
         pool.release(0)
         with pytest.raises(KeyError, match="already holds"):
             pool.alloc(1)
-        with pytest.raises(KeyError, match="no slot"):
+        with pytest.raises(KeyError, match="no row"):
             pool.release("never-seen")
 
-    def test_cache_layout_checked(self, dense_setup):
+    def test_cache_layout_is_paged(self, dense_setup):
         _, model, _, _, _ = dense_setup
-        pool = KVCachePool(model, 4, 16)
+        pool = KVCachePool(model, 4, 16, block_size=8)
+        assert pool.n_blocks == 4 * 2                  # slab-equivalent
         for leaf in jax.tree.leaves(pool.cache):
-            assert leaf.shape[1] == 4
+            assert leaf.shape[1] == pool.n_blocks + 1  # +1 null block
+            if leaf.ndim >= 3:
+                assert leaf.shape[2] == 8
+
+    def test_max_len_must_divide_into_blocks(self, dense_setup):
+        _, model, _, _, _ = dense_setup
+        with pytest.raises(ValueError, match="not divisible"):
+            KVCachePool(model, 2, 24, block_size=16)
 
 
 class TestSampler:
@@ -271,6 +288,104 @@ class TestEngineLifecycle:
         for k in ("tok_per_s", "p50_ms", "p95_ms", "p99_ms",
                   "ttft_p50_ms"):
             assert stats[k] > 0
+
+
+class TestPrefixAndChunk:
+    """PR 7 satellites: shared-prefix hits and chunked prefill must not
+    move a single bit of the served streams, while the stats must show
+    the work actually being saved / split."""
+
+    def _serve(self, moe_setup, spec_prompts, **kw):
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64,
+                     schedule="s1", **kw)
+        for prompt, gen in spec_prompts:
+            eng.submit(prompt, gen)
+        return {c.rid: c.tokens for c in eng.run(params)}, eng
+
+    def _shared_prompts(self, cfg, n_shared=37, tails=(3, 5, 2), seed=3):
+        rng = np.random.RandomState(seed)
+        sysp = list(rng.randint(1, cfg.vocab_size, n_shared))
+        return [(sysp + list(rng.randint(1, cfg.vocab_size, t)), 6)
+                for t in tails]
+
+    def test_prefix_hit_is_bitwise_cold(self, moe_setup):
+        cfg = moe_setup[0]
+        reqs = self._shared_prompts(cfg)
+        cold, cold_eng = self._serve(moe_setup, reqs, prefix_cache=False)
+        hot, hot_eng = self._serve(moe_setup, reqs, prefix_cache=True)
+        assert cold == hot
+        assert hot_eng.stats["prefix_hits"] == 2       # 2nd + 3rd request
+        assert hot_eng.stats["prefix_tokens"] == 2 * 32  # 2 full blocks
+        # the shared prefix is computed ONCE: later admissions prefill
+        # only their suffix
+        assert (hot_eng.stats["prefill_tokens"]
+                < cold_eng.stats["prefill_tokens"])
+        assert cold_eng.stats["prefix_hits"] == 0
+
+    def test_chunked_prefill_is_bitwise_one_shot(self, moe_setup):
+        cfg = moe_setup[0]
+        reqs = self._shared_prompts(cfg)
+        one, one_eng = self._serve(moe_setup, reqs, prefix_cache=False)
+        chk, chk_eng = self._serve(moe_setup, reqs, prefix_cache=False,
+                                   prefill_chunk=8)
+        assert one == chk
+        assert chk_eng.stats["prefill_calls"] \
+            > one_eng.stats["prefill_calls"]
+        assert chk_eng.stats["prefill_tokens"] \
+            == one_eng.stats["prefill_tokens"]
+
+    def test_engine_refuses_eviction_of_held_prefix(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64,
+                     schedule="s1")
+        (prompt, gen), = self._shared_prompts(cfg, tails=(3,))
+        eng.submit(prompt, gen)
+        while not eng.active:                  # prefill + first sample
+            eng.step(params)
+        key = max(eng.pool.prefix.keys(), key=len)   # deepest entry
+        with pytest.raises(RuntimeError, match="refused"):
+            eng.pool.prefix.evict(key)
+        while eng.active:
+            eng.step(params)
+        eng.pool.prefix.evict(key)             # released -> evictable
+
+    def test_stats_regressions(self, moe_setup):
+        cfg, model, mesh, dims, params = moe_setup
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        for prompt, gen in _prompts(cfg, [(6, 4), (9, 3), (5, 5)]):
+            eng.submit(prompt, gen)
+        eng.run(params)
+        s = eng.stats
+        assert set(s) >= {"prefix_hits", "prefix_tokens", "peak_blocks"}
+        assert 0 < s["peak_blocks"] <= eng.pool.n_blocks
+        assert eng.pool.occupancy() == 0.0     # drained after the run
+        assert eng.pool.n_free_blocks == eng.pool.n_blocks
+
+
+class TestPagedParity:
+    """Tentpole oracle: the paged engine vs PR 5's frozen slab engine
+    (tests/helpers/legacy_kvcache.py), token-for-token, via the
+    subprocess harness (controlled device counts)."""
+
+    def test_paged_parity_trace(self, helpers_dir):
+        r = subprocess.run(
+            [sys.executable, os.path.join(helpers_dir,
+                                          "run_paged_parity.py"), "trace"],
+            env=subprocess_env(1), capture_output=True, text=True,
+            timeout=900)
+        assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+        assert "PAGED PARITY OK" in r.stdout
+
+    def test_paged_parity_multidev(self, helpers_dir):
+        r = subprocess.run(
+            [sys.executable, os.path.join(helpers_dir,
+                                          "run_paged_parity.py"),
+             "multidev"],
+            env=subprocess_env(8), capture_output=True, text=True,
+            timeout=900)
+        assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+        assert "PAGED PARITY OK" in r.stdout
 
 
 class TestDecodeAutosched:
