@@ -263,15 +263,25 @@ class PrefixCache:
 
     @property
     def evictable_blocks(self) -> int:
-        """Blocks that evicting every holder-free entry would free."""
+        """Blocks that evicting every holder-free entry would free.
+
+        A block frees only when its ``cache_rc`` hits zero, i.e. every
+        entry covering it is gone — and ``evict_lru`` refuses any entry
+        with a live-held block ANYWHERE in it.  So a block counts only
+        if no covering entry is pinned; counting per-block ``req_rc``
+        alone overstates headroom and lets ``can_admit`` admit requests
+        that then crash in ``alloc``.
+        """
+        pinned: set = set()
+        for entry in self._entries.values():
+            if any(self.alloc.req_rc(b) > 0 for b in entry):
+                pinned.update(entry)
         seen, n = set(), 0
         for entry in self._entries.values():
             for b in entry:
-                if b in seen or self.alloc.req_rc(b) > 0:
+                if b in seen or b in pinned:
                     continue
                 seen.add(b)
-                # freed only once the last covering entry goes; count the
-                # block if NO live request holds it (cache_rc alone)
                 n += 1
         return n
 
@@ -395,18 +405,50 @@ class KVCachePool:
             # is a position to sample the first generated token from
             shared = self.prefix.lookup(prompt,
                                         (len(prompt) - 1) // self.block_size)
-        private_need = need - len(shared)
-        if self.alloc_blocks.available < private_need:
-            short = private_need - self.alloc_blocks.available
-            if self.prefix is None or \
-                    self.prefix.evict_lru(short) + self.alloc_blocks.available \
-                    < private_need:
-                raise RuntimeError(
-                    f"KV-cache pool exhausted: request needs "
-                    f"{private_need} blocks, "
-                    f"{self.alloc_blocks.available} available")
+        # can_admit's exact headroom bound, measured BEFORE this request
+        # pins anything.  Sharing-path success implies it (sharing m
+        # blocks removes >= m from the evictable count), so when it
+        # fails we can refuse up front without evicting anything.
+        evictable0 = 0 if self.prefix is None else \
+            self.prefix.evictable_blocks
+        if self.alloc_blocks.available + evictable0 < need:
+            raise RuntimeError(
+                f"KV-cache pool exhausted: request needs {need} blocks, "
+                f"{self.alloc_blocks.available} available "
+                f"(+{evictable0} evictable)")
+        # Hold the matched blocks BEFORE any eviction: evict_lru skips
+        # entries with live request holders, so this pins the hit —
+        # otherwise pressure-eviction below could free the (holder-free)
+        # entry we just matched and share() would KeyError.
         for bid in shared:
             self.alloc_blocks.share(bid)
+        private_need = need - len(shared)
+        if self.alloc_blocks.available < private_need:
+            self.prefix.evict_lru(
+                private_need - self.alloc_blocks.available)
+            # re-check available alone: freed blocks already returned to
+            # the free heap, adding evict_lru's count would double-count
+            if self.alloc_blocks.available < private_need:
+                # Sharing pinned every entry touching the matched blocks
+                # (longer prefixes of the same chain), which may be the
+                # only remaining evictable headroom.  Give the hit back
+                # and retry share-free — the feasibility bound above
+                # guarantees this path succeeds, so alloc admits in
+                # exactly the states can_admit approves.
+                for bid in shared:
+                    self.alloc_blocks.release(bid)
+                if shared:
+                    self.prefix.hits -= 1
+                    self.prefix.misses += 1
+                shared = ()
+                private_need = need
+                self.prefix.evict_lru(
+                    need - self.alloc_blocks.available)
+                if self.alloc_blocks.available < need:
+                    raise RuntimeError(
+                        f"KV-cache pool exhausted: request needs "
+                        f"{need} blocks, "
+                        f"{self.alloc_blocks.available} available")
         self.alloc_blocks.reserve(private_need)
         row = heapq.heappop(self._row_free)
         self._row_of[rid] = row
@@ -480,7 +522,7 @@ class KVCachePool:
         """Snapshot of the request -> row map."""
         return dict(self._row_of)
 
-    def block_tables(self, np_module=None):
+    def block_tables(self):
         """The jitted steps' ``(max_batch, max_blocks)`` int32 gather
         table: row r's logical block i -> physical arena slot.  Idle
         rows and unallocated slots point at the null block (0)."""

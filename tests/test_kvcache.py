@@ -448,3 +448,111 @@ class TestPoolLifecycle:
         assert t.shape == (2, 4)
         assert t[0, 0] == pool.table_of("a")[0]
         assert (t[1] == NULL_BLOCK).all()
+
+
+class TestPressureAdmission:
+    """Regression suite for the alloc-vs-eviction races: a matched
+    prefix must be pinned before pressure eviction runs, refused
+    admissions must leave the cache untouched, and the evictable count
+    must agree with what evict_lru can actually free."""
+
+    def _warm(self, model, *, n_blocks=3, max_batch=2):
+        """Pool with prompt p cached as entries (b1,), (b1, b2) and no
+        live holders; returns (pool, p)."""
+        pool = KVCachePool(model, max_batch, 24, block_size=8,
+                           n_blocks=n_blocks)
+        p = tuple(range(1, 18))                          # 17 tokens
+        pool.alloc("a", p, max_new=7)
+        pool.ensure("a", 16)
+        pool.commit_prefix("a", p)
+        pool.release("a")
+        return pool, p
+
+    def test_refused_alloc_does_not_evict_matched_prefix(self, model):
+        """The old code looked up the prefix hit WITHOUT holds, let
+        evict_lru free the matched blocks, then crashed in share() with
+        KeyError.  Now the infeasible request is refused up front and
+        the cache survives intact."""
+        pool, p = self._warm(model)
+        pool.alloc("c", (99,), max_new=0)        # reserves the last block
+        assert pool.alloc_blocks.available == 0
+        assert not pool.can_admit(17, 7)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc("b", p, max_new=7)
+        # no KeyError, request not half-admitted, cache untouched
+        assert "b" not in pool.live()
+        assert len(pool.prefix) == 2
+        assert pool.alloc_blocks.cache_rc(1) == 2
+        assert pool.alloc_blocks.cache_rc(2) == 1
+        assert pool.alloc_blocks.req_rc(1) == 0
+        pool.alloc_blocks.check()
+        # freeing the blocker makes the same request admissible, with
+        # the (preserved) prefix hit
+        pool.release("c")
+        assert pool.can_admit(17, 7)
+        _, shared = pool.alloc("b", p, max_new=7)
+        assert shared == 16
+
+    def test_pressure_eviction_spares_matched_prefix(self, model):
+        """Under block pressure, evict_lru takes the holder-free decoy
+        entry, never the prefix the incoming request just matched."""
+        pool = KVCachePool(model, 3, 24, block_size=8, n_blocks=4)
+        q = tuple(range(50, 59))                         # decoy, 9 tokens
+        pool.alloc("q", q, max_new=0)
+        pool.ensure("q", 8)
+        pool.commit_prefix("q", q)                       # entry (1,)
+        pool.release("q")
+        p = tuple(range(1, 18))
+        pool.alloc("a", p, max_new=0)
+        pool.ensure("a", 16)
+        pool.commit_prefix("a", p)                       # (2,), (2, 3)
+        pool.release("a")
+        pool.alloc("c", (99,), max_new=0)                # available -> 0
+        assert pool.can_admit(17, 7)
+        _, shared = pool.alloc("b", p, max_new=7)
+        assert shared == 16                              # hit preserved
+        assert pool.table_of("b") == [2, 3]
+        assert q[:8] not in pool.prefix.keys()           # decoy evicted
+        assert len(pool.prefix) == 2
+        for pos in range(16, 24):
+            pool.ensure("b", pos)
+        pool.alloc_blocks.check()
+        pool.release("b")
+        pool.release("c")
+
+    def test_fallback_gives_up_hit_when_chain_pins_all_headroom(self,
+                                                                model):
+        """When the matched entry's own chain is the only evictable
+        headroom, pinning it would deadlock admission — alloc must fall
+        back to a share-free allocation (the old code crashed with
+        KeyError here: evict_lru freed the matched blocks mid-alloc)."""
+        pool, p = self._warm(model)
+        pool.alloc("c", (99,), max_new=0)
+        assert pool.alloc_blocks.available == 0
+        assert pool.can_admit(9, 7)                      # needs 2 blocks
+        row, shared = pool.alloc("b", p[:9], max_new=7)
+        assert shared == 0                               # hit abandoned
+        assert len(pool.prefix) == 0                     # chain evicted
+        assert (pool.prefix.hits, pool.prefix.misses) == (0, 2)
+        for pos in range(16):
+            pool.ensure("b", pos)
+        pool.alloc_blocks.check()
+        pool.release("b")
+        pool.release("c")
+        assert pool.n_free_blocks == pool.n_blocks
+
+    def test_evictable_blocks_excludes_pinned_sibling_entries(self,
+                                                              model):
+        """A block counts as evictable only if NO covering entry has a
+        live-held block — evict_lru refuses whole entries, so counting
+        per-block refcounts alone overstates admission headroom."""
+        pool, p = self._warm(model, n_blocks=8)
+        # share only the 1-block prefix: pins (b1,) directly and
+        # (b1, b2) through b1, so b2 is unfreeable despite req_rc == 0
+        pool.alloc("x", p[:8] + (99,), max_new=0)
+        assert pool.alloc_blocks.req_rc(1) == 1
+        assert pool.alloc_blocks.req_rc(2) == 0
+        assert pool.prefix.evictable_blocks == 0
+        assert pool.prefix.evict_lru(4) == 0             # consistent
+        pool.release("x")
+        assert pool.prefix.evictable_blocks == 2
