@@ -1,0 +1,158 @@
+"""Guard-rail overhead benchmark: guards-on vs guards-off train step.
+
+The fault-tolerant loop (PR 8) wraps every train step in a non-finite
+where-select + LR-scale multiply; the acceptance bar is < 2% overhead on
+the bench smoke.  Both variants run the SAME reduced MoE arch and batch
+through jitted steps and report microseconds per step (median); the
+derived column of the ``guards_overhead`` row is the measured ratio.
+
+Measurement matches the production loop: ``donate_argnums=(0, 1)`` with
+outputs fed back as the next step's inputs (exactly how the Trainer
+drives the step — donation lets XLA fold the guard's where-select into
+the in-place update), and a training-shaped batch (8x256 tokens) so the
+fwd+bwd compute fraction is representative.  Without donation the
+select materializes a second copy of params+moments and the "overhead"
+triples — that regime never occurs in the real loop.
+
+A third row times the guarded step with the fp8 saturation monitor
+installed on an fp8-wire config — the full production guard stack, so a
+regression in the debug-callback path shows up here and not in a prod
+incident.
+
+Run under 8 fake CPU devices (benchmarks/run.py does this):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_guards [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.collectives import CommConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.train.loop import make_guarded_train_step, make_train_step
+
+ARCH = "qwen3-moe-30b-a3b"
+
+
+def _setup(wire="f32"):
+    cfg = get_config(ARCH).reduced()
+    if wire != "f32":
+        cfg = replace(cfg, moe=replace(
+            cfg.moe, comm=CommConfig(wire_dtype=wire)))
+    model = build_model(cfg)
+    n = jax.device_count()
+    d = max(1, n // 2) if n > 1 else 1
+    mesh = make_mesh((d, max(n // d, 1)), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (8, 256)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (8, 256)),
+                              jnp.int32)}
+    return model, mesh, dims, params, opt, batch
+
+
+def _step_loop(fn, params, opt, batch, extra=()):
+    """One timed-call closure: donated ping-pong, exactly as the Trainer
+    drives the step — outputs feed back as the next inputs so XLA
+    updates params/moments in place."""
+    jitted = jax.jit(fn, donate_argnums=(0, 1))
+    st = {"p": jax.tree.map(jnp.copy, params),
+          "o": jax.tree.map(jnp.copy, opt)}
+
+    def once():
+        t0 = time.perf_counter()
+        st["p"], st["o"], m = jitted(st["p"], st["o"], batch, *extra)
+        jax.block_until_ready(m["loss"])
+        return time.perf_counter() - t0
+
+    return once
+
+
+def _median(ts):
+    ts = sorted(ts)
+    return ts[len(ts) // 2]
+
+
+def _time_pair(a, b, iters=9, warmup=2):
+    """Interleave the two loops sample-by-sample (alternating order) so
+    machine-load drift hits both sides equally, then report medians —
+    a sequential A-then-B timing at this granularity reads multi-percent
+    phantom 'overhead' from drift alone."""
+    for _ in range(warmup):
+        a()
+        b()
+    ta, tb = [], []
+    for i in range(iters):
+        if i % 2:
+            ta.append(a())
+            tb.append(b())
+        else:
+            tb.append(b())
+            ta.append(a())
+    return _median(ta), _median(tb)
+
+
+def _time_step(fn, params, opt, batch, extra=(), iters=8, warmup=2):
+    once = _step_loop(fn, params, opt, batch, extra)
+    for _ in range(warmup):
+        once()
+    return _median([once() for _ in range(iters)])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args, _ = ap.parse_known_args()
+    iters = 5 if args.smoke else 9
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    model, mesh, dims, params, opt, batch = _setup()
+    plain = make_train_step(model, mesh, dims, opt_cfg, "s1")
+    guarded = make_guarded_train_step(model, mesh, dims, opt_cfg, "s1")
+
+    t_off, t_on = _time_pair(
+        _step_loop(plain, params, opt, batch),
+        _step_loop(guarded, params, opt, batch,
+                   extra=(jnp.float32(1.0), jnp.float32(0.0))),
+        iters=iters)
+    ratio = t_on / max(t_off, 1e-12)
+    emit("guards_off_step", 1e6 * t_off, "plain train step")
+    emit("guards_on_step", 1e6 * t_on, "guarded (skip-step where-select)")
+    emit("guards_overhead", 1e6 * (t_on - t_off),
+         f"ratio {ratio:.4f} (accept < 1.02)")
+
+    # full stack: fp8 wire + saturation monitor riding the encodes
+    from repro.runtime import (disable_fp8_monitor, enable_fp8_monitor,
+                               fp8_sat_counts, reset_fp8_counter)
+    model8, mesh8, dims8, params8, opt8, batch8 = _setup(wire="fp8_e4m3")
+    guarded8 = make_guarded_train_step(model8, mesh8, dims8, opt_cfg, "s1")
+    reset_fp8_counter()
+    enable_fp8_monitor()
+    try:
+        t_mon = _time_step(guarded8, params8, opt8, batch8,
+                           extra=(jnp.float32(1.0), jnp.float32(0.0)),
+                           iters=iters)
+    finally:
+        disable_fp8_monitor()
+    sat, tot = fp8_sat_counts()
+    emit("guards_fp8_monitor_step", 1e6 * t_mon,
+         f"fp8 wire + sat counter ({sat}/{tot} saturating)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (CheckpointCorruptError,  # noqa: F401
+                                   CheckpointStore, load_checkpoint,
+                                   save_checkpoint)

@@ -87,10 +87,72 @@ class ScheduleDecision:
 
 _CACHE: dict = {}
 
+#: process-wide wire ceiling: fp8 decisions are clamped up to this dtype
+#: when set (see :func:`set_wire_ceiling`) — the guard rails' overflow
+#: fallback.  None = no clamping (the default).
+_WIRE_CEILING = None
+
+#: callbacks fired by :func:`invalidate` (observability for plan swaps)
+_INVALIDATION_HOOKS: list = []
+
 
 def clear_cache() -> None:
     """Drop every cached decision (tests, or after remeshing)."""
     _CACHE.clear()
+
+
+def invalidate(reason: str = "") -> int:
+    """Decision-cache invalidation hook: drop every cached decision and
+    notify registered hooks.  Returns the number of entries dropped.
+
+    This is the "cheap plan swap" entry point — after changing something
+    decisions depend on outside the cache key (e.g. the wire ceiling),
+    call this and re-jit; the retrace re-consults :func:`decide`.
+    """
+    n = len(_CACHE)
+    _CACHE.clear()
+    for cb in list(_INVALIDATION_HOOKS):
+        cb(reason, n)
+    return n
+
+
+def add_invalidation_hook(cb) -> None:
+    """Register ``cb(reason, n_dropped)`` to observe invalidations."""
+    _INVALIDATION_HOOKS.append(cb)
+
+
+def remove_invalidation_hook(cb) -> None:
+    if cb in _INVALIDATION_HOOKS:
+        _INVALIDATION_HOOKS.remove(cb)
+
+
+def set_wire_ceiling(wire) -> None:
+    """Clamp every *resolved* wire decision to at least ``wire`` bytes
+    per element (None clears).  ``apply_moe`` applies the clamp via
+    :func:`clamp_wire` after resolving forced/auto wire dtypes, so a
+    single ``set_wire_ceiling("bf16")`` + :func:`invalidate` + re-jit
+    swaps every fp8 wire in the model to bf16 — the guard rails' fp8
+    overflow fallback — without touching configs or restarting."""
+    global _WIRE_CEILING
+    if wire is not None and wire not in WIRE_BYTES:
+        raise ValueError(f"unknown wire dtype {wire!r} "
+                         f"(want one of {tuple(WIRE_BYTES)})")
+    _WIRE_CEILING = wire
+
+
+def wire_ceiling():
+    return _WIRE_CEILING
+
+
+def clamp_wire(wire: str) -> str:
+    """Apply the process-wide wire ceiling to a resolved wire dtype:
+    dtypes narrower than the ceiling are widened to it, wider ones pass
+    through untouched."""
+    if _WIRE_CEILING is None or wire not in WIRE_BYTES:
+        return wire
+    if WIRE_BYTES[wire] < WIRE_BYTES[_WIRE_CEILING]:
+        return _WIRE_CEILING
+    return wire
 
 
 def cache_info() -> dict:

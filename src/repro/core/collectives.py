@@ -97,6 +97,47 @@ class CommConfig:
 _FP8_MAX = 448.0   # largest finite float8_e4m3fn value
 _SCALE_TAIL = 4    # fp8 payload rows carry their f32 scale as 4 extra bytes
 
+# --- fp8 wire overflow monitoring / fault injection ---------------------------
+# The guard rails (repro.runtime.guards) install a monitor callback that
+# accumulates (saturating, total) element counts from every fp8 encode;
+# the fault harness (repro.runtime.faults) can shrink the scales so
+# payloads saturate on demand.  Both are trace-time gated: with the
+# defaults (None / 0.0) wire_encode compiles to exactly the pre-existing
+# program — production traces carry zero monitoring overhead.
+
+_FP8_MONITOR = None      # callable(sat_count, n_elements) or None
+_FP8_SAT_INJECT = 0.0    # scale-shrink factor (0.0 = off)
+
+
+def set_fp8_monitor(cb) -> None:
+    """Install (or clear, with None) the process-wide fp8 saturation
+    monitor.  Affects traces built afterwards."""
+    global _FP8_MONITOR
+    _FP8_MONITOR = cb
+
+
+def set_fp8_sat_injection(factor: float) -> None:
+    """Shrink fp8 wire-encode scales by ``factor`` so payloads saturate
+    (deterministic overflow injection); 0.0 disables."""
+    global _FP8_SAT_INJECT
+    _FP8_SAT_INJECT = float(factor)
+
+
+def _emit_sat(sat, total) -> None:
+    # runtime-checked too: a trace built while monitoring can outlive
+    # disable_fp8_monitor(); stale callbacks must be harmless.
+    if _FP8_MONITOR is not None:
+        _FP8_MONITOR(int(sat), int(total))
+
+
+def _monitor_sat(vals) -> None:
+    """Count saturating/non-finite elements of a pre-cast fp8 payload
+    into the installed monitor (trace-time no-op when none is set)."""
+    if _FP8_MONITOR is None:
+        return
+    sat = jnp.sum((~jnp.isfinite(vals)) | (jnp.abs(vals) > _FP8_MAX))
+    jax.debug.callback(_emit_sat, sat, vals.size)
+
 
 def _fp8_dtype():
     if not hasattr(jnp, "float8_e4m3fn"):  # pragma: no cover - old jax
@@ -129,10 +170,18 @@ def wire_encode(x, comm: CommConfig | None):
     if comm.scaling == "none":
         # e4m3fn has no inf: clamp so out-of-range casts saturate at
         # +-448 instead of producing NaN payloads.
+        _monitor_sat(xf)
         return jnp.clip(xf, -_FP8_MAX, _FP8_MAX).astype(f8)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
     scale = lax.stop_gradient(jnp.maximum(amax, 1e-30) / _FP8_MAX)
-    payload = (xf / scale).astype(f8)
+    if _FP8_SAT_INJECT:
+        scale = scale / _FP8_SAT_INJECT
+    ratio = xf / scale
+    _monitor_sat(ratio)
+    # clip is the identity for in-range values (absmax scaling keeps
+    # |ratio| <= 448 exactly) and turns injected/overflowed values into
+    # saturated-but-finite payloads the monitor has already counted.
+    payload = jnp.clip(ratio, -_FP8_MAX, _FP8_MAX).astype(f8)
     sbits = lax.bitcast_convert_type(        # (..., 1) f32 -> (..., 1, 4) u8
         lax.bitcast_convert_type(scale, jnp.uint8), f8)
     return jnp.concatenate(

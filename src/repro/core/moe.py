@@ -263,6 +263,11 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         if sched == "auto":
             sched, n_chunks = decision.schedule, decision.n_chunks
         wire = decision.wire_dtype if wire == "auto" else wire
+    # guard-rail wire ceiling (fp8 overflow fallback): clamp the resolved
+    # wire up to the process-wide floor width, if one is set.  Applied
+    # after auto/forced resolution so it covers both paths; a no-op
+    # (identity) when no ceiling is active.
+    wire = autosched.clamp_wire(wire)
     if not use_fallback and n_chunks > 1 and sched in PIPELINE_OF:
         # route chunked requests to the pipelined body of the same schedule
         sched = PIPELINE_OF[sched]

@@ -49,7 +49,8 @@ from repro.launch.mesh import dims_for, make_production_mesh, make_test_mesh
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init, opt_state_specs
 from repro.parallel.mesh import axis_size
-from repro.train.loop import (cache_specs, make_prefill_fn, make_serve_step,
+from repro.train.loop import (cache_specs, make_guarded_train_step,
+                              make_prefill_fn, make_serve_step,
                               make_train_step, named_tree)
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -108,7 +109,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
               pipeline_chunks: int = None, run_step: bool = False,
               reduced: bool = False, seq: int = None,
               batch_size: int = None, wire_dtype: str = None,
-              dump_plan: bool = False) -> dict:
+              dump_plan: bool = False, guards: bool = False) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -245,10 +246,23 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         o_sh = named_tree(mesh, opt_state_specs(
             pspecs, mesh=mesh, dp_axes=zero_axes, zero1=bool(zero_axes),
             params_shape=p_shapes))
-        fn = make_train_step(model, mesh, dims, opt_cfg, schedule)
-        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
-                         out_shardings=(p_sh, o_sh, None))
-        lowered = jitted.lower(p_shapes, o_shapes, batch)
+        if guards:
+            # the fault-tolerant step (skip-step where-select + LR
+            # backoff): proves the GUARDED program lowers/compiles/fits
+            # on the production mesh, not just the plain one
+            fn = make_guarded_train_step(model, mesh, dims, opt_cfg,
+                                         schedule)
+            scalar = jax.ShapeDtypeStruct((), jnp.float32)
+            jitted = jax.jit(fn,
+                             in_shardings=(p_sh, o_sh, b_sh, None, None),
+                             out_shardings=(p_sh, o_sh, None))
+            lowered = jitted.lower(p_shapes, o_shapes, batch, scalar,
+                                   scalar)
+        else:
+            fn = make_train_step(model, mesh, dims, opt_cfg, schedule)
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None))
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
         tokens = shape.global_batch * shape.seq_len
         flops_mult = 3.0   # fwd + bwd
     elif shape.kind == "prefill":
@@ -304,7 +318,12 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         concrete = jax.tree.map(
             lambda l, s: jax.device_put(jnp.zeros(l.shape, l.dtype), s),
             batch, b_sh)
-        _, _, metrics = compiled(params, opt_state, concrete)
+        if guards:
+            one, zero = jnp.float32(1.0), jnp.float32(0.0)
+            _, _, metrics = compiled(params, opt_state, concrete, one,
+                                     zero)
+        else:
+            _, _, metrics = compiled(params, opt_state, concrete)
         step_metrics = {k: float(v) for k, v in metrics.items()
                         if getattr(v, "ndim", 0) == 0}
         el = metrics.get("expert_load")
@@ -360,6 +379,11 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         "wire_dtype": wire_pick,
         "plan": plan_dump,
         "step_metrics": step_metrics,
+        # guarded combos record the guard-rail outcome: step_metrics
+        # carries the jitted "nonfinite" flag (0.0 = the update applied)
+        "robustness": {"guards": True,
+                       "nonfinite": (step_metrics or {}).get("nonfinite"),
+                       "lr_scale": 1.0} if guards else None,
         "chips": chips, "dtype": dtype,
         "n_params": n_params, "n_active_params": n_active,
         "tokens_per_step": tokens,
@@ -414,6 +438,10 @@ def main():
                     help="after compiling a train combo, init real params "
                          "and execute one optimizer step (use with "
                          "--reduced/--seq/--batch on CPU)")
+    ap.add_argument("--guards", action="store_true",
+                    help="lower the GUARDED train step (non-finite "
+                         "skip-step + LR backoff) and record the guard "
+                         "outcome in the artifact")
     ap.add_argument("--reduced", action="store_true",
                     help="lower the smoke-scale config variant")
     ap.add_argument("--seq", type=int, default=None,
@@ -465,7 +493,8 @@ def main():
                                     reduced=args.reduced, seq=args.seq,
                                     batch_size=args.batch,
                                     wire_dtype=args.wire_dtype,
-                                    dump_plan=args.dump_plan)
+                                    dump_plan=args.dump_plan,
+                                    guards=args.guards)
                     sfx = f"__{args.schedule}" if args.schedule else ""
                     if args.tag:
                         sfx += f"__{args.tag}"

@@ -44,13 +44,21 @@ def build_engine(args, cfg, model):
             n_blocks=args.n_blocks or None, block_size=args.block_size,
             mean_len=mean_len)
         print(f"auto max-batch (t_decode, block budget): {max_batch}")
+    faults = None
+    if getattr(args, "faults", None):
+        from repro.runtime import FaultPlan
+        faults = FaultPlan.parse(args.faults, seed=args.fault_seed)
+        print(f"fault plan: {faults.summary()}", flush=True)
     return Engine(model, mesh, dims, max_batch=max_batch,
                   max_len=args.max_len, schedule=schedule,
                   prefill_batch=args.prefill_batch,
                   block_size=args.block_size,
                   n_blocks=args.n_blocks or None,
                   prefix_cache=args.prefix_cache,
-                  prefill_chunk=args.prefill_chunk), mesh, dims
+                  prefill_chunk=args.prefill_chunk,
+                  queue_slo=getattr(args, "queue_slo", 0.0),
+                  watchdog_rounds=getattr(args, "watchdog_rounds", 0),
+                  faults=faults), mesh, dims
 
 
 def main():
@@ -83,6 +91,23 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request wall-clock deadline in seconds "
+                         "(0 = none); blown deadlines cancel mid-flight "
+                         "and free their KV pages")
+    ap.add_argument("--queue-slo", type=float, default=0.0,
+                    help="max seconds a request may wait in queue for "
+                         "blocks before being shed (0 = backpressure only)")
+    ap.add_argument("--watchdog-rounds", type=int, default=0,
+                    help="evict a decode row after this many rounds "
+                         "without progress (0 = off)")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec, e.g. 'req_timeout@rid=1,"
+                         "ticks=4;req_delay@rid=2,rounds=99;alloc_starve@"
+                         "tick=1,hold=999,rounds=8' (repro.runtime.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--log-json", default=None,
+                    help="write latency + robustness stats to this file")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny run, assert clean completion")
     args = ap.parse_args()
@@ -109,7 +134,8 @@ def main():
         engine.submit(rng.randint(0, cfg.vocab_size, plen), args.gen,
                       sampler=sampler,
                       arrival=(i / args.arrival_rate
-                               if args.arrival_rate > 0 else 0.0))
+                               if args.arrival_rate > 0 else 0.0),
+                      deadline=args.deadline)
     done = engine.run(params, progress=not args.smoke)
 
     stats = latency_stats(done)
@@ -127,14 +153,35 @@ def main():
           f"({s['prefix_tokens']} tokens reused), peak pages "
           f"{s['peak_blocks']}/{engine.pool.n_blocks} "
           f"(block size {engine.block_size})")
+    if s["shed"] or s["expired"] or s["evicted"] or args.faults \
+            or args.deadline or args.queue_slo or args.watchdog_rounds:
+        print(f"robustness: {s['shed']} shed "
+              f"({s['shed_blocks']} blocks, {s['shed_queue']} queue SLO), "
+              f"{s['expired']} expired, {s['evicted']} evicted")
     from repro.core import autosched
     summary = autosched.cache_summary()
     if summary:
         print(summary)
-    print("sample:", done[0].tokens[:16])
+    if args.log_json:
+        import json as _json
+        import os as _os
+        _os.makedirs(_os.path.dirname(_os.path.abspath(args.log_json)),
+                     exist_ok=True)
+        with open(args.log_json, "w") as f:
+            _json.dump({"latency": stats, "engine": s,
+                        "statuses": {c.rid: c.status for c in done}},
+                       f, indent=1)
+    ok = [c for c in done if c.status == "ok"]
+    if ok:
+        print("sample:", ok[0].tokens[:16])
     if args.smoke:
+        # every submitted request must come back — finished, shed,
+        # expired, or evicted; nothing may hang or vanish
         assert len(done) == args.requests, "smoke: not all requests done"
-        assert all(len(c.tokens) > 0 for c in done)
+        assert all(len(c.tokens) > 0 for c in ok)
+        if args.faults:
+            assert ok, "chaos smoke: every request was cancelled"
+            print("SERVE CHAOS OK")
         print("SERVE SMOKE OK")
 
 

@@ -53,6 +53,22 @@ def main():
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint period in steps (default: steps/2 "
+                         "when --ckpt is set)")
+    ap.add_argument("--retain", type=int, default=3,
+                    help="retained checkpoints under --guards (last k)")
+    ap.add_argument("--guards", action="store_true",
+                    help="fault-tolerant loop: non-finite skip-step + LR "
+                         "backoff, loss-spike detection, checkpoint "
+                         "rollback (needs --ckpt), fp8 overflow fallback")
+    ap.add_argument("--max-skips", type=int, default=3,
+                    help="consecutive skipped steps before rollback")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec, e.g. 'nan_grad@step=5-8;"
+                         "fp8_sat@factor=64;ckpt_bitflip@save=2' "
+                         "(see repro.runtime.faults; implies --guards)")
+    ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
@@ -93,20 +109,48 @@ def main():
     model = build_model(cfg)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                       total_steps=args.steps)
+    guards = faults = None
+    if args.faults:
+        from repro.runtime import FaultPlan
+        faults = FaultPlan.parse(args.faults, seed=args.fault_seed)
+        print(f"fault plan: {faults.summary()}", flush=True)
+    if args.guards or faults is not None:
+        from repro.runtime import GuardConfig
+        guards = GuardConfig(max_skips=args.max_skips)
     tr = Trainer(model, mesh, dims, opt, schedule=args.schedule,
-                 ckpt_path=args.ckpt)
+                 ckpt_path=args.ckpt, guards=guards, faults=faults,
+                 ckpt_retain=args.retain)
     params, opt_state = tr.setup(jax.random.PRNGKey(0))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq,
                                   global_batch=args.batch))
+    ckpt_every = args.ckpt_every or (args.steps // 2 if args.ckpt else 0)
     params, opt_state, hist = tr.run(params, opt_state, data, args.steps,
-                                     ckpt_every=args.steps // 2 if args.ckpt
+                                     ckpt_every=ckpt_every if args.ckpt
                                      else 0)
     if args.log_json:
         os.makedirs(os.path.dirname(os.path.abspath(args.log_json)),
                     exist_ok=True)
+        rec = hist if guards is None else {
+            "history": hist,
+            "guards": dict(tr.guard_state.counters),
+            "guard_events": tr.guard_state.events,
+            "lr_scale": tr.guard_state.lr_scale}
         with open(args.log_json, "w") as f:
-            json.dump(hist, f, indent=1)
+            json.dump(rec, f, indent=1)
+    import math
+    if guards is not None:
+        gs = tr.guard_state
+        # the chaos contract: an injected-fault run must still END finite
+        assert math.isfinite(hist[-1]["loss"]), \
+            f"guarded run ended non-finite: {hist[-1]['loss']}"
+        if faults is not None and any(
+                s.kind == "nan_grad" for s in faults.specs):
+            assert gs.counters["skipped"] > 0, \
+                "nan_grad fault injected but no step was skipped"
+        print(f"CHAOS TRAIN OK  final loss {hist[-1]['loss']:.4f}  "
+              f"({gs.counters['skipped']} skipped, "
+              f"{gs.counters['rollbacks']} rollbacks)", flush=True)
     print(f"final loss {hist[-1]['loss']:.4f} "
           f"(start {hist[0]['loss']:.4f})")
 

@@ -84,13 +84,27 @@ def global_norm(grads):
 
 
 def adamw_update(params, grads, state, cfg: AdamWConfig,
-                 decay_mask=None):
+                 decay_mask=None, lr_scale=1.0, finite=None):
     """One AdamW step. decay_mask: pytree of bool (True = apply WD);
-    defaults to ndim >= 2 leaves (no WD on norms/biases/gates)."""
+    defaults to ndim >= 2 leaves (no WD on norms/biases/gates).
+    ``lr_scale`` multiplies the scheduled LR (the guard rails' dynamic
+    backoff knob); the default 1.0 is bit-exact with no scaling.
+
+    ``finite`` (a traced bool scalar, e.g. ``isfinite(loss)``) opts into
+    the guard rails' skip-step: it is AND-ed with ``isfinite(grad_norm)``
+    and the select ``where(finite, new, old)`` is applied *inside* each
+    leaf's update expression — XLA fuses it into the same elementwise
+    loop as the update itself, so the guarded step costs no extra memory
+    pass over the trees (a separate post-hoc tree-select measurably does
+    not fuse).  A masked-out step leaves params, moments, and the step
+    counter bit-identical to never having run; the combined mask comes
+    back in the metrics as ``"finite"``."""
     step = state["step"] + 1
-    lr = cosine_schedule(cfg, step)
+    lr = cosine_schedule(cfg, step) * lr_scale
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    if finite is not None:
+        finite = finite & jnp.isfinite(gnorm)
 
     if decay_mask is None:
         decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
@@ -98,16 +112,21 @@ def adamw_update(params, grads, state, cfg: AdamWConfig,
     b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
     b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
 
-    def upd(p, g, mu, nu, wd):
+    def upd(p, g, mu0, nu0, wd):
         g = g.astype(jnp.float32) * scale
-        mu = cfg.beta1 * mu + (1 - cfg.beta1) * g
-        nu = cfg.beta2 * nu + (1 - cfg.beta2) * jnp.square(g)
+        mu = cfg.beta1 * mu0 + (1 - cfg.beta1) * g
+        nu = cfg.beta2 * nu0 + (1 - cfg.beta2) * jnp.square(g)
         mhat = mu / b1c
         nhat = nu / b2c
         delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
         if wd:
             delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if finite is not None:
+            p2 = jnp.where(finite, p2, p)
+            mu = jnp.where(finite, mu, mu0)
+            nu = jnp.where(finite, nu, nu0)
+        return p2, mu, nu
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = tdef.flatten_up_to(grads)
@@ -119,5 +138,9 @@ def adamw_update(params, grads, state, cfg: AdamWConfig,
     new_p = tdef.unflatten([t[0] for t in new])
     new_state = {"mu": tdef.unflatten([t[1] for t in new]),
                  "nu": tdef.unflatten([t[2] for t in new]),
-                 "step": step}
-    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+                 "step": step if finite is None
+                 else jnp.where(finite, step, state["step"])}
+    om = {"grad_norm": gnorm, "lr": lr}
+    if finite is not None:
+        om["finite"] = finite
+    return new_p, new_state, om

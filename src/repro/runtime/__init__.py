@@ -1,0 +1,7 @@
+from repro.runtime.faults import FaultPlan, FaultSpec, StarveState  # noqa: F401
+from repro.runtime.guards import (OK, ROLLBACK, SKIP,  # noqa: F401
+                                  GuardConfig, GuardState,
+                                  disable_fp8_monitor, enable_fp8_monitor,
+                                  fp8_sat_counts, fp8_sat_rate,
+                                  reset_fp8_counter)
+from repro.runtime.rollback import RollbackManager  # noqa: F401

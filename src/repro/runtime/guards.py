@@ -1,0 +1,193 @@
+"""Training guard rails: non-finite skip-step, LR backoff, loss-spike
+detection, and fp8 wire-overflow fallback.
+
+The jitted side lives in ``train.loop.make_guarded_train_step`` (the
+update is discarded leaf-wise when loss or grad norm goes non-finite);
+this module owns the HOST-side policy around it:
+
+  * :class:`GuardState` — per-run state machine.  Every step's
+    ``(loss, nonfinite)`` observation returns an action: ``OK`` (apply),
+    ``SKIP`` (the jitted step already kept the old params; back the LR
+    off), or ``ROLLBACK`` (the consecutive-skip streak or the loss-spike
+    detector fired — re-anchor to the last good checkpoint).
+  * Loss-spike detection — rolling median + MAD over the recent finite
+    losses; a loss further than ``spike_z`` robust sigmas above the
+    median marks the run poisoned even though every value is finite
+    (the failure mode a pure NaN check can never see).
+  * fp8 wire-overflow fallback — the encode path in
+    ``core.collectives`` counts saturating elements into a process-wide
+    accumulator (enabled here); when the observed saturation rate
+    crosses ``fp8_sat_threshold`` the trainer swaps every fp8 wire
+    decision to ``fp8_fallback`` via ``autosched.set_wire_ceiling`` +
+    cache invalidation and re-jits — a cheap plan swap, not a restart.
+
+All of it is opt-in: with ``guards=None`` the Trainer runs the exact
+pre-existing step function and none of this module is consulted.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+OK = "ok"
+SKIP = "skip"
+ROLLBACK = "rollback"
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """Knobs for the training guard rails (see module docstring).
+
+    ``max_skips``: consecutive non-finite skip-steps before a rollback
+    is requested.  ``lr_backoff`` multiplies the LR scale on every skip;
+    ``lr_recover`` multiplies it back up (capped at 1.0) on every clean
+    step.  The spike detector needs ``spike_min`` finite losses of
+    history and fires at ``spike_z`` robust sigmas (median + MAD) above
+    the rolling median.  ``fp8_sat_threshold`` is the fraction of
+    saturating fp8 wire elements that triggers the ``fp8_fallback``
+    wire-dtype swap.
+    """
+
+    max_skips: int = 3
+    lr_backoff: float = 0.5
+    lr_recover: float = 1.5
+    spike_window: int = 32
+    spike_min: int = 8
+    spike_z: float = 10.0
+    fp8_sat_threshold: float = 1e-3
+    fp8_fallback: str = "bf16"
+
+    def __post_init__(self):
+        if self.max_skips < 1:
+            raise ValueError("max_skips must be >= 1")
+        if not 0.0 < self.lr_backoff <= 1.0:
+            raise ValueError("lr_backoff must be in (0, 1]")
+
+
+@dataclass
+class GuardState:
+    """Mutable per-run guard state: streaks, LR scale, counters, and an
+    event log (``events`` is what the launchers print and the artifact
+    JSONs record)."""
+
+    cfg: GuardConfig = field(default_factory=GuardConfig)
+    lr_scale: float = 1.0
+    streak: int = 0
+    counters: dict = field(default_factory=lambda: {
+        "steps": 0, "skipped": 0, "rollbacks": 0, "loss_spikes": 0,
+        "fp8_fallbacks": 0, "rollback_unavailable": 0})
+    events: list = field(default_factory=list)
+    _losses: deque = field(default_factory=deque)
+
+    # --- per-step policy -----------------------------------------------------
+    def observe(self, step: int, loss: float, nonfinite: bool) -> str:
+        """Fold one step's outcome in; returns OK / SKIP / ROLLBACK."""
+        self.counters["steps"] += 1
+        if nonfinite or not math.isfinite(loss):
+            self.counters["skipped"] += 1
+            self.streak += 1
+            self.lr_scale = max(self.lr_scale * self.cfg.lr_backoff, 1e-4)
+            self.events.append({"step": step, "kind": "skip",
+                                "streak": self.streak,
+                                "lr_scale": self.lr_scale})
+            if self.streak >= self.cfg.max_skips:
+                return ROLLBACK
+            return SKIP
+        if self._is_spike(loss):
+            self.counters["loss_spikes"] += 1
+            self.events.append({"step": step, "kind": "loss_spike",
+                                "loss": loss})
+            return ROLLBACK
+        self.streak = 0
+        self.lr_scale = min(self.lr_scale * self.cfg.lr_recover, 1.0)
+        self._losses.append(loss)
+        while len(self._losses) > self.cfg.spike_window:
+            self._losses.popleft()
+        return OK
+
+    def _is_spike(self, loss: float) -> bool:
+        """Rolling median + MAD outlier test (spiking losses are never
+        folded into the window, so one spike cannot mask the next)."""
+        if len(self._losses) < self.cfg.spike_min:
+            return False
+        xs = sorted(self._losses)
+        med = xs[len(xs) // 2]
+        mad = sorted(abs(x - med) for x in xs)[len(xs) // 2]
+        sigma = 1.4826 * max(mad, 1e-12)
+        return loss > med + self.cfg.spike_z * sigma
+
+    # --- rollback bookkeeping ------------------------------------------------
+    def record_rollback(self, step: int, restored_step) -> None:
+        """A rollback happened (or was needed but unavailable): reset the
+        streak and the spike window — the restored state's losses belong
+        to a different trajectory."""
+        self.streak = 0
+        self._losses.clear()
+        if restored_step is None:
+            self.counters["rollback_unavailable"] += 1
+            self.events.append({"step": step, "kind": "rollback_unavailable"})
+        else:
+            self.counters["rollbacks"] += 1
+            self.events.append({"step": step, "kind": "rollback",
+                                "restored_step": restored_step})
+
+    # --- fp8 wire-overflow fallback ------------------------------------------
+    def check_fp8(self) -> bool:
+        """True exactly once: when the observed fp8 wire saturation rate
+        crosses the threshold (and a fallback hasn't already fired)."""
+        if self.counters["fp8_fallbacks"]:
+            return False
+        rate = fp8_sat_rate()
+        if rate > self.cfg.fp8_sat_threshold:
+            self.counters["fp8_fallbacks"] += 1
+            self.events.append({"kind": "fp8_fallback", "sat_rate": rate,
+                                "wire": self.cfg.fp8_fallback})
+            return True
+        return False
+
+    def summary(self) -> str:
+        c = self.counters
+        return (f"guards: {c['steps']} steps, {c['skipped']} skipped, "
+                f"{c['rollbacks']} rollbacks, {c['loss_spikes']} loss "
+                f"spikes, {c['fp8_fallbacks']} fp8 fallbacks, "
+                f"lr_scale {self.lr_scale:.3g}")
+
+
+# --- fp8 saturation accumulator ----------------------------------------------
+# ``collectives.wire_encode`` (fp8 path) emits (sat_count, n_elements)
+# pairs through jax.debug.callback when a monitor is installed; this is
+# the process-wide sink.  Rates are read by GuardState.check_fp8.
+
+_SAT = {"sat": 0, "total": 0}
+
+
+def _sat_cb(sat, total) -> None:
+    _SAT["sat"] += int(sat)
+    _SAT["total"] += int(total)
+
+
+def enable_fp8_monitor() -> None:
+    """Install the saturation counter into the fp8 wire-encode path.
+    Trace-time gated: traces built while enabled carry the counting
+    callback; with no monitor installed the encode emits nothing."""
+    from repro.core import collectives
+    collectives.set_fp8_monitor(_sat_cb)
+
+
+def disable_fp8_monitor() -> None:
+    from repro.core import collectives
+    collectives.set_fp8_monitor(None)
+
+
+def reset_fp8_counter() -> None:
+    _SAT["sat"] = _SAT["total"] = 0
+
+
+def fp8_sat_counts() -> tuple:
+    return _SAT["sat"], _SAT["total"]
+
+
+def fp8_sat_rate() -> float:
+    return _SAT["sat"] / _SAT["total"] if _SAT["total"] else 0.0

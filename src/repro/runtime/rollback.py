@@ -1,0 +1,55 @@
+"""Rollback policy: re-anchor a poisoned training run to the last good
+retained checkpoint.
+
+:class:`RollbackManager` is the thin policy layer between the guard
+rails (``runtime.guards``, which decide *when* to roll back) and the
+:class:`~repro.checkpoint.ckpt.CheckpointStore` (which knows *what* is
+restorable).  It snapshots on clean steps, and on rollback restores the
+newest verified checkpoint — falling back across corrupt files — and
+reports which step the run re-anchored to.  The Trainer keeps its data
+pipeline marching forward deterministically; only params/opt state are
+rewound, so a resumed run is bit-identical to one that never faulted
+from the restore point onward (tests/test_runtime.py locks this down).
+"""
+
+from __future__ import annotations
+
+from repro.checkpoint.ckpt import CheckpointStore
+
+
+class RollbackManager:
+    """Snapshot/restore policy over a :class:`CheckpointStore`.
+
+    ``shardings`` (optional pytrees matching params / opt state) are
+    applied on restore so leaves land back on their original device
+    layout.
+    """
+
+    def __init__(self, store: CheckpointStore, shardings=None):
+        self.store = store
+        self.shardings = shardings
+        self.last_good_step = None
+        self.events = []
+
+    def snapshot(self, params, opt_state, step: int) -> str:
+        """Persist a clean (guard-approved) step."""
+        path = self.store.save({"params": params, "opt_state": opt_state},
+                               step)
+        self.last_good_step = step
+        self.events.append({"kind": "snapshot", "step": step})
+        return path
+
+    def rollback(self, step: int):
+        """Restore the newest verified checkpoint.
+
+        Returns ``(params, opt_state, restored_step)`` or ``None`` when
+        nothing is restorable (the caller decides whether to limp on or
+        abort)."""
+        try:
+            tree, restored_step, path = self.store.restore(self.shardings)
+        except FileNotFoundError:
+            self.events.append({"kind": "rollback_failed", "step": step})
+            return None
+        self.events.append({"kind": "rollback", "step": step,
+                            "restored_step": restored_step, "path": path})
+        return tree["params"], tree["opt_state"], restored_step

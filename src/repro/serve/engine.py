@@ -64,29 +64,45 @@ from repro.train.loop import (make_engine_decode_step,
 
 @dataclass(frozen=True)
 class Request:
-    """One generation request: prompt token ids + budget + sampling."""
+    """One generation request: prompt token ids + budget + sampling.
+
+    ``deadline`` > 0 is a per-request wall-clock budget in seconds
+    (measured from submit/arrival); a request still running past it is
+    cancelled mid-flight — its KV pages go back to the arena and the
+    partial generation comes back with ``status="expired"``.
+    """
 
     rid: int
     prompt: tuple                      # token ids, len >= 1
     max_new_tokens: int = 16
     sampler: SamplerConfig = SamplerConfig()
     arrival: float = 0.0               # seconds after run start
+    deadline: float = 0.0              # seconds; 0 = none
 
 
 @dataclass
 class Completion:
-    """A finished request: generated ids, text, and latency breakdown."""
+    """A finished request: generated ids, text, and latency breakdown.
+
+    ``status``: ``"ok"`` (normal finish), ``"shed"`` (rejected at
+    admission — see ``reason``), ``"expired"`` (deadline blown
+    mid-flight), or ``"evicted"`` (decode watchdog).  Non-ok completions
+    carry whatever tokens were generated before cancellation.
+    """
 
     rid: int
     prompt: tuple
     tokens: list
     text: str
     timing: dict = field(default_factory=dict)   # ttft / latency seconds
+    status: str = "ok"
+    reason: str = ""
 
 
 class _State:
     __slots__ = ("req", "slot", "pos", "fill_pos", "last_tok", "generated",
-                 "t_submit", "t_admit", "t_first", "t_done")
+                 "t_submit", "t_admit", "t_first", "t_done", "t_deadline",
+                 "stall_rounds", "delay_left", "ticks_active")
 
     def __init__(self, req, slot, fill_pos, t_submit, t_admit):
         self.req, self.slot = req, slot
@@ -96,6 +112,10 @@ class _State:
         self.generated = []
         self.t_submit, self.t_admit = t_submit, t_admit
         self.t_first = self.t_done = None
+        self.t_deadline = (t_submit + req.deadline) if req.deadline else None
+        self.stall_rounds = 0          # decode rounds without advancing
+        self.delay_left = 0            # fault: rounds to sit out of decode
+        self.ticks_active = 0          # engine ticks since admission
 
 
 def _pow2(n: int) -> int:
@@ -122,7 +142,8 @@ class Engine:
                  max_len: int = 256, schedule=None, prefill_batch: int = 1,
                  eos_token=None, detokenize=None, block_size: int = 16,
                  n_blocks=None, prefix_cache: bool = True,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, queue_slo: float = 0.0,
+                 watchdog_rounds: int = 0, faults=None):
         cfg = model.cfg
         bad = [k for k, _ in model.runs
                if blk.base_kind(k) not in ("dense", "moe")]
@@ -161,13 +182,26 @@ class Engine:
                       "prefill_tokens": 0, "decode_tokens": 0,
                       "max_active": 0, "admitted": 0,
                       "prefix_hits": 0, "prefix_tokens": 0,
-                      "peak_blocks": 0}
+                      "peak_blocks": 0, "shed": 0, "shed_blocks": 0,
+                      "shed_queue": 0, "expired": 0, "evicted": 0}
         self._rid = 0
+        # --- robustness knobs (all off by default) ---
+        self.queue_slo = float(queue_slo)        # max queue wait, seconds
+        self.watchdog_rounds = int(watchdog_rounds)
+        self.faults = faults                     # runtime.faults.FaultPlan
+        self._starve = None
+        if faults is not None:
+            sv = faults.alloc_starve()
+            if sv is not None:
+                from repro.runtime.faults import StarveState
+                self._starve = StarveState(*sv)
+        self._tick = 0                           # engine ticks (step calls)
+        self._cancelled: list = []               # Completions pending return
 
     # --- request intake -----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                sampler: SamplerConfig = SamplerConfig(),
-               arrival: float = 0.0, rid=None) -> int:
+               arrival: float = 0.0, rid=None, deadline: float = 0.0) -> int:
         """Queue one request (admission control: prompt + budget must fit
         ``max_len`` logical positions).  Returns the request id."""
         prompt = tuple(int(t) for t in prompt)
@@ -181,20 +215,101 @@ class Engine:
             rid, self._rid = self._rid, self._rid + 1
         req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=int(max_new_tokens), sampler=sampler,
-                      arrival=float(arrival))
+                      arrival=float(arrival), deadline=float(deadline))
         self.queue.append((req, time.perf_counter()))
         return rid
+
+    # --- load shedding / cancellation ---------------------------------------
+    def _shed(self, req, t_submit, reason: str) -> None:
+        """Reject a queued request at admission with a reason (surfaced
+        in ``stats`` and as a ``status="shed"`` completion)."""
+        self.stats["shed"] += 1
+        self.stats["shed_blocks" if reason.startswith("blocks")
+                   else "shed_queue"] += 1
+        t = time.perf_counter()
+        self._cancelled.append(Completion(
+            rid=req.rid, prompt=req.prompt, tokens=[], text="",
+            timing={"queued": t - t_submit}, status="shed", reason=reason))
+
+    def _cancel(self, s, status: str, reason: str = "") -> None:
+        """Cancel an in-flight request mid-decode/prefill: its KV pages
+        go back to the arena (through the PR 7 allocator) and the
+        partial generation is returned with the given status."""
+        self.filling = [f for f in self.filling if f is not s]
+        self.active.pop(s.slot, None)
+        self.pool.release(s.req.rid)
+        s.t_done = time.perf_counter()
+        self.stats[status] += 1
+        timing = {"latency": s.t_done - s.t_submit,
+                  "queued": s.t_admit - s.t_submit}
+        if s.t_first is not None:
+            timing["ttft"] = s.t_first - s.t_submit
+        self._cancelled.append(Completion(
+            rid=s.req.rid, prompt=s.req.prompt, tokens=list(s.generated),
+            text=self.detokenize(s.generated), timing=timing,
+            status=status, reason=reason))
+
+    def _infeasible_blocks(self, req) -> bool:
+        """True when the request's worst-case page demand exceeds the
+        whole arena — it could never be admitted, even alone (ignoring
+        best-case prefix sharing: a shed is deterministic, a maybe-hit
+        is not)."""
+        need = -(-(len(req.prompt) + req.max_new_tokens)
+                 // self.pool.block_size)
+        return need > self.pool.n_blocks
+
+    def _enforce_slos(self) -> None:
+        """Expire blown deadlines (wall-clock and fault-injected tick
+        timeouts) and let the watchdog evict stalled decode rows."""
+        t = time.perf_counter()
+        for s in list(self.active.values()) + list(self.filling):
+            ft = (self.faults.req_timeout_ticks(s.req.rid)
+                  if self.faults is not None else 0)
+            if ft and s.ticks_active >= ft:
+                self._cancel(s, "expired",
+                             f"fault req_timeout after {s.ticks_active} "
+                             f"ticks")
+            elif s.t_deadline is not None and t > s.t_deadline:
+                self._cancel(s, "expired",
+                             f"deadline {s.req.deadline:.3f}s exceeded")
+            elif self.watchdog_rounds and \
+                    s.stall_rounds >= self.watchdog_rounds:
+                self._cancel(s, "evicted",
+                             f"watchdog: no progress in {s.stall_rounds} "
+                             f"decode rounds")
 
     # --- one scheduler tick -------------------------------------------------
     def step(self, params, now=None) -> list:
         """Advance prefill for a waiting group (admitting by BLOCK
         budget) or run one decode round; with chunked prefill the two
         alternate.  Returns the requests that finished this tick."""
+        self._tick += 1
+        if self._starve is not None:
+            # fault: hold arena blocks hostage through the reservation
+            # ledger (exactly the accounting a real leak would consume)
+            self._starve.tick(self.pool.alloc_blocks, self._tick)
+        for s in list(self.active.values()) + list(self.filling):
+            s.ticks_active += 1
+        self._enforce_slos()
         while (self.queue and len(self.filling) < self.prefill_batch):
             req, t_submit = self.queue[0]
             if now is not None and req.arrival > now:
                 break
+            if self._infeasible_blocks(req):
+                self.queue.popleft()
+                self._shed(req, t_submit, "blocks: worst-case "
+                           "prompt+budget exceeds the whole arena")
+                continue
             if not self.pool.can_admit(len(req.prompt), req.max_new_tokens):
+                # backpressure, not rejection — unless the queue-latency
+                # SLO says this request has already waited too long
+                if self.queue_slo and \
+                        time.perf_counter() - t_submit > self.queue_slo:
+                    self.queue.popleft()
+                    self._shed(req, t_submit,
+                               f"queue: waited past SLO {self.queue_slo}s "
+                               f"for blocks")
+                    continue
                 break
             self.queue.popleft()
             row, shared_toks = self.pool.alloc(req.rid, req.prompt,
@@ -207,8 +322,11 @@ class Engine:
                 # arrival, not at the up-front submit() call — otherwise
                 # --arrival-rate offsets dominate the percentiles
                 t_submit = max(t_submit, self._run_t0 + req.arrival)
-            self.filling.append(_State(req, row, shared_toks, t_submit,
-                                       time.perf_counter()))
+            st = _State(req, row, shared_toks, t_submit,
+                        time.perf_counter())
+            if self.faults is not None:
+                st.delay_left = self.faults.req_delay_rounds(req.rid)
+            self.filling.append(st)
             self.stats["admitted"] += 1
         if self.filling and (self._fill_turn or not self.active):
             self._prefill_chunk_round(params)
@@ -220,7 +338,11 @@ class Engine:
                                        len(self.active))
         self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                         self.pool.alloc_blocks.n_live)
-        return self._collect_finished()
+        done = self._collect_finished()
+        if self._cancelled:
+            done.extend(self._cancelled)
+            self._cancelled = []
+        return done
 
     def run(self, params, requests=None, *, progress=False) -> list:
         """Drive until every queued request completes.  ``requests`` is
@@ -334,7 +456,18 @@ class Engine:
         temps = np.zeros((B,), np.float32)      # idle rows: greedy, ignored
         topks = np.zeros((B,), np.int32)
         keys = np.zeros((B, 2), np.uint32)
-        states = sorted(self.active.values(), key=lambda s: s.slot)
+        states = []
+        for s in sorted(self.active.values(), key=lambda s: s.slot):
+            if s.delay_left > 0:
+                # fault: this row sits the round out (its slot rides along
+                # with an all-null table, so batch mates are bit-exactly
+                # unaffected); the watchdog counts the stall
+                s.delay_left -= 1
+                s.stall_rounds += 1
+                continue
+            states.append(s)
+        if not states:
+            return
         for s in states:
             tokens[s.slot, 0] = s.last_tok
             steps[s.slot] = s.pos
@@ -352,6 +485,7 @@ class Engine:
             s.last_tok = int(tok[s.slot])
             s.generated.append(s.last_tok)
             s.pos += 1
+            s.stall_rounds = 0
         self.stats["decode_calls"] += 1
         self.stats["decode_tokens"] += len(states)
 
@@ -378,25 +512,47 @@ class Engine:
 
 
 def latency_stats(completions) -> dict:
-    """Throughput + p50/p95/p99 latency summary for a finished run."""
-    if not completions:
-        return {}
-    lat = sorted(c.timing["latency"] for c in completions)
-    ttft = sorted(c.timing["ttft"] for c in completions)
+    """Throughput + p50/p95/p99 latency summary for a finished run.
+
+    Total on any input: empty runs, single samples, and mixed-status
+    completion lists all produce the full key set (zeros where there is
+    nothing to measure), so callers can index unconditionally.
+    Percentiles are computed over the ``status == "ok"`` completions;
+    shed/expired/evicted requests are counted (``n_shed`` /
+    ``n_cancelled``) but never pollute the latency distribution.
+    """
+    completions = list(completions)
+    ok = [c for c in completions
+          if getattr(c, "status", "ok") == "ok" and "latency" in c.timing]
+    out = {
+        "n_requests": len(ok), "n_tokens": 0, "tok_per_s": 0.0,
+        "p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+        "ttft_p50_ms": 0.0, "ttft_p99_ms": 0.0,
+        "n_shed": sum(1 for c in completions
+                      if getattr(c, "status", "ok") == "shed"),
+        "n_cancelled": sum(1 for c in completions
+                           if getattr(c, "status", "ok")
+                           in ("expired", "evicted")),
+    }
+    if not ok:
+        return out
+    lat = sorted(c.timing["latency"] for c in ok)
+    ttft = sorted(c.timing["ttft"] for c in ok if "ttft" in c.timing)
 
     def pct(xs, p):
-        return xs[min(int(p / 100.0 * len(xs)), len(xs) - 1)]
+        # single-sample safe: index clamps into [0, len-1]
+        return xs[min(int(p / 100.0 * len(xs)), len(xs) - 1)] if xs else 0.0
 
-    n_tok = sum(len(c.tokens) for c in completions)
+    n_tok = sum(len(c.tokens) for c in ok)
     span = max(max(lat), 1e-9)
-    return {
-        "n_requests": len(completions), "n_tokens": n_tok,
-        "tok_per_s": n_tok / span,
+    out.update({
+        "n_tokens": n_tok, "tok_per_s": n_tok / span,
         "p50_ms": 1e3 * pct(lat, 50), "p95_ms": 1e3 * pct(lat, 95),
         "p99_ms": 1e3 * pct(lat, 99),
         "ttft_p50_ms": 1e3 * pct(ttft, 50),
         "ttft_p99_ms": 1e3 * pct(ttft, 99),
-    }
+    })
+    return out
 
 
 def suggest_max_batch(cfg, *, n_ep: int = 1, n_esp: int = 1, n_mp: int = 1,

@@ -93,6 +93,49 @@ def make_train_step(model: Model, mesh, dims: ParallelDims,
     return train_step
 
 
+def make_guarded_train_step(model: Model, mesh, dims: ParallelDims,
+                            opt_cfg: AdamWConfig,
+                            schedule: Optional[str] = None):
+    """``make_train_step`` wrapped in guard rails, one compilation.
+
+    Signature grows two traced scalars: ``lr_scale`` (the guard rails'
+    dynamic LR backoff — multiplies the scheduled LR inside
+    ``adamw_update``) and ``grad_fault`` (fault injection: the loss is
+    seeded as ``loss * (1 + grad_fault)`` so every gradient comes out
+    scaled by ``1 + grad_fault`` through the chain rule — one scalar
+    multiply instead of a per-leaf pass; 0.0 is the exact identity and
+    NaN/inf poisons every gradient).  The update is computed
+    unconditionally and *discarded leaf-wise* when the loss or the
+    global grad norm (already computed by AdamW for clipping — no second
+    O(N) pass) goes non-finite: the ``where(finite, new, old)`` select
+    runs *inside* ``adamw_update``'s per-leaf expression (where XLA
+    fuses it with the update writes — a post-hoc tree-select measurably
+    does not fuse and costs an extra memory pass), covering params, both
+    moments, and the step counter, so a skipped step leaves the
+    optimizer bit-identical to never having run.  Metrics gain a
+    ``nonfinite`` flag the host-side policy (``runtime.guards``) folds
+    into its skip/rollback decision.
+
+    On the clean path (``lr_scale=1.0, grad_fault=0.0, finite=True``)
+    every extra op is an IEEE identity, so outputs are bitwise equal to
+    the unguarded step (tests/test_runtime.py locks this down).
+    """
+    def train_step(params, opt_state, batch, lr_scale, grad_fault):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, mesh=mesh, dims=dims,
+                                       schedule=schedule)
+            return loss * (1.0 + grad_fault), metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = adamw_update(params, grads, opt_state,
+                                               opt_cfg, lr_scale=lr_scale,
+                                               finite=jnp.isfinite(loss))
+        finite = om.pop("finite")
+        return params2, opt_state2, {**metrics, **om, "loss": loss,
+                                     "nonfinite": ~finite}
+    return train_step
+
+
 def make_prefill_fn(model: Model, mesh, dims: ParallelDims,
                     schedule: Optional[str] = None):
     def prefill(params, batch):
@@ -175,30 +218,77 @@ def make_engine_decode_step(model: Model, mesh, dims: ParallelDims,
 
 @dataclass
 class Trainer:
-    """End-to-end training driver (used by examples/ and launch/train.py)."""
+    """End-to-end training driver (used by examples/ and launch/train.py).
+
+    ``guards`` (a :class:`repro.runtime.guards.GuardConfig`) opts into
+    the fault-tolerant loop: the guarded step (skip-step + LR backoff),
+    retained-checkpoint rollback through ``ckpt_path`` (kept to
+    ``ckpt_retain`` files), the fp8 wire-overflow fallback, and the
+    ``faults`` injection hooks.  With ``guards=None`` (default) setup
+    and run are byte-for-byte the pre-existing paths.
+    """
     model: Model
     mesh: object
     dims: ParallelDims
     opt_cfg: AdamWConfig
     schedule: Optional[str] = None
     ckpt_path: Optional[str] = None
+    guards: Optional[object] = None       # runtime.guards.GuardConfig
+    faults: Optional[object] = None       # runtime.faults.FaultPlan
+    ckpt_retain: int = 3
 
     def setup(self, key):
         m, mesh, dims = self.model, self.mesh, self.dims
         pspecs = m.specs(mesh, dims)
         p_sh = named_tree(mesh, pspecs)
+        o_sh = named_tree(mesh, opt_state_specs(pspecs))
         params = jax.jit(m.init, out_shardings=p_sh)(key)
-        opt_state = jax.jit(adamw_init,
-                            out_shardings=named_tree(
-                                mesh, opt_state_specs(pspecs)))(params)
-        step_fn = make_train_step(m, mesh, dims, self.opt_cfg, self.schedule)
-        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        opt_state = jax.jit(adamw_init, out_shardings=o_sh)(params)
+        self._p_sh, self._o_sh = p_sh, o_sh
+        if self.guards is None:
+            step_fn = make_train_step(m, mesh, dims, self.opt_cfg,
+                                      self.schedule)
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            from repro.runtime import guards as guardlib
+            self.guard_state = guardlib.GuardState(cfg=self.guards)
+            guardlib.reset_fp8_counter()
+            # monitor installed BEFORE the jit below traces, so fp8
+            # encodes in this step's program carry the saturation counter
+            guardlib.enable_fp8_monitor()
+            if self.faults:
+                factor = self.faults.fp8_sat_factor()
+                if factor:
+                    from repro.core import collectives
+                    collectives.set_fp8_sat_injection(factor)
+            self._step_fn = make_guarded_train_step(
+                m, mesh, dims, self.opt_cfg, self.schedule)
+            self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
         from repro.core import autosched
         self._sched_keys = set(autosched.cache_info())
         return params, opt_state
 
+    def _log_step0(self, metrics):
+        # the first step traced the model: any schedule="auto" MoE
+        # layers have made their (schedule, n_chunks) decisions now
+        from repro.core import autosched
+        summary = autosched.cache_summary(
+            exclude=getattr(self, "_sched_keys", ()))
+        if summary:
+            print(summary, flush=True)
+        el = metrics.get("expert_load")
+        if el is not None and getattr(el, "ndim", 0) == 1 \
+                and el.shape[-1]:
+            vals = " ".join(f"{float(c):.0f}"
+                            for c in jax.device_get(el))
+            print(f"expert load (routed rows/expert, all layers): "
+                  f"[{vals}]", flush=True)
+
     def run(self, params, opt_state, data, n_steps: int, log_every: int = 10,
             ckpt_every: int = 0):
+        if self.guards is not None:
+            return self._run_guarded(params, opt_state, data, n_steps,
+                                     log_every, ckpt_every)
         history = []
         bx = tuple(self.dims.batch_axes)
         t0 = time.perf_counter()
@@ -206,20 +296,7 @@ class Trainer:
             batch = data.sharded_batch(step, self.mesh, bx)
             params, opt_state, metrics = self._step(params, opt_state, batch)
             if step == 0:
-                # the first step traced the model: any schedule="auto" MoE
-                # layers have made their (schedule, n_chunks) decisions now
-                from repro.core import autosched
-                summary = autosched.cache_summary(
-                    exclude=getattr(self, "_sched_keys", ()))
-                if summary:
-                    print(summary, flush=True)
-                el = metrics.get("expert_load")
-                if el is not None and getattr(el, "ndim", 0) == 1 \
-                        and el.shape[-1]:
-                    vals = " ".join(f"{float(c):.0f}"
-                                    for c in jax.device_get(el))
-                    print(f"expert load (routed rows/expert, all layers): "
-                          f"[{vals}]", flush=True)
+                self._log_step0(metrics)
             if step % log_every == 0 or step == n_steps - 1:
                 # vector metrics (e.g. expert_load) are step-0 diagnostics,
                 # not per-step scalars — keep the history float-only
@@ -236,4 +313,81 @@ class Trainer:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(self.ckpt_path,
                                 {"params": params, "opt": opt_state}, step)
+        return params, opt_state, history
+
+    def _run_guarded(self, params, opt_state, data, n_steps: int,
+                     log_every: int = 10, ckpt_every: int = 0):
+        """The fault-tolerant loop: guarded step -> observe -> (apply |
+        skip | rollback), snapshots on clean steps, fp8 fallback swap."""
+        from repro.core import autosched
+        from repro.runtime import guards as guardlib
+        from repro.runtime.rollback import RollbackManager
+        from repro.checkpoint.ckpt import CheckpointStore
+
+        state = self.guard_state
+        mgr = None
+        if self.ckpt_path:
+            store = CheckpointStore(self.ckpt_path, retain=self.ckpt_retain,
+                                    faults=self.faults)
+            mgr = RollbackManager(store, shardings={
+                "params": self._p_sh, "opt_state": self._o_sh})
+            # anchor before step 0: a streak in the first interval must
+            # have somewhere to roll back to
+            mgr.snapshot(params, opt_state, 0)
+
+        history = []
+        bx = tuple(self.dims.batch_axes)
+        t0 = time.perf_counter()
+        for step in range(n_steps):
+            batch = data.sharded_batch(step, self.mesh, bx)
+            gf = self.faults.grad_fault(step) if self.faults else 0.0
+            # donated-in params/opt_state come back as the OLD values on a
+            # skipped step (the jitted where-select), so unconditional
+            # reassignment is correct either way
+            params, opt_state, metrics = self._step(
+                params, opt_state, batch, state.lr_scale, gf)
+            loss = float(metrics["loss"])
+            action = state.observe(step, loss, bool(metrics["nonfinite"]))
+            if step == 0:
+                self._log_step0(metrics)
+            if action == guardlib.ROLLBACK:
+                res = mgr.rollback(step) if mgr is not None else None
+                if res is None:
+                    # nothing restorable: limp on with the backed-off LR
+                    state.record_rollback(step, None)
+                else:
+                    params, opt_state, rstep = res
+                    state.record_rollback(step, rstep)
+                    print(f"step {step:5d}  ROLLBACK -> re-anchored to "
+                          f"checkpoint step {rstep}", flush=True)
+            elif action == guardlib.SKIP:
+                print(f"step {step:5d}  SKIPPED (non-finite, streak "
+                      f"{state.streak}, lr_scale {state.lr_scale:.3g})",
+                      flush=True)
+            if state.check_fp8():
+                # fp8 wire overflow: clamp every wire decision up to the
+                # fallback dtype and re-jit — the retrace re-consults
+                # autosched.decide under the new ceiling (cheap plan
+                # swap; params/opt state untouched)
+                autosched.set_wire_ceiling(state.cfg.fp8_fallback)
+                n = autosched.invalidate("fp8 wire overflow fallback")
+                self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+                print(f"fp8 wire overflow (sat rate "
+                      f"{guardlib.fp8_sat_rate():.2e}): falling back to "
+                      f"{state.cfg.fp8_fallback} wire "
+                      f"({n} cached decisions invalidated)", flush=True)
+            if step % log_every == 0 or step == n_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()
+                     if getattr(v, "ndim", 0) == 0}
+                m["step"] = step
+                m["wall_s"] = time.perf_counter() - t0
+                m["lr_scale"] = state.lr_scale
+                history.append(m)
+                print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                      f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "
+                      f"lr {m['lr']:.2e}", flush=True)
+            if mgr is not None and ckpt_every and step and \
+                    step % ckpt_every == 0 and action == guardlib.OK:
+                mgr.snapshot(params, opt_state, step)
+        print(state.summary(), flush=True)
         return params, opt_state, history

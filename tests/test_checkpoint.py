@@ -114,3 +114,62 @@ def test_shardings_and_step_roundtrip(tmp_path):
     out2, _ = load_checkpoint(path, shardings={
         "a": sh, "b": [None, (None, None)]})
     assert isinstance(out2["a"], jax.Array)
+
+
+# --- corruption handling (PR 8) ----------------------------------------------
+
+def test_truncated_file_clean_diagnostic(tmp_path):
+    """A partially-written checkpoint raises CheckpointCorruptError with
+    the path named — never a raw zipfile/np.load traceback three
+    subsystems later."""
+    from repro.checkpoint import CheckpointCorruptError
+
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"w": np.arange(64, dtype=np.float32)}, step=3)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CheckpointCorruptError, match="unreadable"):
+        load_checkpoint(path)
+
+
+def test_bitflipped_leaf_named_in_diagnostic(tmp_path):
+    """A flipped bit in leaf data fails the crc manifest and the error
+    names the corrupt key."""
+    from repro.checkpoint import CheckpointCorruptError
+
+    path = os.path.join(tmp_path, "ck.npz")
+    big = np.arange(4096, dtype=np.float32)
+    save_checkpoint(path, {"params": {"embed": big}}, step=1)
+    from repro.runtime import FaultPlan
+    FaultPlan.parse("ckpt_bitflip@save=1", seed=0).flip_bit(path)
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(path)
+
+
+def test_store_falls_back_to_previous_retained(tmp_path):
+    """CheckpointStore.restore walks newest -> oldest past a corrupt
+    newest file: one retained step of progress lost, never the run."""
+    from repro.checkpoint import CheckpointStore
+
+    store = CheckpointStore(os.path.join(tmp_path, "run.npz"), retain=3)
+    for s in (2, 4, 6):
+        store.save({"w": np.full((8,), s, np.float32)}, s)
+    from repro.runtime import FaultPlan
+    FaultPlan.parse("ckpt_bitflip@save=1", seed=5).flip_bit(store.path_of(6))
+    tree, step, path = store.restore()
+    assert step == 4 and path.endswith(".step00000004.npz")
+    np.testing.assert_array_equal(tree["w"], np.full((8,), 4, np.float32))
+
+
+def test_store_save_is_atomic(tmp_path):
+    """No *.tmp litter after saves; the newest file always verifies."""
+    from repro.checkpoint import CheckpointStore
+
+    store = CheckpointStore(str(tmp_path), retain=2)
+    for s in (1, 2, 3):
+        store.save({"w": np.arange(16, dtype=np.float32) * s}, s)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert store.steps() == [2, 3]
+    tree, step, _ = store.restore()
+    assert step == 3

@@ -1,0 +1,395 @@
+"""Fault-tolerance layer tests (PR 8): fault-plan parsing, the guarded
+train step's bitwise clean-path parity + skip semantics, the GuardState
+policy machine, checkpoint rollback through the retained store, the fp8
+wire-overflow fallback, and serve-side allocator starvation.
+
+The back-compat contract locked down here: with guards ON and no fault
+firing, every output is BITWISE identical to the unguarded step — the
+guard rails may never perturb a healthy run.
+"""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import MoEConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.mesh import ParallelDims, make_mesh
+from repro.runtime import (OK, ROLLBACK, SKIP, FaultPlan, GuardConfig,
+                           GuardState, RollbackManager, StarveState)
+from repro.train import make_train_step
+from repro.train.loop import Trainer, make_guarded_train_step
+
+OPT = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+
+
+def _setup(dtype="float32"):
+    cfg = ModelConfig(
+        name="rt-test", arch_type="moe", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64, rope_theta=1e4,
+        moe=MoEConfig(d_model=32, d_ff=64, n_experts=4, top_k=2,
+                      capacity_factor=2.0, schedule="s1"),
+        moe_period=1, remat=False, dtype=dtype)
+    model = build_model(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                     cfg.vocab_size)}
+    return model, mesh, dims, params, opt, batch
+
+
+def _bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+# --- fault plan ---------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_parse_atoms(self):
+        plan = FaultPlan.parse(
+            "nan_grad@step=5-8;fp8_sat@factor=64;ckpt_bitflip@save=2;"
+            "req_delay@rid=1,rounds=6;req_timeout@rid=2,ticks=4;"
+            "alloc_starve@tick=1,hold=8,rounds=5", seed=7)
+        assert len(plan.specs) == 6 and bool(plan) and plan.seed == 7
+        assert math.isnan(plan.grad_fault(5))
+        assert math.isnan(plan.grad_fault(8))
+        assert plan.grad_fault(4) == 0.0 and plan.grad_fault(9) == 0.0
+        assert plan.fp8_sat_factor() == 64.0
+        assert plan.ckpt_corrupts(2) and not plan.ckpt_corrupts(1)
+        assert plan.req_delay_rounds(1) == 6 and plan.req_delay_rounds(0) == 0
+        assert plan.req_timeout_ticks(2) == 4 and plan.req_timeout_ticks(1) == 0
+        assert plan.alloc_starve() == (1, 8, 5)
+
+    def test_empty_and_single_step(self):
+        empty = FaultPlan.parse("")
+        assert not empty and empty.grad_fault(0) == 0.0
+        assert empty.fp8_sat_factor() == 0.0 and empty.alloc_starve() is None
+        one = FaultPlan.parse("nan_grad@step=3")
+        assert math.isnan(one.grad_fault(3)) and one.grad_fault(2) == 0.0
+
+    def test_inf_value(self):
+        plan = FaultPlan.parse("nan_grad@step=1,value=inf")
+        assert math.isinf(plan.grad_fault(1))
+
+    def test_parse_errors(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultPlan.parse("cosmic_ray@step=1")
+        with pytest.raises(ValueError, match="key=val"):
+            FaultPlan.parse("nan_grad@5")
+
+    def test_summary_roundtrips(self):
+        text = "nan_grad@step=5;fp8_sat@factor=64"
+        plan = FaultPlan.parse(text)
+        assert FaultPlan.parse(plan.summary()).specs == plan.specs
+
+    def test_flip_bit_deterministic(self, tmp_path):
+        p = os.path.join(tmp_path, "blob.bin")
+        data = bytes(range(256)) * 64
+        for _ in range(2):
+            with open(p, "wb") as f:
+                f.write(data)
+            off = FaultPlan.parse("ckpt_bitflip@save=1", seed=3).flip_bit(p)
+        assert 0 < off < len(data)
+        with open(p, "rb") as f:
+            flipped = f.read()
+        diff = [i for i in range(len(data)) if data[i] != flipped[i]]
+        assert diff == [off]
+
+
+# --- guard state machine ------------------------------------------------------
+
+class TestGuardState:
+    def test_skip_backoff_then_rollback(self):
+        st = GuardState(cfg=GuardConfig(max_skips=3, lr_backoff=0.5))
+        assert st.observe(0, 1.0, False) == OK
+        assert st.observe(1, float("nan"), True) == SKIP
+        assert st.observe(2, float("nan"), True) == SKIP
+        assert st.lr_scale == 0.25
+        assert st.observe(3, float("nan"), True) == ROLLBACK
+        assert st.counters["skipped"] == 3
+        st.record_rollback(3, restored_step=0)
+        assert st.streak == 0 and st.counters["rollbacks"] == 1
+
+    def test_lr_recovers_on_clean_steps(self):
+        st = GuardState(cfg=GuardConfig(max_skips=5, lr_backoff=0.5,
+                                        lr_recover=2.0))
+        st.observe(0, float("nan"), True)
+        st.observe(1, float("nan"), True)
+        assert st.lr_scale == 0.25
+        st.observe(2, 1.0, False)
+        st.observe(3, 1.0, False)
+        assert st.lr_scale == 1.0          # capped at 1.0
+
+    def test_rollback_unavailable_counted(self):
+        st = GuardState()
+        st.record_rollback(4, restored_step=None)
+        assert st.counters["rollback_unavailable"] == 1
+        assert st.counters["rollbacks"] == 0
+
+    def test_spike_detector(self):
+        st = GuardState(cfg=GuardConfig(spike_min=8, spike_z=10.0))
+        for i in range(10):
+            assert st.observe(i, 5.0 + 0.01 * (i % 3), False) == OK
+        assert st.observe(10, 50.0, False) == ROLLBACK
+        assert st.counters["loss_spikes"] == 1
+        # the spike is never folded into the window: the next spike at
+        # the same level still fires
+        st.record_rollback(10, restored_step=5)
+        for i in range(11, 20):
+            st.observe(i, 5.0, False)
+        assert st.observe(20, 50.0, False) == ROLLBACK
+
+    def test_spike_needs_history(self):
+        st = GuardState(cfg=GuardConfig(spike_min=8))
+        for i in range(5):
+            st.observe(i, 1.0, False)
+        assert st.observe(5, 1000.0, False) == OK    # < spike_min history
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            GuardConfig(max_skips=0)
+        with pytest.raises(ValueError):
+            GuardConfig(lr_backoff=0.0)
+
+
+# --- guarded step: bitwise parity + skip semantics ----------------------------
+
+class TestGuardedStep:
+    @pytest.fixture(scope="class")
+    def ctx(self):
+        model, mesh, dims, params, opt, batch = _setup()
+        plain = jax.jit(make_train_step(model, mesh, dims, OPT, "s1"))
+        guarded = jax.jit(make_guarded_train_step(model, mesh, dims, OPT,
+                                                  "s1"))
+        return plain, guarded, params, opt, batch
+
+    def test_clean_path_bitwise_parity(self, ctx):
+        """Guards on, nothing firing: params, opt state (incl. the step
+        counter), and loss are bit-identical to the unguarded step."""
+        plain, guarded, params, opt, batch = ctx
+        p1, o1, m1 = plain(params, opt, batch)
+        p2, o2, m2 = guarded(params, opt, batch, jnp.float32(1.0),
+                             jnp.float32(0.0))
+        assert _bitwise_equal(p1, p2)
+        assert _bitwise_equal(o1, o2)
+        assert np.asarray(m1["loss"]).tobytes() == \
+            np.asarray(m2["loss"]).tobytes()
+        assert not bool(m2["nonfinite"])
+
+    def test_nan_fault_skips_bit_identically(self, ctx):
+        """A poisoned step returns the INPUT params/opt state untouched —
+        including the optimizer step counter — and raises the flag."""
+        _, guarded, params, opt, batch = ctx
+        p, o, m = guarded(params, opt, batch, jnp.float32(1.0),
+                          jnp.float32(float("nan")))
+        assert bool(m["nonfinite"])
+        assert _bitwise_equal(p, params)
+        assert _bitwise_equal(o, opt)
+        assert int(o["step"]) == int(opt["step"])
+
+    def test_inf_fault_also_skips(self, ctx):
+        _, guarded, params, opt, batch = ctx
+        p, o, m = guarded(params, opt, batch, jnp.float32(1.0),
+                          jnp.float32(float("inf")))
+        assert bool(m["nonfinite"]) and _bitwise_equal(p, params)
+
+    def test_lr_scale_shrinks_update(self, ctx):
+        plain, guarded, params, opt, batch = ctx
+        p_full, _, _ = plain(params, opt, batch)
+        p_half, _, m = guarded(params, opt, batch, jnp.float32(0.5),
+                               jnp.float32(0.0))
+        assert not bool(m["nonfinite"])
+        d_full = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+                     for a, b in zip(jax.tree.leaves(p_full),
+                                     jax.tree.leaves(params)))
+        d_half = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+                     for a, b in zip(jax.tree.leaves(p_half),
+                                     jax.tree.leaves(params)))
+        assert 0 < d_half < d_full
+
+
+def test_adamw_finite_mask_unit():
+    """The fused select in adamw_update, in isolation: finite=True is
+    bit-identical to no mask; finite=False is bit-identical to no-op."""
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) * 0.1}
+    grads = {"w": jnp.full((2, 3), 0.5, jnp.float32)}
+    state = adamw_init(params)
+    p_ref, s_ref, _ = adamw_update(params, grads, state, OPT)
+    p_on, s_on, om = adamw_update(params, grads, state, OPT,
+                                  finite=jnp.bool_(True))
+    assert bool(om["finite"])
+    assert _bitwise_equal(p_ref, p_on) and _bitwise_equal(s_ref, s_on)
+    bad = {"w": grads["w"].at[0, 0].set(jnp.nan)}
+    p_off, s_off, om2 = adamw_update(params, bad, state, OPT,
+                                     finite=jnp.bool_(True))
+    assert not bool(om2["finite"])        # gnorm went NaN -> masked out
+    assert _bitwise_equal(p_off, params) and _bitwise_equal(s_off, state)
+
+
+# --- checkpoint store + rollback ----------------------------------------------
+
+class TestRollback:
+    def _tree(self, v):
+        return {"params": {"w": np.full((3,), v, np.float32)},
+                "opt_state": {"step": np.int32(int(v))}}
+
+    def test_retain_prunes_oldest(self, tmp_path):
+        from repro.checkpoint import CheckpointStore
+        store = CheckpointStore(os.path.join(tmp_path, "run.npz"), retain=2)
+        for s in (1, 2, 3):
+            store.save(self._tree(s), s)
+        assert store.steps() == [2, 3]
+
+    def test_rollback_falls_back_over_corrupt(self, tmp_path):
+        from repro.checkpoint import CheckpointStore
+        faults = FaultPlan.parse("ckpt_bitflip@save=3", seed=1)
+        store = CheckpointStore(os.path.join(tmp_path, "run.npz"),
+                                retain=3, faults=faults)
+        mgr = RollbackManager(store)
+        for s in (1, 2, 3):                 # 3rd save is bit-flipped
+            mgr.snapshot(self._tree(s)["params"],
+                         self._tree(s)["opt_state"], s)
+        params, opt_state, restored = mgr.rollback(5)
+        assert restored == 2                # newest intact checkpoint
+        np.testing.assert_array_equal(params["w"],
+                                      np.full((3,), 2, np.float32))
+
+    def test_rollback_none_when_empty(self, tmp_path):
+        from repro.checkpoint import CheckpointStore
+        mgr = RollbackManager(CheckpointStore(str(tmp_path)))
+        assert mgr.rollback(1) is None
+
+
+# --- Trainer end-to-end -------------------------------------------------------
+
+class TestTrainerGuarded:
+    def test_nan_injection_recovers(self, tmp_path):
+        """The acceptance run: NaN grads at steps 5-7 with max_skips=2 ->
+        skips, one rollback re-anchoring to a retained checkpoint, and a
+        finite final loss; retained files pruned to k."""
+        from repro.data import DataConfig, SyntheticLM
+        model, mesh, dims, params, opt, _ = _setup()
+        tr = Trainer(model, mesh, dims, OPT, schedule="s1",
+                     ckpt_path=os.path.join(tmp_path, "run.npz"),
+                     guards=GuardConfig(max_skips=2),
+                     faults=FaultPlan.parse("nan_grad@step=5-7"),
+                     ckpt_retain=2)
+        params, opt = tr.setup(jax.random.PRNGKey(0))
+        data = SyntheticLM(DataConfig(vocab_size=64, seq_len=16,
+                                      global_batch=2))
+        params, opt, hist = tr.run(params, opt, data, 12, log_every=4,
+                                   ckpt_every=3)
+        gs = tr.guard_state
+        assert gs.counters["skipped"] == 3
+        assert gs.counters["rollbacks"] >= 1
+        assert math.isfinite(hist[-1]["loss"])
+        ckpts = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+        assert 1 <= len(ckpts) <= 2
+
+    def test_guarded_clean_run_matches_plain(self):
+        """Guards on, no faults: the whole training run is bitwise the
+        run that never had guards."""
+        from repro.data import DataConfig, SyntheticLM
+        model, mesh, dims, *_ = _setup()
+        data = SyntheticLM(DataConfig(vocab_size=64, seq_len=16,
+                                      global_batch=2))
+        finals = []
+        for guards in (None, GuardConfig()):
+            tr = Trainer(model, mesh, dims, OPT, schedule="s1",
+                         guards=guards)
+            p, o = tr.setup(jax.random.PRNGKey(0))
+            p, o, hist = tr.run(p, o, data, 4, log_every=4)
+            finals.append((p, hist[-1]["loss"]))
+        assert _bitwise_equal(finals[0][0], finals[1][0])
+        assert finals[0][1] == finals[1][1]
+
+
+# --- fp8 overflow fallback ----------------------------------------------------
+
+@pytest.fixture
+def fp8_clean():
+    """Reset every process-wide fp8/wire-ceiling global around the test."""
+    from repro.core import autosched, collectives
+    from repro.runtime import disable_fp8_monitor, reset_fp8_counter
+    yield
+    collectives.set_fp8_sat_injection(0.0)
+    autosched.set_wire_ceiling(None)
+    disable_fp8_monitor()
+    reset_fp8_counter()
+
+
+class TestFp8Fallback:
+    def test_monitor_counts_injected_saturation(self, fp8_clean):
+        from repro.core.collectives import (CommConfig, set_fp8_sat_injection,
+                                            wire_encode)
+        from repro.runtime import (enable_fp8_monitor, fp8_sat_counts,
+                                   fp8_sat_rate, reset_fp8_counter)
+        comm = CommConfig(wire_dtype="fp8_e4m3")
+        x = jnp.linspace(-3.0, 3.0, 64).reshape(4, 16)
+        reset_fp8_counter()
+        enable_fp8_monitor()
+        # fresh lambdas: the injection factor is read at TRACE time, so
+        # each phase needs its own trace (jit caches per function object)
+        jax.block_until_ready(jax.jit(lambda a: wire_encode(a, comm))(x))
+        sat0, tot0 = fp8_sat_counts()
+        assert tot0 == 64 and sat0 == 0      # absmax scaling: none saturate
+        set_fp8_sat_injection(64.0)
+        reset_fp8_counter()
+        jax.block_until_ready(jax.jit(lambda a: wire_encode(a, comm))(x))
+        sat1, tot1 = fp8_sat_counts()
+        assert tot1 == 64 and sat1 > 32      # scales shrunk 64x: most clip
+        assert fp8_sat_rate() > 0.5
+
+    def test_check_fp8_fires_once_and_sets_ceiling(self, fp8_clean):
+        from repro.core import autosched
+        from repro.runtime.guards import _SAT
+        st = GuardState(cfg=GuardConfig(fp8_sat_threshold=1e-3))
+        _SAT["sat"], _SAT["total"] = 500, 1000
+        assert st.check_fp8()
+        assert not st.check_fp8()            # one-shot
+        assert st.counters["fp8_fallbacks"] == 1
+        # what the trainer does with the signal:
+        autosched.set_wire_ceiling(st.cfg.fp8_fallback)
+        assert autosched.clamp_wire("fp8_e4m3") == "bf16"
+        assert autosched.clamp_wire("f32") == "f32"   # never narrows
+
+    def test_wire_ceiling_validation(self, fp8_clean):
+        from repro.core import autosched
+        with pytest.raises(ValueError):
+            autosched.set_wire_ceiling("int4")
+        autosched.set_wire_ceiling(None)
+        assert autosched.clamp_wire("fp8_e4m3") == "fp8_e4m3"
+
+
+# --- serve-side starvation ----------------------------------------------------
+
+def test_starve_state_reserve_release():
+    from repro.serve.kvcache import BlockAllocator
+    alloc = BlockAllocator(n_blocks=16, block_size=8)
+    st = StarveState(start=1, hold=10, rounds=3)
+    st.tick(alloc, 0)
+    assert alloc.available == 16            # not started yet
+    st.tick(alloc, 1)
+    assert st.active and alloc.available == 6
+    for t in (2, 3, 4):
+        st.tick(alloc, t)
+    assert st.done and alloc.available == 16
+    st.tick(alloc, 5)                        # done: never re-fires
+    assert alloc.available == 16
+    alloc.check()

@@ -466,3 +466,135 @@ class TestMultiDevice:
             timeout=900)
         assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
         assert "SERVE MULTIDEV OK" in r.stdout
+
+
+class TestServeRobustness:
+    """PR 8: deadlines, shedding, the decode watchdog, fault injection,
+    and the chaos contract — injected faults only ever touch their
+    target request; everything else finishes bitwise identical to a
+    fault-free run."""
+
+    def _engine(self, moe_setup, **kw):
+        _, model, mesh, dims, _ = moe_setup
+        kw.setdefault("max_batch", 4)
+        kw.setdefault("max_len", 64)
+        kw.setdefault("prefix_cache", False)
+        return Engine(model, mesh, dims, **kw)
+
+    def _run(self, moe_setup, n=4, gen=6, **kw):
+        cfg, _, _, _, params = moe_setup
+        eng = self._engine(moe_setup, **kw)
+        for prompt, g in _prompts(cfg, [(6, gen)] * n, seed=11):
+            eng.submit(prompt, g)
+        done = sorted(eng.run(params), key=lambda c: c.rid)
+        return eng, done
+
+    def test_chaos_unaffected_requests_bitwise(self, moe_setup):
+        """req 1 force-expired, req 2 stalled into the watchdog, the
+        arena starved for 4 ticks — reqs 0 and 3 must still produce the
+        exact fault-free token streams, and the allocator must balance."""
+        from repro.runtime import FaultPlan
+        _, ref = self._run(moe_setup)
+        faults = FaultPlan.parse(
+            "req_timeout@rid=1,ticks=3;req_delay@rid=2,rounds=999;"
+            "alloc_starve@tick=1,hold=9999,rounds=4")
+        eng, done = self._run(moe_setup, faults=faults, watchdog_rounds=5)
+        by = {c.rid: c for c in done}
+        assert by[1].status == "expired" and "tick" in by[1].reason
+        assert by[2].status == "evicted" and "watchdog" in by[2].reason
+        for rid in (0, 3):
+            assert by[rid].status == "ok"
+            assert by[rid].tokens == ref[rid].tokens
+        assert eng.stats["expired"] == 1 and eng.stats["evicted"] == 1
+        eng.pool.alloc_blocks.check()
+        assert eng.pool.n_live == 0          # cancelled pages all freed
+
+    def test_deadline_expiry_frees_pages(self, moe_setup):
+        """A wall-clock deadline of ~0 expires every request mid-flight;
+        their pages return to the arena."""
+        cfg, _, _, _, params = moe_setup
+        eng = self._engine(moe_setup)
+        for prompt, g in _prompts(cfg, [(6, 8)] * 3, seed=2):
+            eng.submit(prompt, g, deadline=1e-6)
+        done = eng.run(params)
+        assert len(done) == 3
+        assert all(c.status == "expired" for c in done)
+        assert all("deadline" in c.reason for c in done)
+        eng.pool.alloc_blocks.check()
+        assert eng.pool.n_live == 0
+
+    def test_infeasible_request_shed_at_admission(self, moe_setup):
+        """A request whose worst-case page need exceeds the whole arena
+        is shed immediately (it could never be admitted) — with a reason,
+        not a hang."""
+        cfg, _, _, _, params = moe_setup
+        eng = self._engine(moe_setup, max_batch=2, max_len=64,
+                           n_blocks=2, block_size=16)
+        # passes the max_len check but could never fit the 2-page arena
+        rid_big = eng.submit(list(range(1, 7)), 40)
+        rid_ok = eng.submit(list(range(1, 7)), 4)
+        done = {c.rid: c for c in eng.run(params)}
+        assert done[rid_big].status == "shed"
+        assert done[rid_big].reason.startswith("blocks")
+        assert done[rid_ok].status == "ok" and done[rid_ok].tokens
+        assert eng.stats["shed_blocks"] == 1
+
+    def test_queue_slo_sheds_waiting_request(self, moe_setup):
+        """With the pool pinned full and a ~0 queue SLO, a waiting
+        request is shed instead of backpressuring forever."""
+        cfg, _, _, _, params = moe_setup
+        eng = self._engine(moe_setup, max_batch=1, max_len=64,
+                           queue_slo=1e-6)
+        prompts = _prompts(cfg, [(6, 8), (6, 8)], seed=4)
+        for prompt, g in prompts:
+            eng.submit(prompt, g)
+        done = sorted(eng.run(params), key=lambda c: c.rid)
+        statuses = sorted(c.status for c in done)
+        assert statuses == ["ok", "shed"]
+        shed = next(c for c in done if c.status == "shed")
+        assert shed.reason.startswith("queue")
+        assert eng.stats["shed_queue"] == 1
+
+    def test_starvation_recovers(self, moe_setup):
+        """Allocator starvation (blocks held hostage for a few ticks)
+        delays admission but loses nothing: every request completes ok
+        once the blocks come back."""
+        from repro.runtime import FaultPlan
+        faults = FaultPlan.parse("alloc_starve@tick=1,hold=9999,rounds=3")
+        eng, done = self._run(moe_setup, n=3, faults=faults)
+        assert [c.status for c in done] == ["ok"] * 3
+        assert all(c.tokens for c in done)
+        eng.pool.alloc_blocks.check()
+
+    def test_latency_stats_total_function(self, moe_setup):
+        """Hardened latency_stats: empty, all-shed, and single-sample
+        inputs all yield the full key set without dividing by zero."""
+        from repro.serve.engine import Completion
+
+        keys = {"n_requests", "n_tokens", "tok_per_s", "p50_ms", "p95_ms",
+                "p99_ms", "ttft_p50_ms", "ttft_p99_ms", "n_shed",
+                "n_cancelled"}
+        empty = latency_stats([])
+        assert set(empty) == keys and empty["n_requests"] == 0
+        assert empty["tok_per_s"] == 0.0
+
+        shed = Completion(rid=0, prompt=(), tokens=[], text="",
+                          timing={"queued": 0.1}, status="shed",
+                          reason="blocks")
+        s = latency_stats([shed])
+        assert s["n_shed"] == 1 and s["n_requests"] == 0
+
+        one = Completion(rid=1, prompt=(1,), tokens=[5, 6], text="",
+                         timing={"latency": 0.2, "ttft": 0.05,
+                                 "queued": 0.0})
+        s1 = latency_stats([one, shed])
+        assert s1["n_requests"] == 1 and s1["n_tokens"] == 2
+        assert s1["p50_ms"] == s1["p99_ms"] == pytest.approx(200.0)
+        assert s1["ttft_p50_ms"] == pytest.approx(50.0)
+
+        evicted = Completion(rid=2, prompt=(1,), tokens=[7], text="",
+                             timing={"latency": 0.3, "queued": 0.0},
+                             status="evicted", reason="watchdog")
+        s2 = latency_stats([one, shed, evicted])
+        assert s2["n_cancelled"] == 1
+        assert s2["n_requests"] == 1          # evicted never pollutes p50
