@@ -76,6 +76,10 @@ class ScheduleDecision:
     source: str = "analytic"
     times: tuple = ()
     wire_dtype: str = "f32"
+    #: the process-wide placement epoch this decision was made under
+    #: (see :func:`set_placement`); ``cache_summary`` marks decisions
+    #: from an older epoch as stale.
+    placement_epoch: int = 0
 
     @property
     def body_name(self) -> str:
@@ -95,25 +99,74 @@ _WIRE_CEILING = None
 #: callbacks fired by :func:`invalidate` (observability for plan swaps)
 _INVALIDATION_HOOKS: list = []
 
+#: process-wide expert placement (``repro.core.placement.ExpertPlacement``
+#: or None = uniform) consulted by ``apply_moe`` when
+#: ``MoEConfig.placement == "auto"``, plus a monotone epoch counter so
+#: cached decisions record which placement regime they were made under.
+_PLACEMENT = None
+_PLACEMENT_EPOCH = 0
+
 
 def clear_cache() -> None:
-    """Drop every cached decision (tests, or after remeshing)."""
+    """Drop every cached decision and reset the placement registry
+    (tests, or after remeshing)."""
+    global _PLACEMENT, _PLACEMENT_EPOCH
     _CACHE.clear()
+    _PLACEMENT = None
+    _PLACEMENT_EPOCH = 0
 
 
-def invalidate(reason: str = "") -> int:
-    """Decision-cache invalidation hook: drop every cached decision and
+def invalidate(reason: str = "", shape=None) -> int:
+    """Decision-cache invalidation hook: drop cached decisions and
     notify registered hooks.  Returns the number of entries dropped.
 
-    This is the "cheap plan swap" entry point — after changing something
-    decisions depend on outside the cache key (e.g. the wire ceiling),
-    call this and re-jit; the retrace re-consults :func:`decide`.
+    With ``shape=None`` (the default) every decision is dropped — the
+    "cheap plan swap" entry point: after changing something decisions
+    depend on outside the cache key (e.g. the wire ceiling), call this
+    and re-jit; the retrace re-consults :func:`decide`.  Passing a
+    ``MoELayerShape`` drops only that shape's decisions (every mode /
+    grid / perf-model variant), leaving other layers' lines warm.
     """
-    n = len(_CACHE)
-    _CACHE.clear()
+    if shape is None:
+        n = len(_CACHE)
+        _CACHE.clear()
+    else:
+        drop = [k for k in _CACHE if k[0] == shape]
+        for k in drop:
+            del _CACHE[k]
+        n = len(drop)
     for cb in list(_INVALIDATION_HOOKS):
         cb(reason, n)
     return n
+
+
+def set_placement(placement) -> int:
+    """Install ``placement`` (an ``ExpertPlacement`` or None = uniform)
+    as the process-wide expert placement and bump the placement epoch.
+
+    The decision cache is deliberately NOT flushed — already-jitted
+    steps keep running their traced plans (no re-jit churn); the epoch
+    is part of every new :func:`decide` cache key, so the *next* re-jit
+    (the caller's choice of moment, e.g. ``Trainer``'s rebalance
+    trigger) re-decides under the new placement while
+    :func:`cache_summary` marks the old lines stale in the meantime.
+    Returns the new epoch.
+    """
+    global _PLACEMENT, _PLACEMENT_EPOCH
+    _PLACEMENT = placement
+    _PLACEMENT_EPOCH += 1
+    return _PLACEMENT_EPOCH
+
+
+def current_placement():
+    """The installed ``ExpertPlacement`` (None = uniform) — what
+    ``apply_moe`` resolves ``MoEConfig.placement == "auto"`` to at
+    trace time."""
+    return _PLACEMENT
+
+
+def placement_epoch() -> int:
+    return _PLACEMENT_EPOCH
 
 
 def add_invalidation_hook(cb) -> None:
@@ -170,11 +223,13 @@ def cache_summary(exclude=()) -> str:
             continue
         shape, mode = key[0], key[1]
         cls = " decode" if getattr(shape, "infer", False) else ""
+        ep = d.placement_epoch
+        stale = " STALE" if ep != _PLACEMENT_EPOCH else ""
         lines.append(
             f"autosched[{mode}{cls}] BxL={shape.B}x{shape.L} M={shape.M} "
             f"E={shape.E} ep/esp/mp={shape.n_ep}/{shape.n_esp}/{shape.n_mp}"
             f" -> {d.schedule} x{d.n_chunks} chunks wire={d.wire_dtype}"
-            f" ({d.source})")
+            f" ({d.source} placement-epoch={ep}{stale})")
     return "\n".join(lines)
 
 
@@ -220,8 +275,11 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
         scheds = planlib.measured_schedules(infer=shape.infer)
     else:
         scheds = planlib.analytic_schedules(infer=shape.infer)
+    # The placement epoch is part of the key: after a rebalance
+    # (set_placement) the stale line stays cached (the running jit still
+    # uses it) but any retrace decides afresh under the new placement.
     key = (shape, mode, tuple(chunk_candidates), pm, wire_candidates,
-           scheds)
+           scheds, _PLACEMENT_EPOCH)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
@@ -259,9 +317,116 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
     sched, n_chunks, wire = _norm(ranked[0][0])
     decision = ScheduleDecision(schedule=sched, n_chunks=n_chunks,
                                 source=mode, times=ranked,
-                                wire_dtype=wire)
+                                wire_dtype=wire,
+                                placement_epoch=_PLACEMENT_EPOCH)
     _CACHE[key] = decision
     return decision
+
+
+def decide_placement(shape, loads, *, schedule, n_chunks: int = 1,
+                     candidate=None, perf_model: Optional[PerfModel] = None,
+                     capacity_factor: float = 1.0, top_k: int = 1,
+                     margin: float = 1.05, max_replicas=None):
+    """Score a load-derived expert placement against uniform for one
+    layer shape.
+
+    Builds ``candidate`` (default: ``placement_from_loads`` over the
+    observed per-expert ``loads``), prices the layer's plan both ways
+    with the skew-aware cost model (``PerfModel.t_plan(..., loads=...)``
+    — uniform pays the max-rank load inflation, the placed plan pays
+    its shrunk pool at its own residual imbalance), and returns
+    ``(placement_or_None, t_placed, t_uniform)`` where the placement is
+    ``None`` unless it beats uniform by at least ``margin``.
+    """
+    from repro.core.placement import placement_from_loads
+
+    pm = perf_model or tpu_v5e_model(shape.n_ep, shape.n_esp, shape.n_mp)
+    if candidate is None:
+        candidate = placement_from_loads(
+            loads, shape.n_ep, n_experts=shape.E,
+            capacity_factor=capacity_factor, top_k=top_k,
+            max_replicas=max_replicas, epoch=_PLACEMENT_EPOCH + 1)
+    t_uni = pm.t_plan(planlib.plan_for_shape(schedule, shape, n_chunks),
+                      shape, loads=loads)
+    if candidate is None or candidate.is_identity:
+        return None, t_uni, t_uni
+    t_cand = pm.t_plan(
+        planlib.plan_for_shape(schedule, shape, n_chunks,
+                               placement=candidate), shape, loads=loads)
+    win = t_cand * margin < t_uni
+    return (candidate if win else None), t_cand, t_uni
+
+
+def maybe_rebalance(loads, *, margin: float = 1.05,
+                    capacity_factor: float = 1.0, top_k: int = 1,
+                    perf_model: Optional[PerfModel] = None,
+                    max_replicas=None, infer: bool = False):
+    """The rebalance trigger: derive a placement from the live load EMA,
+    score it against uniform over every compatible cached decision, and
+    install it on a win.
+
+    ``loads`` is the smoothed per-expert load vector (``LoadEMA.value``).
+    Candidate shapes come from :func:`cache_info` — the layers this
+    process has actually decided for (``infer`` selects the decode
+    class).  The candidate must beat uniform by ``margin`` on *every*
+    compatible shape (the placement is process-wide, so a loss anywhere
+    vetoes).  On a win, :func:`set_placement` installs it and the new
+    epoch is returned; if the loads have evened out (identity candidate)
+    while a placement is installed, the placement is cleared (also a new
+    epoch).  Returns None when nothing changes — the caller skips the
+    re-jit entirely.
+    """
+    from repro.core.placement import placement_from_loads
+
+    import numpy as _np
+
+    loads = _np.asarray(loads, dtype=_np.float64)
+    seen, todo = set(), []
+    for key, d in _CACHE.items():
+        shape = key[0]
+        if bool(getattr(shape, "infer", False)) != infer:
+            continue
+        if shape.n_ep <= 1 or shape.E != loads.size:
+            continue
+        sk = (shape, d.schedule, d.n_chunks)
+        if sk in seen:
+            continue
+        seen.add(sk)
+        todo.append(sk)
+    if not todo:
+        return None
+    n_ep = todo[0][0].n_ep
+    cand = placement_from_loads(
+        loads, n_ep, n_experts=int(loads.size),
+        capacity_factor=capacity_factor, top_k=top_k,
+        max_replicas=max_replicas, epoch=_PLACEMENT_EPOCH + 1)
+    if infer and cand.cap_frac < 1.0:
+        # decode layers run drop-free (apply_moe forces cap_frac=1.0),
+        # so score the candidate the way decode will actually run it; a
+        # capacity-shrink-only candidate (no replication) degenerates to
+        # a bare permutation at full capacity — treat as uniform
+        from dataclasses import replace as _dc_replace
+        from repro.core.placement import identity_placement
+        cand = identity_placement(cand.n_experts, n_ep) \
+            if cand.n_phys == cand.n_experts \
+            else _dc_replace(cand, cap_frac=1.0)
+    if cand.is_identity:
+        if _PLACEMENT is not None:
+            return set_placement(None)  # loads evened out: back to uniform
+        return None
+    cur = _PLACEMENT
+    if cur is not None and cur.assignments == cand.assignments \
+            and abs(cur.cap_frac - cand.cap_frac) < 0.05:
+        return None  # already running (close enough to) this placement
+    for shape, sched, nc in todo:
+        if shape.n_ep != n_ep:
+            continue  # placement is per-EP-degree; skip foreign meshes
+        got, _, _ = decide_placement(
+            shape, loads, schedule=sched, n_chunks=nc, candidate=cand,
+            perf_model=perf_model, margin=margin)
+        if got is None:
+            return None
+    return set_placement(cand)
 
 
 def measure_candidates(mesh, dims, cfg, *, tokens: int, d_model: int,

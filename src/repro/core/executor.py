@@ -83,14 +83,49 @@ def _gate_cap(info, spec: str) -> int:
     raise ValueError(f"unknown gate cap spec {spec!r}")
 
 
-class _Ctx:
-    __slots__ = ("info", "wg", "w1", "w3", "w2", "comm", "gate", "dtype")
+class _PlacedTables:
+    """Trace-time constant lookup tables for an ``ExpertPlacement``
+    (tiny int32 arrays; the placement itself never enters jit)."""
 
-    def __init__(self, info, wg, w1, w3, w2, comm, dtype):
+    __slots__ = ("n_phys", "assign", "rep_count", "rep_index", "rep_table")
+
+    def __init__(self, pl):
+        self.n_phys = pl.n_phys
+        self.assign = jnp.asarray(pl.assignments, jnp.int32)     # (R,)
+        self.rep_count = jnp.asarray(pl.rep_count)               # (E,)
+        self.rep_index = jnp.asarray(pl.replica_index)           # (R,)
+        self.rep_table = jnp.asarray(pl.rep_table)               # (E, r*)
+
+
+def _placed_flat(ctx, g, cap: int):
+    """Flat physical-buffer index per (token, choice) under a placement:
+    logical slot ``s`` of expert ``e`` maps round-robin to replica
+    ``s % r_e`` at physical slot ``s // r_e`` — the replica-fractional
+    dispatch split.  ``n_phys * cap`` is the drop sentinel.  Memoized on
+    the GateResult like :meth:`GateResult.flat`."""
+    key = ("placed", cap)
+    if key not in g._flat:
+        t = ctx.placed
+        r = t.rep_count[g.expert_idx]                            # (S, k)
+        phys = t.rep_table[g.expert_idx, g.slot_idx % r]
+        pslot = g.slot_idx // r
+        g._flat[key] = jnp.where(pslot < cap, phys * cap + pslot,
+                                 t.n_phys * cap).astype(jnp.int32)
+    return g._flat[key]
+
+
+class _Ctx:
+    __slots__ = ("info", "wg", "w1", "w3", "w2", "comm", "gate", "dtype",
+                 "placement", "placed")
+
+    def __init__(self, info, wg, w1, w3, w2, comm, dtype, placement=None):
         self.info, self.comm = info, comm
         self.wg, self.w1, self.w3, self.w2 = wg, w1, w3, w2
         self.gate = None     # (GateResult, cap) once the gate stage ran
         self.dtype = dtype   # layer-input dtype (raw-wire decode target)
+        self.placement = placement
+        self.placed = _PlacedTables(placement) \
+            if placement is not None else None
 
 
 def _emit(st, vals, ctx):
@@ -103,12 +138,24 @@ def _emit(st, vals, ctx):
 
     if kind == "gate":
         cap = _gate_cap(info, st.p("cap", "pool"))
-        g = topk_gate(vals[0], ctx.wg, info.gate, cap)
+        if ctx.placed is not None:
+            # placed: cap becomes the per-*physical*-slot capacity; the
+            # gate keeps r_e * cap slots per logical expert (effective
+            # capacity vector) so a replicated hot expert drops less
+            cap = st.p("placed_cap") or ctx.placement.scaled_cap(cap)
+            eff = ctx.placed.rep_count * cap                     # (E,)
+            g = topk_gate(vals[0], ctx.wg, info.gate, eff)
+        else:
+            g = topk_gate(vals[0], ctx.wg, info.gate, cap)
         ctx.gate = (g, cap)
         return ctx.gate
 
     if kind == "dispatch":
         tokens, (g, cap) = vals
+        if ctx.placed is not None:
+            return dispatch(tokens, g.expert_idx, g.slot_idx, cap,
+                            ctx.placed.n_phys, info.kernel,
+                            flat=_placed_flat(ctx, g, cap))
         return dispatch(tokens, g.expert_idx, g.slot_idx, cap, E,
                         info.kernel, flat=g.flat(cap, E))
 
@@ -128,7 +175,8 @@ def _emit(st, vals, ctx):
         d = vals[0]
         if not st.p("fused"):
             # baseline layout: (E, c, M) -> (Ne, El, c, M) EP blocks
-            sb = d.reshape(Ne, E // Ne, d.shape[1], -1)
+            # (first dim may be R physical slots under a placement)
+            sb = d.reshape(Ne, d.shape[0] // Ne, d.shape[1], -1)
             rb = coll.wire_ep_all_to_all(sb, info.ep_axes, comm)
             return coll.to_expert_batch(rb)
         sb = coll.dump_em(d, Ne, Ns)                    # (El, G, c, M)
@@ -165,7 +213,8 @@ def _emit(st, vals, ctx):
         if not st.p("fused"):
             back = coll.wire_ep_all_to_all(
                 coll.from_expert_batch(h, Ne), info.ep_axes, comm)
-            return back.reshape(E, back.shape[2], -1)   # (E, c, M)
+            return back.reshape(back.shape[0] * back.shape[1],
+                                back.shape[2], -1)      # (E|R, c, M)
         y4 = coll.from_expert_batch_em(h, info.combined_group)
         if st.p("saa"):
             return coll.saa_combine_allgather(
@@ -190,7 +239,7 @@ def _emit(st, vals, ctx):
             back = coll.wire_ep_esp_all_to_all(
                 y4, info.ep_axes, info.esp_axes, comm,
                 split_axis=1, concat_axis=1)
-        mine = coll.undump_reduce_em(back, Ne, Ns)      # (E, c, M)
+        mine = coll.undump_reduce_em(back, Ne, Ns)      # (E|R, c, M)
         if not st.p("stack_ag"):
             return mine
         if Nm == 1:
@@ -198,12 +247,14 @@ def _emit(st, vals, ctx):
         else:
             part = coll.wire_all_gather_stacked(
                 mine, tuple(info.mp_axes), Nm, comm, axis=1)
-        return part.reshape(E, -1, part.shape[-1])      # (E, Nm*c, M)
+        return part.reshape(mine.shape[0], -1, part.shape[-1])
 
     if kind == "combine":
         buf, (g, cap) = vals
+        flat = _placed_flat(ctx, g, cap) if ctx.placed is not None \
+            else g.flat(cap, E)
         return combine(buf, g.expert_idx, g.slot_idx, g.weights, cap,
-                       info.kernel, flat=g.flat(cap, E))
+                       info.kernel, flat=flat)
 
     if kind == "slice":
         i, n = st.p("index"), st.p("n")
@@ -216,11 +267,11 @@ def _emit(st, vals, ctx):
         if st.p("mode", "concat") == "concat":
             return (vals[0] if len(vals) == 1
                     else jnp.concatenate(vals, axis=axis))
-        # stack_mp: parts are (E, Nm*cs, M); restore the legacy
+        # stack_mp: parts are (E|R, Nm*cs, M); restore the legacy
         # (mp_rank, chunk, slot) capacity order of the pre-split buffer.
-        parts = [p.reshape(E, Nm, -1, p.shape[-1]) for p in vals]
+        parts = [p.reshape(p.shape[0], Nm, -1, p.shape[-1]) for p in vals]
         stacked = jnp.stack(parts, axis=2)       # (E, Nm, n, cs, M)
-        return stacked.reshape(E, -1, stacked.shape[-1])
+        return stacked.reshape(stacked.shape[0], -1, stacked.shape[-1])
 
     raise ValueError(f"executor: unknown stage kind {kind!r}")
 
@@ -279,14 +330,28 @@ def _emit_grouped(st, vals, ctx):
     # GShard slots are contiguous from 0, so the chunk's routed rows per
     # expert are clip(routed - ci*c, 0, c).
     ci = st.p("chunk_index", 0)
-    routed = jnp.minimum(g.aux["load"], float(cap)).astype(jnp.int32)
-    cnt = jnp.clip(routed - ci * c, 0, c)                       # (E,)
+    if ctx.placed is not None:
+        # placed: rows of logical expert e land round-robin on its
+        # replicas, so physical slot p (replica j of expert a_p) holds
+        # ceil((routed_a - j) / r_a) rows, contiguous from 0
+        t = ctx.placed
+        eff = (t.rep_count * cap).astype(jnp.float32)
+        routed = jnp.minimum(g.aux["load"], eff).astype(jnp.int32)
+        r = t.rep_count[t.assign]
+        cnt_p = jnp.clip((routed[t.assign] - t.rep_index + r - 1) // r,
+                         0, cap)                                 # (R,)
+        cnt = jnp.clip(cnt_p - ci * c, 0, c)
+        nl = t.n_phys // Ne                      # local phys slots/rank
+    else:
+        routed = jnp.minimum(g.aux["load"], float(cap)).astype(jnp.int32)
+        cnt = jnp.clip(routed - ci * c, 0, c)                    # (E,)
+        nl = E // Ne
     # Receive-side ragged metadata: sender g' = (i', j') delivered its
     # rows for OUR local expert el, so the valid-row count of block
     # rb[el, g'] is g''s routed count for global expert i*El + el —
     # exchanged with the dump_em-layout (El, G) counts AlltoAll.
-    snd = jnp.broadcast_to(cnt.reshape(Ne, E // Ne).T[:, :, None],
-                           (E // Ne, Ne, Ns)).reshape(E // Ne, G)
+    snd = jnp.broadcast_to(cnt.reshape(Ne, nl).T[:, :, None],
+                           (nl, Ne, Ns)).reshape(nl, G)
     rcv = coll.ep_esp_all_to_all(snd, info.ep_axes, info.esp_axes,
                                  split_axis=1, concat_axis=1)   # (El, G)
     op = get_op("expert_ffn_ragged", cfg=info.kernel, act=info.act)
@@ -300,10 +365,15 @@ def execute(plan: Plan, x, wg, w1, w3, w2, info):
 
     Same contract as the legacy schedule bodies: ``x`` is this device's
     (S, M) token slice, returns ``(y, aux)`` with aux scalars pmean-ed
-    over the full device group.
+    over the full device group.  Under a placed plan
+    (``plan.placement``) the expert weights must already be the placed
+    physical gather ``w[placement.assignments]`` — ``apply_moe`` does
+    this outside the shard_map, and its take-VJP sums replica weight
+    gradients (the placement's "summed combine").
     """
     order = validate(plan)
-    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None), x.dtype)
+    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None), x.dtype,
+               placement=getattr(plan, "placement", None))
     env = {INPUT: x}
     for st in order:
         env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)

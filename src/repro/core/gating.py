@@ -84,13 +84,17 @@ class GateResult:
         return self._flat[key]
 
 
-def topk_gate(x, wg, cfg: GateConfig, cap: int) -> "GateResult":
+def topk_gate(x, wg, cfg: GateConfig, cap) -> "GateResult":
     """Route tokens to experts.
 
     Args:
       x: (S, M) tokens.
       wg: (M, E) gate weights.
-      cap: per-expert capacity for this token pool.
+      cap: per-expert capacity for this token pool — a python int, or an
+           (E,) int array of per-expert *effective* capacities (an
+           expert replicated r times under an ``ExpertPlacement`` keeps
+           ``r * placed_cap`` slots; the scalar path is bitwise
+           unchanged).
 
     Returns a :class:`GateResult` (unpacks as a 4-tuple):
       expert_idx: (S, k) int32 — chosen expert per (token, choice).
@@ -131,7 +135,13 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int) -> "GateResult":
                                         axis=1)[:, 0]
         load = jnp.sum(onehot, axis=0).astype(jnp.float32)
     slot_idx = slot_flat.reshape(k, S).T.astype(jnp.int32)       # (S, k)
-    kept = slot_idx < cap
+    if isinstance(cap, int):
+        kept = slot_idx < cap
+        cap_f = float(cap)
+    else:                       # (E,) per-expert effective capacities
+        cap_e = jnp.asarray(cap, jnp.int32)
+        kept = slot_idx < cap_e[expert_idx]
+        cap_f = cap_e.astype(jnp.float32)
     weights = jnp.where(kept, gate_w, 0.0).astype(jnp.float32)
 
     # Aux losses (Switch/GShard load balancing + router z-loss).
@@ -144,7 +154,7 @@ def topk_gate(x, wg, cfg: GateConfig, cap: int) -> "GateResult":
     aux = {"aux_loss": aux_loss, "z_loss": z_loss, "load": load,
            # per-expert rows that actually won a slot (= the ragged
            # grouped kernel's group sizes; load is the unclamped demand)
-           "routed": jnp.minimum(load, float(cap)),
+           "routed": jnp.minimum(load, cap_f),
            "drop_frac": 1.0 - jnp.mean(kept.astype(jnp.float32))}
     return GateResult(expert_idx, slot_idx, weights, aux)
 

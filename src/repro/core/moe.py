@@ -14,7 +14,7 @@ calibration.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Optional
 
 import jax
@@ -56,6 +56,10 @@ class MoEConfig:
     comm: CommConfig = CommConfig()  # collective wire format (f32 default;
     #   wire_dtype="auto" lets the autoscheduler pick f32-vs-bf16 jointly
     #   with (schedule, n_chunks); fp8_e4m3 must be requested explicitly)
+    placement: object = None      # expert placement: None (uniform) |
+    #   "auto" (read the live placement from the autosched registry at
+    #   trace time — the rebalance loop's swap point) | a concrete
+    #   ExpertPlacement (forced, e.g. the parity tests)
 
     def gate_config(self) -> GateConfig:
         return GateConfig(
@@ -272,13 +276,33 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         # route chunked requests to the pipelined body of the same schedule
         sched = PIPELINE_OF[sched]
 
+    # Expert placement: "auto" reads the live rebalanced placement from
+    # the autosched registry at trace time (the Trainer/Engine re-jit
+    # after autosched.set_placement, so the swap needs no config churn).
+    # A placement only applies when there is an EP group to remap over
+    # and its geometry matches this layer; the decode fallback body
+    # computes densely and ignores it.
+    pl = cfg.placement
+    if pl == "auto":
+        pl = autosched.current_placement()
+    if pl is not None and (use_fallback or n_ep <= 1
+                           or pl.n_experts != cfg.n_experts
+                           or pl.n_ep != n_ep):
+        pl = None
+    if pl is not None and infer and pl.cap_frac < 1.0:
+        # decode pools are drop-free by contract (shard_pool_capacity
+        # raises cap to cover the pool); keep the replication but not
+        # the capacity shrink, so r_e * cap >= pool always holds
+        pl = _dc_replace(pl, cap_frac=1.0)
+
     info = MoEShardInfo(
         ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
         mp_axes=tuple(dims.mp), n_ep=n_ep, n_esp=n_esp, n_mp=n_mp,
         tokens=s_local, cap=cap, gate=gate_cfg, act=cfg.act, glu=cfg.glu,
         saa_chunks=cfg.saa_chunks, pipeline_chunks=n_chunks,
         kernel=cfg.kernel,
-        comm=CommConfig(wire_dtype=wire, scaling=comm.scaling))
+        comm=CommConfig(wire_dtype=wire, scaling=comm.scaling),
+        placement=pl)
 
     if sched == "dense_decode":
         body = _replicated_body
@@ -298,6 +322,16 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         def body(xt, wg, w1, w3_, w2, info, _base=base):
             return executor.execute(planlib.build_plan(_base, info),
                                     xt, wg, w1, w3_, w2, info)
+    if pl is not None:
+        # Placed-weight gather: physical slot p computes logical expert
+        # assignments[p].  Done outside the shard_map so the take-VJP
+        # scatter-adds replica weight gradients back into the logical
+        # parameters — the placement's "summed combine" for weights.
+        # (R, M, F) shards over the same P(ep, ...) specs: R % n_ep == 0.
+        idx = jnp.asarray(pl.assignments, jnp.int32)
+        gathered = {k: jnp.take(params[k], idx, axis=0)
+                    for k in ("w1", "w2", "w3") if params.get(k) is not None}
+        params = dict(params, **gathered)
     pspecs = moe_param_specs(cfg, mesh, dims)
     w3 = params.get("w3")
     if w3 is None:

@@ -279,13 +279,16 @@ class PerfModel:
 
     # --- plan-IR cost model (repro.core.plan) ------------------------------
     def _t_stage_comm(self, st, s: MoELayerShape, wf: float, n: int,
-                      overlap_hier: bool) -> float:
+                      overlap_hier: bool, etm_scale: float = 1.0) -> float:
         """Seconds one plan stage spends on the fabric (1/n of its
-        payload for a chunk clone; local stages cost zero)."""
-        size = {"blm": s.blm, "etm": s.etm,
+        payload for a chunk clone; local stages cost zero).
+        ``etm_scale`` multiplies every capacity-pool (etm-sized) payload
+        — placement pool shrink and/or max-rank load skew."""
+        etm = s.etm * etm_scale
+        size = {"blm": s.blm, "etm": etm,
                 "blm*esp": s.blm * s.n_esp,
-                "etm*esp": s.etm * s.n_esp,
-                "etm*esp/mp": s.etm * s.n_esp / s.n_mp}.get(st.size, 0.0)
+                "etm*esp": etm * s.n_esp,
+                "etm*esp/mp": etm * s.n_esp / s.n_mp}.get(st.size, 0.0)
         f = (wf if st.wire else 1.0) / n
         if st.kind == "ag_mp":
             ab = self.ag_esp if st.axes and st.axes[0] == "esp" \
@@ -307,11 +310,12 @@ class PerfModel:
             else:
                 t = self.a2a_ep(size * f)
             if st.p("saa") or st.p("stack_ag"):
-                t += self.ag_mp(s.etm * (wf if st.wire else 1.0) / n)
+                t += self.ag_mp(etm * (wf if st.wire else 1.0) / n)
             return t
         return 0.0   # gate/dispatch/combine/splits/slice/merge: local
 
-    def t_plan(self, plan, s: MoELayerShape, wire_dtype=None) -> float:
+    def t_plan(self, plan, s: MoELayerShape, wire_dtype=None,
+               loads=None) -> float:
         """Predicted layer seconds for a schedule plan — the graph the
         executor runs is the graph this walks (one cost-model source of
         truth; the ``autosched`` grids score registry plans through it).
@@ -322,14 +326,31 @@ class PerfModel:
         for the four paper schedules ``t_plan`` reproduces
         ``t_pipelined`` (asserted by ``tests/test_plan_executor.py``).
         ``wire_dtype=None`` keeps the pre-wire scoring (factor 1.0).
+
+        Skew-aware pricing: with a per-expert ``loads`` vector, every
+        capacity-pool term (the etm-sized A2As and the expert FFN) is
+        charged at the *most-loaded EP rank's* share — a synchronized
+        stage runs at the pace of its slowest rank, so a hot expert
+        multiplies the uniform plan's time by max-rank/mean-rank load.
+        A plan carrying an ``ExpertPlacement`` is charged its own rank
+        imbalance (replication spreads the hot expert) times its
+        ``pool_scale`` (the shrunk ``cap_frac`` capacity pool) — this is
+        how ``autosched.decide_placement`` scores placements against the
+        uniform plan.
         """
         wf = self.wire_factor(wire_dtype)
+        pl = getattr(plan, "placement", None)
+        etm_scale = 1.0
+        if pl is not None:
+            etm_scale *= pl.pool_scale(max(int(s.T), 1))
+        if loads is not None and len(loads):
+            etm_scale *= _rank_imbalance(loads, s.n_ep, pl)
         n = max(getattr(plan, "n_chunks", 1), 1)
         overlap_hier = n >= 2
         fixed, per_chunk = 0.0, {}
         for st in plan.stages:
             t = self._t_stage_comm(st, s, wf, n if st.chunk else 1,
-                                   overlap_hier)
+                                   overlap_hier, etm_scale)
             if t == 0.0:
                 continue
             if st.chunk:
@@ -338,7 +359,7 @@ class PerfModel:
             else:
                 fixed += t
         tc = max(per_chunk.values(), default=0.0)
-        tf = self.t_ffn(s, plan.base or plan.name) / n
+        tf = self.t_ffn(s, plan.base or plan.name) / n * etm_scale
         if any(st.kind == "expert_ffn_grouped" for st in plan.stages):
             # ragged grouped-GEMM: compute scales with *routed* tokens
             # (k*B*L rows), not capacity (k*f*B*L slots) — the expected
@@ -401,6 +422,32 @@ class PerfModel:
     def pick(self, s: MoELayerShape) -> str:
         """Algorithm-1 schedule choice (no pipelining considered)."""
         return self.algorithm1(s)
+
+
+def _rank_imbalance(loads, n_ep: int, placement=None) -> float:
+    """max-rank / mean-rank load for a per-expert load vector.
+
+    With a placement, its replication spreads each expert's load across
+    its replicas' ranks (``ExpertPlacement.imbalance``); without one,
+    the canonical block mapping (expert e on rank ``e // (E / n_ep)``)
+    applies.  Degenerate inputs price as balanced (1.0).
+
+    >>> _rank_imbalance([4.0, 1.0, 1.0, 1.0], 4)
+    2.2857142857142856
+    >>> _rank_imbalance([1.0, 1.0, 1.0, 1.0], 2)
+    1.0
+    """
+    if placement is not None:
+        return placement.imbalance(loads)
+    E = len(loads)
+    if n_ep <= 1 or E % n_ep:
+        return 1.0
+    tot = float(sum(loads))
+    if tot <= 0:
+        return 1.0
+    per = E // n_ep
+    ranks = [sum(loads[r * per:(r + 1) * per]) for r in range(n_ep)]
+    return max(ranks) / (tot / n_ep)
 
 
 def fit_alpha_beta(sizes, times) -> AlphaBeta:

@@ -35,6 +35,7 @@ The doctest examples run under
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -127,8 +128,8 @@ class Plan:
     compute term — the baseline redundantly computes all MP copies);
     ``output`` names the stage whose value is the layer output.
     ``chunk_input``/``chunk_output``/``chunk_axis``/``chunk_size``/
-    ``merge`` describe the :func:`split_capacity` region; ``n_chunks``
-    and ``comm`` record what transforms have been applied.
+    ``merge`` describe the :func:`split_capacity` region; ``n_chunks``,
+    ``comm`` and ``placement`` record what transforms have been applied.
     """
 
     name: str
@@ -142,6 +143,7 @@ class Plan:
     chunk_axis: int = 1
     chunk_size: int = 0          # capacity-dim size (for chunk clamping)
     merge: str = "concat"        # "concat" | "stack_mp"
+    placement: object = None     # ExpertPlacement once apply_placement ran
 
     def stage_names(self):
         return tuple(s.name for s in self.stages)
@@ -340,6 +342,73 @@ def apply_wire(plan: Plan, comm) -> Plan:
     return dataclasses.replace(plan, comm=comm)
 
 
+def apply_placement(plan: Plan, placement, *, info=None) -> Plan:
+    """Expert-placement transform: remap the dispatch/combine A2A stages
+    onto a (possibly replicated) physical expert layout and stamp the
+    shrunk per-rank capacity.
+
+    ``placement`` is an ``ExpertPlacement`` (``None`` returns the plan
+    unchanged).  The transform
+
+      * stamps the gate stage with ``placed_cap`` — the per-physical-slot
+        capacity derived from this plan's gate-pool spec via
+        ``placement.scaled_cap`` (aligned to ``lcm(8, n_mp)`` when an
+        ``mp_split`` on the capacity dim follows, so the s2 family's
+        1/N_MP slices stay exact);
+      * marks the dispatch/combine and A2A stages ``placed=True`` (the
+        executor derives buffer geometry from the physical slot count,
+        splits each logical expert's traffic across its replicas
+        round-robin by capacity slot, and gathers each token back from
+        the one replica that computed it — the replica-fractional
+        dispatch / summed combine);
+      * rescales ``chunk_size`` so :func:`split_capacity` keeps slicing
+        the placed buffer exactly.
+
+    Composes with :func:`split_capacity` (apply placement *first*: the
+    chunk clones inherit the stamped params), :func:`apply_wire`, and
+    the pool form of :func:`fuse_grouped`.  The local fused megakernel
+    (single-rank EP) has nothing to remap and is rejected.
+    """
+    if placement is None:
+        return plan
+    gate = next((s for s in plan.stages if s.kind == "gate"), None)
+    if gate is None:
+        raise PlanError(f"plan {plan.name!r}: apply_placement needs a "
+                        "gate stage")
+    if any(s.p("local") for s in plan.stages
+           if s.kind == "expert_ffn_grouped"):
+        raise PlanError(
+            f"plan {plan.name!r}: placement does not compose with the "
+            "local fused megakernel (single-rank EP has nothing to remap)")
+    n_mp = max(int(getattr(info, "n_mp", 1) or 1), 1) if info else 1
+    n_esp = max(int(getattr(info, "n_esp", 1) or 1), 1) if info else 1
+    cap = int(getattr(info, "cap", 0) or 0) if info else 0
+    spec = gate.p("cap", "pool")
+    logical = {"pool": cap, "esp_pool": cap * n_esp,
+               "mp_shard": cap // n_mp}[spec]
+    # s2-family plans mp_split the dispatch buffer's capacity dim *after*
+    # the gate: the placed pool cap must stay divisible by n_mp and the
+    # chunk region slices the 1/N_MP shard.
+    pool_split = any(s.kind == "mp_split" and s.p("axis", 0) == 1
+                     for s in plan.stages)
+    align = (8 * n_mp // math.gcd(8, n_mp)) if pool_split else 8
+    placed_cap = placement.scaled_cap(logical, align=align) if logical \
+        else 0
+    stages = []
+    for s in plan.stages:
+        if s.kind == "gate":
+            s = s.with_params(placed_cap=placed_cap)
+        elif s.kind in ("dispatch", "combine", "dispatch_a2a",
+                        "combine_a2a", "expert_ffn_grouped"):
+            s = s.with_params(placed=True)
+        stages.append(s)
+    chunk_size = plan.chunk_size
+    if chunk_size and placed_cap:
+        chunk_size = placed_cap // n_mp if pool_split else placed_cap
+    return dataclasses.replace(plan, stages=tuple(stages),
+                               placement=placement, chunk_size=chunk_size)
+
+
 def fuse_grouped(plan: Plan, *, local: bool = False) -> Plan:
     """Grouped-megakernel transform: route the plan's expert FFN through
     the dropless ragged grouped-GEMM kernel, absorbing the adjacent
@@ -457,7 +526,8 @@ def measured_schedules(infer: bool = False) -> tuple:
 
 def build_plan(name: str, info, n_chunks: Optional[int] = None) -> Plan:
     """Build the executable plan for one schedule on one layer layout:
-    base plan -> :func:`split_capacity` (clamped) -> :func:`apply_wire`.
+    base plan -> :func:`apply_placement` (from ``info.placement``) ->
+    :func:`split_capacity` (clamped) -> :func:`apply_wire`.
 
     ``n_chunks`` defaults to ``info.pipeline_chunks``; pass ``1`` for
     the always-unchunked public body aliases.
@@ -466,18 +536,24 @@ def build_plan(name: str, info, n_chunks: Optional[int] = None) -> Plan:
         raise KeyError(f"no plan registered for schedule {name!r} "
                        f"(have {sorted(PLANS)})")
     base = PLANS[name].builder(info)
+    pl = getattr(info, "placement", None)
+    if pl is not None:
+        base = apply_placement(base, pl, info=info)
     want = info.pipeline_chunks if n_chunks is None else n_chunks
     p = split_capacity(base, want)
     return apply_wire(p, getattr(info, "comm", None))
 
 
-def plan_for_shape(name: str, shape, n_chunks: int = 1) -> Plan:
+def plan_for_shape(name: str, shape, n_chunks: int = 1,
+                   placement=None) -> Plan:
     """Build a plan from a ``MoELayerShape`` alone (cost-model scoring).
 
     Constructs a minimal stand-in layout (dummy axis names, capacity
     from the shape's ``T``) and expands the chunk region *unclamped*, so
     scored grids match the requested candidates exactly — the runtime
-    clamps real chunk counts before asking for a decision.
+    clamps real chunk counts before asking for a decision.  Passing an
+    ``ExpertPlacement`` scores its placed variant (``t_plan`` prices the
+    shrunk pool and the rank-load skew).
     """
     from repro.core.gating import GateConfig
     from repro.core.schedules import MoEShardInfo
@@ -490,6 +566,8 @@ def plan_for_shape(name: str, shape, n_chunks: int = 1) -> Plan:
         gate=GateConfig(n_experts=shape.E, top_k=shape.k,
                         capacity_factor=shape.f))
     base = PLANS[name].builder(info)
+    if placement is not None:
+        base = apply_placement(base, placement, info=info)
     return split_capacity(base, n_chunks, clamp=False)
 
 
@@ -497,12 +575,14 @@ def plan_summary(plan: Plan) -> dict:
     """JSON-ready description of a plan's stage graph (the
     ``launch/dryrun.py --dump-plan`` artifact payload)."""
     wd = getattr(plan.comm, "wire_dtype", "f32") if plan.comm else "f32"
+    pl = plan.placement
     return {
         "name": plan.name,
         "base": plan.base or plan.name,
         "n_chunks": plan.n_chunks,
         "wire_dtype": wd,
         "merge": plan.merge if plan.n_chunks > 1 else None,
+        "placement": pl.summary() if pl is not None else None,
         "output": plan.output,
         "stages": [
             {"name": s.name, "kind": s.kind, "deps": list(s.deps),
@@ -519,6 +599,10 @@ def format_plan(plan: Plan) -> str:
     wd = getattr(plan.comm, "wire_dtype", "f32") if plan.comm else "f32"
     head = (f"plan {plan.name} (base={plan.base or plan.name}, "
             f"n_chunks={plan.n_chunks}, wire={wd})")
+    if plan.placement is not None:
+        pl = plan.placement
+        head += (f" placed[R={pl.n_phys} cap_frac={pl.cap_frac:.2f} "
+                 f"epoch={pl.epoch}]")
     lines = [head]
     for s in plan.stages:
         bits = [s.kind]

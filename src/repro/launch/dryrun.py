@@ -74,6 +74,20 @@ def _moe_pool_cap(cfg, shape, sizes, nb, sched_name):
     return max(s_local, 1), cap
 
 
+def _placement_summary(cfg):
+    """JSON-ready expert-placement record for the artifact: None for
+    dense/uniform configs, the resolved placement summary otherwise."""
+    if cfg.moe is None or cfg.moe.placement is None:
+        return None
+    pl = cfg.moe.placement
+    if pl == "auto":
+        from repro.core import autosched
+        live = autosched.current_placement()
+        return {"mode": "auto", "epoch": autosched.placement_epoch(),
+                "current": live.summary() if live is not None else None}
+    return {"mode": "forced", "current": pl.summary()}
+
+
 def count_params(shapes) -> int:
     import math
     return sum(math.prod(l.shape) if l.shape else 1
@@ -377,6 +391,10 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         "variant": (variant + ("+reduced" if reduced else "")).lstrip("+"),
         "schedule": sched_pick, "pipeline_chunks": chunks_pick,
         "wire_dtype": wire_pick,
+        # the expert placement the MoE layers would trace under: the
+        # config's own (None | "auto" | concrete) resolved against the
+        # process-wide autosched registry, as a JSON-ready summary
+        "placement": _placement_summary(cfg),
         "plan": plan_dump,
         "step_metrics": step_metrics,
         # guarded combos record the guard-rail outcome: step_metrics

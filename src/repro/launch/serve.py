@@ -49,6 +49,9 @@ def build_engine(args, cfg, model):
         from repro.runtime import FaultPlan
         faults = FaultPlan.parse(args.faults, seed=args.fault_seed)
         print(f"fault plan: {faults.summary()}", flush=True)
+    placement = getattr(args, "placement", "uniform")
+    if placement == "auto" and cfg.moe is None:
+        placement = "uniform"
     return Engine(model, mesh, dims, max_batch=max_batch,
                   max_len=args.max_len, schedule=schedule,
                   prefill_batch=args.prefill_batch,
@@ -58,7 +61,10 @@ def build_engine(args, cfg, model):
                   prefill_chunk=args.prefill_chunk,
                   queue_slo=getattr(args, "queue_slo", 0.0),
                   watchdog_rounds=getattr(args, "watchdog_rounds", 0),
-                  faults=faults), mesh, dims
+                  faults=faults,
+                  placement="auto" if placement == "auto" else None,
+                  rebalance_every=getattr(args, "rebalance_every", 0)), \
+        mesh, dims
 
 
 def main():
@@ -88,6 +94,14 @@ def main():
                          "chunks alternate with decode rounds")
     ap.add_argument("--schedule", default=None,
                     help="force one MoE schedule (default: auto decisions)")
+    ap.add_argument("--placement", default="uniform",
+                    choices=["uniform", "auto"],
+                    help="expert placement: uniform (default) or auto "
+                         "(load-adaptive replication from the decode load "
+                         "EMA, rebalanced every --rebalance-every rounds)")
+    ap.add_argument("--rebalance-every", type=int, default=64,
+                    help="decode rounds between placement rebalance "
+                         "checks (--placement auto; 0 disables)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -122,6 +136,11 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.placement == "auto" and cfg.moe is not None:
+        from dataclasses import replace as _replace
+        # MoE layers read the live placement from the autosched registry
+        # at trace time; the engine drives the rebalances
+        cfg = _replace(cfg, moe=_replace(cfg.moe, placement="auto"))
     model = build_model(cfg)
     engine, mesh, dims = build_engine(args, cfg, model)
     params = model.init(jax.random.PRNGKey(0))
@@ -167,10 +186,18 @@ def main():
         import os as _os
         _os.makedirs(_os.path.dirname(_os.path.abspath(args.log_json)),
                      exist_ok=True)
+        rec = {"latency": stats, "engine": s,
+               "statuses": {c.rid: c.status for c in done}}
+        if args.placement == "auto":
+            pl = autosched.current_placement()
+            rec["placement"] = {
+                "mode": "auto",
+                "rebalance_every": args.rebalance_every,
+                "epoch": autosched.placement_epoch(),
+                "current": pl.summary() if pl is not None else None,
+                "per_expert_load": s.get("per_expert_load")}
         with open(args.log_json, "w") as f:
-            _json.dump({"latency": stats, "engine": s,
-                        "statuses": {c.rid: c.status for c in done}},
-                       f, indent=1)
+            _json.dump(rec, f, indent=1)
     ok = [c for c in done if c.status == "ok"]
     if ok:
         print("sample:", ok[0].tokens[:16])

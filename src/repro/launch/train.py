@@ -50,6 +50,15 @@ def main():
                          "AlltoAll/AllGather payloads at this width "
                          "(auto = let the autoscheduler pick f32 vs bf16 "
                          "per layer shape; decisions print after step 0)")
+    ap.add_argument("--placement", default="uniform",
+                    choices=["uniform", "auto"],
+                    help="expert placement: uniform (one expert per slot, "
+                         "the default) or auto (load-adaptive replication "
+                         "of hot experts, rebalanced from the live load "
+                         "EMA every --rebalance-every steps)")
+    ap.add_argument("--rebalance-every", type=int, default=50,
+                    help="steps between placement rebalance checks "
+                         "(--placement auto; 0 disables rebalancing)")
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--ckpt", default=None)
@@ -75,7 +84,8 @@ def main():
 
     cfg = get_config(args.arch)
     if cfg.moe is not None and (args.pipeline_chunks is not None
-                                or args.autosched or args.wire_dtype):
+                                or args.autosched or args.wire_dtype
+                                or args.placement == "auto"):
         moe_kw = {}
         if args.pipeline_chunks is not None:
             moe_kw["pipeline_chunks"] = args.pipeline_chunks
@@ -86,6 +96,10 @@ def main():
             moe_kw["comm"] = replace(cfg.moe.comm,
                                      wire_dtype=args.wire_dtype) \
                 if cfg.moe.comm else CommConfig(wire_dtype=args.wire_dtype)
+        if args.placement == "auto":
+            # MoE layers read the live placement from the autosched
+            # registry at trace time; the Trainer drives the rebalances
+            moe_kw["placement"] = "auto"
         cfg = replace(cfg, moe=replace(cfg.moe, **moe_kw))
     if args.reduced:
         cfg = cfg.reduced(n_layers=args.layers or 2,
@@ -117,9 +131,12 @@ def main():
     if args.guards or faults is not None:
         from repro.runtime import GuardConfig
         guards = GuardConfig(max_skips=args.max_skips)
+    placement = args.placement if cfg.moe is not None else "uniform"
     tr = Trainer(model, mesh, dims, opt, schedule=args.schedule,
                  ckpt_path=args.ckpt, guards=guards, faults=faults,
-                 ckpt_retain=args.retain)
+                 ckpt_retain=args.retain,
+                 placement="auto" if placement == "auto" else None,
+                 rebalance_every=args.rebalance_every)
     params, opt_state = tr.setup(jax.random.PRNGKey(0))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq,
@@ -131,11 +148,22 @@ def main():
     if args.log_json:
         os.makedirs(os.path.dirname(os.path.abspath(args.log_json)),
                     exist_ok=True)
-        rec = hist if guards is None else {
-            "history": hist,
-            "guards": dict(tr.guard_state.counters),
-            "guard_events": tr.guard_state.events,
-            "lr_scale": tr.guard_state.lr_scale}
+        rec = hist if guards is None and placement != "auto" else {
+            "history": hist}
+        if isinstance(rec, dict) and guards is not None:
+            rec.update({"guards": dict(tr.guard_state.counters),
+                        "guard_events": tr.guard_state.events,
+                        "lr_scale": tr.guard_state.lr_scale})
+        if isinstance(rec, dict) and placement == "auto":
+            from repro.core import autosched
+            pl = autosched.current_placement()
+            rec["placement"] = {
+                "mode": "auto",
+                "rebalance_every": args.rebalance_every,
+                "epoch": autosched.placement_epoch(),
+                "current": pl.summary() if pl is not None else None,
+                "load_ema": [round(float(v), 3)
+                             for v in tr.load_ema.value()]}
         with open(args.log_json, "w") as f:
             json.dump(rec, f, indent=1)
     import math

@@ -298,14 +298,18 @@ def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, lengths, *,
 
 
 def paged_block(p, cfg: ModelConfig, kind: str, x, cache, table, starts,
-                lens, *, mesh, dims, schedule=None, infer=False):
+                lens, *, mesh, dims, schedule=None, infer=False,
+                with_aux=False):
     """Block forward over a paged KV arena: the ONE code path behind the
     serving engine's decode (C=1, ``infer=True``), one-shot prefill and
     chunked prefill (``infer=False`` — prefill pools take the training-
     shaped autosched decision, like ``prefill_block``).  Routing every
     phase through the same primitive is what makes chunked-vs-one-shot
     and prefix-hit-vs-cold runs bitwise comparable.  Returns
-    ``(x, new_cache)``.
+    ``(x, new_cache)``, or ``(x, new_cache, expert_load)`` with
+    ``with_aux=True`` — the (E,) per-expert routed-row counts ((0,) for
+    dense blocks) feeding the serving engine's load EMA; the default
+    keeps every existing caller's arity.
     """
     base = base_kind(kind)
     if base not in ("dense", "moe"):
@@ -324,18 +328,23 @@ def paged_block(p, cfg: ModelConfig, kind: str, x, cache, table, starts,
                                       table, starts, lens)
     new_cache = dict(cache)
     new_cache["attn"] = c2
+    no_load = jnp.zeros((0,), jnp.float32)
     if cfg.parallel_block:
         f = apply_ffn(p["ffn"], h, cfg.ffn_act)
-        return x + (a + f), new_cache
+        out = x + (a + f)
+        return (out, new_cache, no_load) if with_aux else (out, new_cache)
     x = x + a
     h2 = norm(p["norm2"], x)
+    load = no_load
     if _moe_kind(kind):
-        y, _ = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
-                         cfg=_moe_cfg(cfg, kcfg), schedule=schedule,
-                         infer=infer)
+        y, maux = apply_moe(h2, p["moe"], mesh=mesh, dims=dims,
+                            cfg=_moe_cfg(cfg, kcfg), schedule=schedule,
+                            infer=infer)
+        load = maux["expert_load"]
     else:
         y = apply_ffn(p["ffn"], h2, cfg.ffn_act)
-    return x + y, new_cache
+    out = x + y
+    return (out, new_cache, load) if with_aux else (out, new_cache)
 
 
 def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, *,

@@ -300,7 +300,8 @@ class Model:
         return logits, new_cache
 
     def paged_step(self, params, cache, batch, *, mesh, dims,
-                   schedule: Optional[str] = None, infer: bool = False):
+                   schedule: Optional[str] = None, infer: bool = False,
+                   with_aux: bool = False):
         """One step over a PAGED KV arena (the serving engine's unified
         path): per-row token spans written/read through page tables.
 
@@ -313,7 +314,11 @@ class Model:
         MoE autosched decision).  Returns ``(last_logits, new_cache)``
         with ``last_logits[b]`` at row b's final valid chunk position —
         only meaningful for rows whose span ends their prompt (or the
-        decoded token).
+        decoded token).  ``with_aux=True`` returns ``(last_logits,
+        new_cache, aux)`` where ``aux["expert_load"]`` is the (E,)
+        per-expert routed-row count summed over layers ((0,) for dense
+        stacks) — the serving engine's load-EMA feed; the default keeps
+        existing callers' arity.
         """
         cfg = self.cfg
         self._mesh, self._dims = mesh, dims
@@ -332,21 +337,36 @@ class Model:
             qpos = jnp.minimum(starts[:, None] + jnp.arange(C), 2047)
             x = x + jnp.take(pe, qpos, axis=0).astype(x.dtype)
         new_cache = {}
+        expert_load = jnp.zeros((0,), jnp.float32)
         for r, (kind, n) in enumerate(self.runs):
             def step(h, scanned, kind=kind):
                 layer_params, layer_cache = scanned
-                return blk.paged_block(
+                out = blk.paged_block(
                     layer_params, cfg, kind, h, layer_cache, tables,
                     starts, lens, mesh=mesh, dims=dims, schedule=schedule,
-                    infer=infer)
+                    infer=infer, with_aux=with_aux)
+                if with_aux:
+                    h2, c2, load = out
+                    return h2, (c2, load)
+                return out
 
-            x, new_cache[f"run{r}"] = lax.scan(
-                step, x, (params[f"run{r}"], cache[f"run{r}"]))
+            if with_aux:
+                x, (new_cache[f"run{r}"], loads) = lax.scan(
+                    step, x, (params[f"run{r}"], cache[f"run{r}"]))
+                if loads.shape[-1]:
+                    run_load = jnp.sum(loads, axis=0)        # (E,)
+                    expert_load = run_load if not expert_load.shape[-1] \
+                        else expert_load + run_load
+            else:
+                x, new_cache[f"run{r}"] = lax.scan(
+                    step, x, (params[f"run{r}"], cache[f"run{r}"]))
         x = apply_norm(params["final_norm"], x, cfg.norm_eps,
                        cfg.kernel_cfg)
         idx = jnp.clip(lens - 1, 0, C - 1)
         h_last = x[jnp.arange(B), idx]                    # (B, D)
         logits = self._head(params, h_last[:, None, :])[:, 0]
+        if with_aux:
+            return logits, new_cache, {"expert_load": expert_load}
         return logits, new_cache
 
     def decode_step(self, params, cache, batch, *, mesh, dims,

@@ -136,6 +136,16 @@ class Engine:
     alone, which makes a request's prefill bitwise independent of its
     queue mates).  ``schedule`` forces one MoE schedule for prefill AND
     decode; None lets each phase's autosched decision stand.
+
+    ``placement="auto"`` + ``rebalance_every=N`` opts into load-adaptive
+    expert placement on the serving path: the decode step returns the
+    per-expert routed-row counts (fed into a rolling EMA and surfaced as
+    ``stats["per_expert_load"]``), and every N decode rounds the
+    skew-aware cost model scores a replication placement derived from
+    the EMA against uniform — on a win the prefill and decode steps are
+    re-jitted, picking up the new placement (the MoE config must route
+    ``placement="auto"``, which launch/serve.py --placement auto
+    arranges).
     """
 
     def __init__(self, model, mesh, dims, *, max_batch: int = 8,
@@ -143,7 +153,9 @@ class Engine:
                  eos_token=None, detokenize=None, block_size: int = 16,
                  n_blocks=None, prefix_cache: bool = True,
                  prefill_chunk: int = 0, queue_slo: float = 0.0,
-                 watchdog_rounds: int = 0, faults=None):
+                 watchdog_rounds: int = 0, faults=None,
+                 placement=None, rebalance_every: int = 0,
+                 rebalance_margin: float = 1.05):
         cfg = model.cfg
         bad = [k for k, _ in model.runs
                if blk.base_kind(k) not in ("dense", "moe")]
@@ -166,13 +178,17 @@ class Engine:
                                 block_size=block_size, n_blocks=n_blocks,
                                 prefix_cache=prefix_cache)
         self.block_size = self.pool.block_size
+        self.placement = placement            # None (uniform) | "auto"
+        self.rebalance_every = int(rebalance_every)
+        self.rebalance_margin = float(rebalance_margin)
+        self._track_load = placement == "auto" or self.rebalance_every > 0
+        from repro.core.placement import LoadEMA
+        self.load_ema = LoadEMA()
+        self._schedule = schedule
         # donate the arena: each step's input cache is dead once the
         # updated one lands, so XLA aliases them in place instead of
         # copying the whole block arena every generated token
-        self._prefill = jax.jit(make_engine_prefill_step(
-            model, mesh, dims, schedule), donate_argnums=(1,))
-        self._decode = jax.jit(make_engine_decode_step(
-            model, mesh, dims, schedule), donate_argnums=(1,))
+        self._jit_steps()
         self.queue: deque = deque()
         self._run_t0 = None             # run() wall-clock origin
         self.filling: list = []         # admitted, prefill in progress
@@ -449,6 +465,43 @@ class Engine:
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += int(sum(c_lens))
 
+    def _jit_steps(self):
+        """(Re-)jit the prefill and decode steps — called at construction
+        and again after a placement rebalance (the retrace resolves
+        ``MoEConfig.placement == "auto"`` to the new placement)."""
+        self._prefill = jax.jit(make_engine_prefill_step(
+            self.model, self.mesh, self.dims, self._schedule),
+            donate_argnums=(1,))
+        self._decode = jax.jit(make_engine_decode_step(
+            self.model, self.mesh, self.dims, self._schedule,
+            with_aux=self._track_load), donate_argnums=(1,))
+
+    def _maybe_rebalance(self):
+        """Every ``rebalance_every`` decode rounds, score a placement
+        derived from the load EMA against uniform over the cached decode
+        decisions; on a win, install it and re-jit both steps."""
+        if self.placement != "auto" or not self.rebalance_every:
+            return
+        if self.stats["decode_calls"] % self.rebalance_every:
+            return
+        if not self.load_ema.ready:
+            return
+        mcfg = getattr(self.model.cfg, "moe", None)
+        if mcfg is None:
+            return
+        from repro.core import autosched
+        epoch = autosched.maybe_rebalance(
+            self.load_ema.value(), margin=self.rebalance_margin,
+            capacity_factor=mcfg.capacity_factor, top_k=mcfg.top_k,
+            infer=True)
+        if epoch is None:
+            return
+        pl = autosched.current_placement()
+        desc = pl.summary() if pl is not None else "uniform"
+        self._jit_steps()
+        print(f"serve REBALANCE -> placement epoch {epoch}: {desc}",
+              flush=True)
+
     def _decode_round(self, params):
         B = self.max_batch
         tokens = np.zeros((B, 1), np.int32)
@@ -477,10 +530,25 @@ class Engine:
         keys[[s.slot for s in states]] = self._keys(states)
         tables = self._tables(states, B)
         self._flush_freed()
-        tok, self.pool.cache = self._decode(
-            params, self.pool.cache, tokens, steps, tables, keys, temps,
-            topks)
+        if self._track_load:
+            tok, self.pool.cache, load = self._decode(
+                params, self.pool.cache, tokens, steps, tables, keys,
+                temps, topks)
+        else:
+            tok, self.pool.cache = self._decode(
+                params, self.pool.cache, tokens, steps, tables, keys,
+                temps, topks)
+            load = None
         tok = np.asarray(tok)
+        if load is not None and load.shape[-1]:
+            load = np.asarray(load)
+            # the dense decode fallback body has no capacity buffer and
+            # reports zero routed counts — no routing signal, don't let
+            # it drag the EMA toward "perfectly balanced"
+            if float(load.sum()) > 0:
+                self.load_ema.update(load)
+                self.stats["per_expert_load"] = [
+                    round(float(v), 3) for v in self.load_ema.value()]
         for s in states:
             s.last_tok = int(tok[s.slot])
             s.generated.append(s.last_tok)
@@ -488,6 +556,7 @@ class Engine:
             s.stall_rounds = 0
         self.stats["decode_calls"] += 1
         self.stats["decode_tokens"] += len(states)
+        self._maybe_rebalance()
 
     def _collect_finished(self) -> list:
         done = []

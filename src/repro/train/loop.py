@@ -192,7 +192,8 @@ def make_engine_prefill_step(model: Model, mesh, dims: ParallelDims,
 
 
 def make_engine_decode_step(model: Model, mesh, dims: ParallelDims,
-                            schedule: Optional[str] = None):
+                            schedule: Optional[str] = None,
+                            with_aux: bool = False):
     """The serving engine's decode step over the PAGED block arena: one
     token per row at per-row positions (``steps`` is a (B,) vector, so
     requests at different depths batch together), reading/writing
@@ -200,15 +201,26 @@ def make_engine_decode_step(model: Model, mesh, dims: ParallelDims,
     compilation no matter how requests come and go.  Idle rows carry an
     all-null table: their writes land in the masked null page and their
     outputs are ignored.
+
+    ``with_aux=True`` returns a third output — the (E,) per-expert
+    routed-row count for this round ((0,) for dense stacks), feeding the
+    engine's load EMA; the default keeps the two-output signature every
+    existing caller jits.
     """
     def decode_step(params, arena, tokens, steps, tables, keys, temps,
                     topks):
         from repro.serve.sampler import sample
-        logits, arena2 = model.paged_step(
+        out = model.paged_step(
             params, arena,
             {"tokens": tokens, "starts": steps,
              "lens": jnp.ones_like(steps), "tables": tables},
-            mesh=mesh, dims=dims, schedule=schedule, infer=True)
+            mesh=mesh, dims=dims, schedule=schedule, infer=True,
+            with_aux=with_aux)
+        if with_aux:
+            logits, arena2, aux = out
+            return (sample(logits, keys, temps, topks), arena2,
+                    aux["expert_load"])
+        logits, arena2 = out
         return sample(logits, keys, temps, topks), arena2
 
     return decode_step
@@ -226,6 +238,16 @@ class Trainer:
     ``ckpt_retain`` files), the fp8 wire-overflow fallback, and the
     ``faults`` injection hooks.  With ``guards=None`` (default) setup
     and run are byte-for-byte the pre-existing paths.
+
+    ``placement="auto"`` + ``rebalance_every=N`` opts into load-adaptive
+    expert placement: the per-expert ``expert_load`` metric feeds a
+    rolling EMA every step, and every N steps the skew-aware cost model
+    scores a replication placement derived from the EMA against uniform
+    (``autosched.maybe_rebalance``); on a win the placement is installed
+    process-wide and the step re-jitted — the same cheap plan-swap
+    mechanism as the fp8 wire fallback (the MoE config must route
+    ``placement="auto"`` for the retrace to pick it up, which
+    launch/train.py --placement auto arranges).
     """
     model: Model
     mesh: object
@@ -236,6 +258,9 @@ class Trainer:
     guards: Optional[object] = None       # runtime.guards.GuardConfig
     faults: Optional[object] = None       # runtime.faults.FaultPlan
     ckpt_retain: int = 3
+    placement: Optional[str] = None       # None (uniform) | "auto"
+    rebalance_every: int = 0              # steps between rebalance checks
+    rebalance_margin: float = 1.05        # modeled win required to swap
 
     def setup(self, key):
         m, mesh, dims = self.model, self.mesh, self.dims
@@ -245,10 +270,12 @@ class Trainer:
         params = jax.jit(m.init, out_shardings=p_sh)(key)
         opt_state = jax.jit(adamw_init, out_shardings=o_sh)(params)
         self._p_sh, self._o_sh = p_sh, o_sh
+        from repro.core.placement import LoadEMA
+        self.load_ema = LoadEMA()
         if self.guards is None:
-            step_fn = make_train_step(m, mesh, dims, self.opt_cfg,
-                                      self.schedule)
-            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._step_fn = make_train_step(m, mesh, dims, self.opt_cfg,
+                                            self.schedule)
+            self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
         else:
             from repro.runtime import guards as guardlib
             self.guard_state = guardlib.GuardState(cfg=self.guards)
@@ -284,6 +311,42 @@ class Trainer:
             print(f"expert load (routed rows/expert, all layers): "
                   f"[{vals}]", flush=True)
 
+    def _track_load(self, metrics):
+        """Fold this step's per-expert routed-row counts into the
+        rolling load EMA (host-side numpy; a no-op for dense models)."""
+        el = metrics.get("expert_load")
+        if el is not None and getattr(el, "ndim", 0) == 1 and el.shape[-1]:
+            el = jax.device_get(el)
+            if float(el.sum()) > 0:      # all-zero = no routing signal
+                self.load_ema.update(el)
+
+    def _maybe_rebalance(self, step):
+        """Every ``rebalance_every`` steps, ask autosched whether a
+        placement derived from the load EMA beats uniform under the
+        skew-aware cost model; on a win, re-jit the step — the retrace
+        resolves ``MoEConfig.placement == "auto"`` to the new placement
+        (same cheap plan-swap mechanism as the fp8 wire fallback;
+        params/opt state untouched)."""
+        if self.placement != "auto" or not self.rebalance_every:
+            return
+        if step == 0 or step % self.rebalance_every or \
+                not self.load_ema.ready:
+            return
+        from repro.core import autosched
+        mcfg = getattr(self.model.cfg, "moe", None)
+        if mcfg is None:
+            return
+        epoch = autosched.maybe_rebalance(
+            self.load_ema.value(), margin=self.rebalance_margin,
+            capacity_factor=mcfg.capacity_factor, top_k=mcfg.top_k)
+        if epoch is None:
+            return
+        pl = autosched.current_placement()
+        desc = pl.summary() if pl is not None else "uniform"
+        self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+        print(f"step {step:5d}  REBALANCE -> placement epoch {epoch}: "
+              f"{desc}", flush=True)
+
     def run(self, params, opt_state, data, n_steps: int, log_every: int = 10,
             ckpt_every: int = 0):
         if self.guards is not None:
@@ -297,6 +360,8 @@ class Trainer:
             params, opt_state, metrics = self._step(params, opt_state, batch)
             if step == 0:
                 self._log_step0(metrics)
+            self._track_load(metrics)
+            self._maybe_rebalance(step)
             if step % log_every == 0 or step == n_steps - 1:
                 # vector metrics (e.g. expert_load) are step-0 diagnostics,
                 # not per-step scalars — keep the history float-only
@@ -304,6 +369,8 @@ class Trainer:
                      if getattr(v, "ndim", 0) == 0}
                 m["step"] = step
                 m["wall_s"] = time.perf_counter() - t0
+                if self.load_ema.ready:
+                    m["load_imbalance"] = self.load_ema.imbalance()
                 history.append(m)
                 print(f"step {step:5d}  loss {m['loss']:.4f}  "
                       f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "
@@ -350,6 +417,8 @@ class Trainer:
             action = state.observe(step, loss, bool(metrics["nonfinite"]))
             if step == 0:
                 self._log_step0(metrics)
+            self._track_load(metrics)
+            self._maybe_rebalance(step)
             if action == guardlib.ROLLBACK:
                 res = mgr.rollback(step) if mgr is not None else None
                 if res is None:
@@ -382,6 +451,8 @@ class Trainer:
                 m["step"] = step
                 m["wall_s"] = time.perf_counter() - t0
                 m["lr_scale"] = state.lr_scale
+                if self.load_ema.ready:
+                    m["load_imbalance"] = self.load_ema.imbalance()
                 history.append(m)
                 print(f"step {step:5d}  loss {m['loss']:.4f}  "
                       f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "

@@ -1,0 +1,175 @@
+"""Subprocess helper: expert-placement parity for the plan executor.
+
+Run as:  python tests/helpers/run_placement_parity.py <mode>
+  mode = merged   : mesh (ep=4, model=2), MP==ESP
+  mode = distinct : mesh (ep=2, esp=2, mp=2)
+
+Each mode runs schedules {s1, s2} x wire {f32, bf16} x chunks {1, 2}
+with three placements against the unplaced run of the same schedule:
+
+  * identity     — ``identity_placement(E, n_ep)`` pushed through the
+                   full placement machinery (vector-capacity gate,
+                   placed flat indices, gathered weights): forward
+                   output, every aux value and every parameter gradient
+                   must be BITWISE equal to the unplaced plan.  This is
+                   the acceptance criterion that placement never
+                   perturbs existing schedules.
+  * rep2 (drops) — every expert replicated x2 on two distinct EP ranks
+                   with ``cap_frac = 0.5``: the effective per-expert
+                   capacity r_e * cap_p equals the unplaced capacity
+                   exactly, so with a hot-skewed router and real drops
+                   the kept/dropped decisions are the same set — aux
+                   (drop_frac, expert_load) and the observable zero-row
+                   drop mask bitwise, outputs/grads allclose (replica
+                   weight-gradient scatter-adds reorder float sums).
+  * hot (free)   — expert 0 replicated across ranks (uneven round-robin
+                   split), ``cap_frac = 1.0``, capacity generous enough
+                   that neither run drops: outputs/grads allclose, aux
+                   bitwise, drop_frac == 0 in both.  Runs on wire f32,
+                   chunks {1, 2}.
+
+Prints "OK <mode>" on success; asserts otherwise.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import CommConfig
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+from repro.core.placement import ExpertPlacement, identity_placement
+from repro.parallel.mesh import ParallelDims, make_mesh
+
+FWD_TOL = dict(rtol=2e-4, atol=2e-5)
+GRAD_TOL = dict(rtol=5e-3, atol=5e-4)
+E = 8
+
+
+def grids(mode):
+    if mode == "merged":
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+        return mesh, dims, 4
+    if mode == "distinct":
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+        return mesh, dims, 2
+    raise SystemExit(f"unknown mode {mode}")
+
+
+def rep2_placement(n_ep):
+    """Every expert x2, replicas on distinct EP ranks, half capacity:
+    r_e * cap_p == cap — same effective capacities as unplaced."""
+    per = 2 * E // n_ep
+    assignments = tuple((r * (E // n_ep) + i) % E
+                        for r in range(n_ep) for i in range(per))
+    return ExpertPlacement(n_experts=E, n_ep=n_ep,
+                           assignments=assignments, cap_frac=0.5)
+
+
+def hot_placement(n_ep):
+    """Experts 1..7 once, expert 0 on every remaining slot (uneven
+    round-robin split), full capacity."""
+    R = -(-(E + n_ep - 1) // n_ep) * n_ep + n_ep   # > E, multiple of n_ep
+    rest = [0] * (R - E + 1)
+    slots = sorted(rest + list(range(1, E)))
+    return ExpertPlacement(n_experts=E, n_ep=n_ep,
+                           assignments=tuple(slots), cap_frac=1.0)
+
+
+def main(mode: str):
+    mesh, dims, n_ep = grids(mode)
+
+    def make_inputs(f):
+        cfg0 = MoEConfig(d_model=32, d_ff=64, n_experts=E, top_k=2,
+                         capacity_factor=f, schedule="baseline")
+        params = init_moe_params(jax.random.PRNGKey(0), cfg0)
+        # bias the router toward experts 0/1 through feature 0 (pinned
+        # to 1.0 below): expert 0 runs ~4x the mean load
+        bias = jnp.zeros((E,)).at[0].set(8.0).at[1].set(4.0)
+        params = dict(params, wg=params["wg"] * 0.05
+                      + jnp.zeros_like(params["wg"]).at[0, :].set(bias))
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 16, 32))
+        return cfg0, params, x.at[..., 0].set(1.0)
+
+    def run(cfg0, params, x, sched, nc, wire, placement):
+        cfg = replace(cfg0, pipeline_chunks=nc,
+                      comm=CommConfig(wire_dtype=wire),
+                      placement=placement)
+
+        def loss(p, x):
+            y, aux = apply_moe(x, p, mesh=mesh, dims=dims, cfg=cfg,
+                               schedule=sched)
+            return (jnp.sum(y ** 2) + aux["aux_loss"] + aux["z_loss"],
+                    (y, aux))
+
+        out = jax.jit(jax.value_and_grad(loss, has_aux=True))(params, x)
+        (_, (y, aux)), g = out
+        return jax.tree.map(np.asarray, (y, aux, g))
+
+    def check_aux_bitwise(aux, aux_ref, tag):
+        for k in ("aux_loss", "z_loss", "drop_frac"):
+            assert float(aux[k]) == float(aux_ref[k]), (tag, k)
+        np.testing.assert_array_equal(aux["expert_load"],
+                                      aux_ref["expert_load"],
+                                      err_msg=f"{tag} expert_load")
+
+    cfgA, paramsA, xA = make_inputs(0.5)      # real drops
+    cfgB, paramsB, xB = make_inputs(6.0)      # drop-free even when hot
+    for sched in ("s1", "s2"):
+        for nc in (1, 2):
+            for wire in ("f32", "bf16"):
+                tag = f"{sched} nc={nc} wire={wire} [{mode}]"
+                y0, a0, g0 = run(cfgA, paramsA, xA, sched, nc, wire, None)
+
+                # identity placement: the full machinery, bitwise
+                y1, a1, g1 = run(cfgA, paramsA, xA, sched, nc, wire,
+                                 identity_placement(E, n_ep))
+                np.testing.assert_array_equal(
+                    y1, y0, err_msg=f"{tag} identity fwd")
+                check_aux_bitwise(a1, a0, f"{tag} identity")
+                jax.tree.map(
+                    lambda a, b: np.testing.assert_array_equal(
+                        a, b, err_msg=f"{tag} identity grad"), g1, g0)
+
+                # x2 replication at half capacity: same effective
+                # capacities -> same drop decisions, with real drops
+                y2, a2, g2 = run(cfgA, paramsA, xA, sched, nc, wire,
+                                 rep2_placement(n_ep))
+                assert float(a0["drop_frac"]) > 0.0, tag
+                check_aux_bitwise(a2, a0, f"{tag} rep2")
+                np.testing.assert_array_equal(
+                    (np.abs(y2) == 0.0).all(axis=-1),
+                    (np.abs(y0) == 0.0).all(axis=-1),
+                    err_msg=f"{tag} rep2 drop mask")
+                np.testing.assert_allclose(y2, y0,
+                                           err_msg=f"{tag} rep2 fwd",
+                                           **FWD_TOL)
+                jax.tree.map(
+                    lambda a, b: np.testing.assert_allclose(
+                        a, b, err_msg=f"{tag} rep2 grad", **GRAD_TOL),
+                    g2, g0)
+
+            # hot-expert replication, drop-free, wire f32
+            tag = f"{sched} nc={nc} hot [{mode}]"
+            y0, a0, g0 = run(cfgB, paramsB, xB, sched, nc, "f32", None)
+            y3, a3, g3 = run(cfgB, paramsB, xB, sched, nc, "f32",
+                             hot_placement(n_ep))
+            assert float(a0["drop_frac"]) == 0.0, tag
+            check_aux_bitwise(a3, a0, tag)
+            np.testing.assert_allclose(y3, y0, err_msg=f"{tag} fwd",
+                                       **FWD_TOL)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_allclose(
+                    a, b, err_msg=f"{tag} grad", **GRAD_TOL), g3, g0)
+    print("OK", mode)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "merged")

@@ -1,0 +1,363 @@
+"""Load-adaptive expert placement: table math, the plan-IR transform,
+skew-aware cost-model pricing, the autosched rebalance lifecycle, and
+executor numerical parity.
+
+Pure table/plan/pricing tests run in-process on 1 device; the executor
+parity matrix runs in subprocesses with 8 fake CPU devices
+(tests/helpers/run_placement_parity.py)."""
+
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+
+from repro.core import autosched
+from repro.core import plan as planlib
+from repro.core.perfmodel import MoELayerShape, _rank_imbalance, \
+    tpu_v5e_model
+from repro.core.placement import ExpertPlacement, LoadEMA, \
+    identity_placement, placement_from_loads
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+HOT = [4.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]   # one ~4x-hot expert
+EVEN = [1.0] * 8
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Placement + decision cache are process-global; isolate each test."""
+    autosched.clear_cache()
+    yield
+    autosched.clear_cache()
+
+
+def shape8(**kw):
+    d = dict(B=8, L=128, M=512, H=2048, E=8, k=2, f=1.2,
+             n_mp=2, n_esp=2, n_ep=4)
+    d.update(kw)
+    return MoELayerShape(**d)
+
+
+# ---------------------------------------------------------------- tables
+
+
+class TestExpertPlacement:
+    def test_identity(self):
+        pl = identity_placement(8, 4)
+        assert pl.is_identity and pl.n_phys == 8
+        assert list(pl.rep_count) == [1] * 8
+        assert pl.imbalance(EVEN) == pytest.approx(1.0)
+        # identity at full capacity only pays the 8-alignment
+        assert pl.scaled_cap(64) == 64
+        assert pl.pool_scale(64) == pytest.approx(1.0)
+
+    def test_replica_tables(self):
+        # E=4 experts on n_ep=2 ranks, expert 0 replicated 3x
+        pl = ExpertPlacement(n_experts=4, n_ep=2,
+                             assignments=(0, 1, 0, 2, 0, 3), cap_frac=0.5)
+        assert pl.n_phys == 6 and not pl.is_identity
+        assert list(pl.rep_count) == [3, 1, 1, 1]
+        table = pl.rep_table
+        assert table.shape == (4, 3)
+        assert list(table[0]) == [0, 2, 4]          # expert 0's slots
+        assert list(table[1]) == [1, 1, 1]          # padded with replica 0
+        assert list(pl.replica_index) == [0, 0, 1, 0, 2, 0]
+
+    def test_scaled_cap_alignment(self):
+        pl = ExpertPlacement(n_experts=4, n_ep=2,
+                             assignments=(0, 1, 0, 2, 0, 3), cap_frac=0.25)
+        assert pl.scaled_cap(64) == 16               # ceil(16) -> 16
+        assert pl.scaled_cap(10) == 8                # floor at align
+        assert pl.scaled_cap(64, align=24) == 24     # lcm(8, n_mp=3) style
+
+    def test_replication_reduces_imbalance(self):
+        loads = [4.0, 1.0, 1.0, 1.0]
+        uni = identity_placement(4, 2)
+        # identity: rank0 carries (4+1)/7 of the traffic
+        assert uni.imbalance(loads) == pytest.approx((5 / 7) / 0.5)
+        rep = ExpertPlacement(n_experts=4, n_ep=2,
+                              assignments=(0, 1, 2, 0, 0, 3), cap_frac=0.5)
+        assert rep.imbalance(loads) < uni.imbalance(loads)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            ExpertPlacement(n_experts=4, n_ep=2,
+                            assignments=(0, 1, 2, 3, 0))
+        with pytest.raises(ValueError, match="no replica"):
+            ExpertPlacement(n_experts=4, n_ep=2,
+                            assignments=(0, 1, 2, 2))
+        with pytest.raises(ValueError, match="cap_frac"):
+            ExpertPlacement(n_experts=4, n_ep=2,
+                            assignments=(0, 1, 2, 3), cap_frac=0.0)
+        with pytest.raises(ValueError, match="cap_frac"):
+            ExpertPlacement(n_experts=4, n_ep=2,
+                            assignments=(0, 1, 2, 3), cap_frac=1.5)
+
+    def test_summary_roundtrip(self):
+        pl = ExpertPlacement(n_experts=4, n_ep=2,
+                             assignments=(0, 1, 0, 2, 0, 3),
+                             cap_frac=0.5, epoch=3)
+        s = pl.summary()
+        assert s["epoch"] == 3 and s["n_phys"] == 6
+        assert s["replicated"] == {0: 3}
+        assert ExpertPlacement(
+            n_experts=s["n_experts"], n_ep=s["n_ep"],
+            assignments=tuple(s["assignments"]), cap_frac=s["cap_frac"],
+            epoch=s["epoch"]) == pl
+
+
+class TestPlacementFromLoads:
+    def test_hot_expert_replicated(self):
+        pl = placement_from_loads(HOT, 4, capacity_factor=1.2, top_k=2)
+        assert not pl.is_identity
+        assert pl.rep_count[0] > 1                   # the hot expert
+        assert pl.n_phys % 4 == 0
+        assert set(pl.assignments) == set(range(8))  # full coverage
+        assert 0.0 < pl.cap_frac <= 1.0
+        # replicas of the hot expert land on distinct ranks
+        per_rank = np.asarray(pl.assignments).reshape(4, -1)
+        assert max(int((per_rank == 0).sum(axis=1).max()), 1) == 1
+
+    def test_uniform_is_identity(self):
+        assert placement_from_loads(EVEN, 4).is_identity
+
+    def test_degenerate_inputs(self):
+        assert placement_from_loads([0.0] * 8, 4).is_identity
+        assert placement_from_loads(HOT, 1).is_identity
+        assert placement_from_loads([1.0, 9.0], 4).is_identity  # E < n_ep
+
+    def test_max_replicas(self):
+        pl = placement_from_loads([100.0, 1, 1, 1, 1, 1, 1, 1], 4,
+                                  max_replicas=2)
+        assert int(pl.rep_count.max()) <= 2
+
+    def test_epoch_stamped(self):
+        pl = placement_from_loads(HOT, 4, epoch=7)
+        assert pl.epoch == 7
+
+
+class TestLoadEMA:
+    def test_lifecycle(self):
+        ema = LoadEMA(decay=0.5)
+        assert not ema.ready and ema.value().size == 0
+        assert ema.imbalance() == 1.0
+        ema.update(HOT)
+        assert ema.ready
+        ema.update(EVEN)
+        np.testing.assert_allclose(
+            ema.value(), 0.5 * np.asarray(HOT) + 0.5 * np.asarray(EVEN))
+        assert ema.imbalance() > 1.0
+
+    def test_rejects_bad_updates(self):
+        ema = LoadEMA()
+        ema.update([])                               # empty: ignored
+        ema.update([np.nan, 1.0])                    # non-finite: ignored
+        assert not ema.ready
+        ema.update([1.0, 2.0])
+        ema.update([1.0, 2.0, 3.0])                  # shape change: reset
+        assert ema.value().shape == (3,)
+
+
+# ------------------------------------------------------ plan-IR transform
+
+
+class TestApplyPlacement:
+    def test_stamps_plan(self):
+        # f=5.0 is the drop-free uniform capacity for 4x-hot traffic; the
+        # replicated placement shrinks the per-slot capacity (bench regime)
+        pl = placement_from_loads(HOT, 4, capacity_factor=5.0, top_k=2)
+        assert pl.cap_frac < 1.0
+        s = shape8(f=5.0)
+        p = planlib.plan_for_shape("s1", s, 1, placement=pl)
+        assert p.placement is pl
+        gate = next(st for st in p.stages if st.kind == "gate")
+        placed_cap = gate.p("placed_cap")
+        assert placed_cap and placed_cap % 8 == 0
+        # identity placement keeps the full (aligned) capacity; the
+        # replicated one must come in under it
+        p_uni = planlib.plan_for_shape("s1", s, 1,
+                                       placement=identity_placement(8, 4))
+        uni_cap = next(st for st in p_uni.stages
+                       if st.kind == "gate").p("placed_cap")
+        assert placed_cap < uni_cap
+        stamped = [st for st in p.stages
+                   if st.kind in ("dispatch", "combine", "dispatch_a2a",
+                                  "combine_a2a", "expert_ffn_grouped")]
+        assert stamped and all(st.p("placed") is True for st in stamped)
+
+    def test_identity_is_noop_graph(self):
+        s = shape8()
+        base = planlib.plan_for_shape("s1", s, 1)
+        placed = planlib.plan_for_shape("s1", s, 1,
+                                        placement=identity_placement(8, 4))
+        # same stage graph shape; only the stamps differ
+        assert placed.stage_names() == base.stage_names()
+        assert base.placement is None
+
+    def test_pool_split_chunk_alignment(self):
+        # s2-family plans mp_split the capacity dim: placed_cap must stay
+        # divisible by n_mp so the 1/N_MP slices are exact
+        pl = placement_from_loads(HOT, 4, capacity_factor=5.0, top_k=2)
+        s = shape8(n_mp=2, f=5.0)
+        p = planlib.plan_for_shape("s2", s, 2, placement=pl)
+        gate = next(st for st in p.stages if st.kind == "gate")
+        assert gate.p("placed_cap") % (2 * s.n_mp) == 0
+        if p.chunk_size:
+            assert p.chunk_size == gate.p("placed_cap") // s.n_mp
+
+    def test_none_placement_unchanged(self):
+        s = shape8()
+        p = planlib.plan_for_shape("s1", s, 1)
+        assert planlib.apply_placement(p, None) is p
+
+    def test_rejects_planless_gate(self):
+        bad = planlib.Plan(
+            "t", (planlib.stage("d", "dispatch", deps=()),), output="d")
+        with pytest.raises(planlib.PlanError, match="needs a"):
+            planlib.apply_placement(bad, identity_placement(8, 4))
+
+
+# ------------------------------------------------------ skew-aware pricing
+
+
+class TestSkewPricing:
+    def test_rank_imbalance(self):
+        assert _rank_imbalance(EVEN, 4) == pytest.approx(1.0)
+        assert _rank_imbalance(HOT, 4) > 1.4
+        pl = placement_from_loads(HOT, 4, capacity_factor=5.0, top_k=2)
+        assert _rank_imbalance(HOT, 4, pl) < _rank_imbalance(HOT, 4)
+
+    def test_t_plan_prices_skew(self):
+        s = shape8()
+        pm = tpu_v5e_model(s.n_ep, s.n_esp, s.n_mp)
+        p = planlib.plan_for_shape("s1", s, 1)
+        t_even = pm.t_plan(p, s, loads=EVEN)
+        t_hot = pm.t_plan(p, s, loads=HOT)
+        assert t_hot > t_even                        # max-rank load paces
+
+    def test_placed_plan_wins_under_skew(self):
+        s = shape8()
+        pm = tpu_v5e_model(s.n_ep, s.n_esp, s.n_mp)
+        pl = placement_from_loads(HOT, 4, capacity_factor=5.0, top_k=2)
+        t_uni = pm.t_plan(planlib.plan_for_shape("s1", s, 1), s, loads=HOT)
+        t_pl = pm.t_plan(planlib.plan_for_shape("s1", s, 1, placement=pl),
+                         s, loads=HOT)
+        assert t_pl < t_uni
+
+
+# --------------------------------------------------- autosched lifecycle
+
+
+class TestAutoschedPlacement:
+    def test_epoch_and_registry(self):
+        assert autosched.current_placement() is None
+        assert autosched.placement_epoch() == 0
+        pl = placement_from_loads(HOT, 4, capacity_factor=1.2, top_k=2)
+        e1 = autosched.set_placement(pl)
+        assert e1 == 1 and autosched.current_placement() is pl
+        e2 = autosched.set_placement(None)
+        assert e2 == 2 and autosched.current_placement() is None
+        autosched.clear_cache()
+        assert autosched.placement_epoch() == 0
+
+    def test_decisions_keyed_by_epoch(self):
+        s = shape8()
+        d0 = autosched.decide(s)
+        assert d0.placement_epoch == 0
+        assert len(autosched.cache_info()) == 1
+        pl = placement_from_loads(HOT, 4, capacity_factor=1.2, top_k=2)
+        autosched.set_placement(pl)
+        # the stale line survives (running jits still trace against it);
+        # a fresh decide under the new epoch adds a second line
+        assert len(autosched.cache_info()) == 1
+        d1 = autosched.decide(s)
+        assert d1.placement_epoch == 1
+        assert len(autosched.cache_info()) == 2
+        summary = autosched.cache_summary()
+        assert "placement-epoch=1" in summary
+        assert "STALE" in summary                    # the epoch-0 line
+
+    def test_invalidate_by_shape(self):
+        sa, sb = shape8(), shape8(B=16)
+        autosched.decide(sa)
+        autosched.decide(sb)
+        assert len(autosched.cache_info()) == 2
+        assert autosched.invalidate("test", shape=sa) == 1
+        assert len(autosched.cache_info()) == 1
+        assert autosched.invalidate("test") == 1     # no shape: flush all
+        assert len(autosched.cache_info()) == 0
+
+    def test_decide_placement(self):
+        s = shape8()
+        pl, t_pl, t_uni = autosched.decide_placement(
+            s, HOT, schedule="s1", capacity_factor=1.2, top_k=2)
+        assert pl is not None and t_pl < t_uni
+        none, t1, t2 = autosched.decide_placement(
+            s, EVEN, schedule="s1", capacity_factor=1.2, top_k=2)
+        assert none is None and t1 == t2
+
+    def test_rebalance_lifecycle(self):
+        s = shape8()
+        # nothing cached yet: no shapes to score, no-op
+        assert autosched.maybe_rebalance(HOT) is None
+        autosched.decide(s)
+        epoch = autosched.maybe_rebalance(HOT, capacity_factor=1.2,
+                                          top_k=2)
+        assert epoch == 1
+        installed = autosched.current_placement()
+        assert installed is not None and not installed.is_identity
+        # steady state: same loads, same placement -> no re-jit
+        assert autosched.maybe_rebalance(HOT, capacity_factor=1.2,
+                                         top_k=2) is None
+        # loads even out: placement cleared (a new epoch, so retraces
+        # decide fresh), then further even loads are a no-op
+        assert autosched.maybe_rebalance(EVEN, capacity_factor=1.2,
+                                         top_k=2) == 2
+        assert autosched.current_placement() is None
+        assert autosched.maybe_rebalance(EVEN, capacity_factor=1.2,
+                                         top_k=2) is None
+
+    def test_rebalance_infer_keeps_full_capacity(self):
+        s = shape8(infer=True)
+        autosched.decide(s)
+        epoch = autosched.maybe_rebalance(HOT, capacity_factor=1.2,
+                                          top_k=2, infer=True)
+        pl = autosched.current_placement()
+        # decode runs drop-free: any installed placement must be full-cap
+        if epoch is not None and pl is not None:
+            assert pl.cap_frac == 1.0
+
+    def test_rebalance_ignores_foreign_shapes(self):
+        # only decisions matching the load vector's E participate
+        autosched.decide(shape8(E=16, k=2))
+        assert autosched.maybe_rebalance(HOT, capacity_factor=1.2,
+                                         top_k=2) is None
+
+
+# ------------------------------------------------------- executor parity
+
+
+def _run(script, *args, n_devices=8, timeout=900):
+    env = subprocess_env(n_devices)
+    env["PYTHONPATH"] = HELPERS + os.pathsep + env["PYTHONPATH"]
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_parity_merged_mesh():
+    out = _run("run_placement_parity.py", "merged")
+    assert "OK merged" in out
+
+
+def test_parity_distinct_mesh():
+    out = _run("run_placement_parity.py", "distinct")
+    assert "OK distinct" in out
