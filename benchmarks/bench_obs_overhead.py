@@ -1,0 +1,102 @@
+"""Telemetry overhead benchmark: metrics-on vs metrics-off train step.
+
+The obs layer (PR 10) promises that a live JSONL sink plus the per-step
+runtime emitters cost < 2% on the guarded train step — the acceptance
+bar for leaving ``--metrics-dir`` on in production runs.  Both variants
+drive the SAME guarded MoE step through the donated ping-pong loop of
+``bench_guards``; the metrics-on side additionally (a) traces its
+program while the obs sink is configured (so the ``trace_tag`` /
+``named_scope`` hooks are live at trace time) and (b) emits the
+Trainer's per-step events (``set_context`` + ``train_step`` +
+``expert_load``) inside the timed region, buffered exactly as the
+production sink buffers them.
+
+The two loops interleave sample-by-sample (``_time_pair``) so
+machine-load drift cancels; a sequential A-then-B comparison at this
+granularity reads multi-percent phantom overhead from drift alone.
+
+Run under 8 fake CPU devices (benchmarks/run.py does this):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_obs_overhead [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_guards import _median, _setup, _time_pair
+from benchmarks.common import emit
+from repro import obs
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import make_guarded_train_step
+
+
+def _step_loop(fn, params, opt, batch, extra=(), metrics=False):
+    """Donated ping-pong step closure (as in bench_guards), optionally
+    emitting the Trainer's per-step telemetry inside the timed region."""
+    jitted = jax.jit(fn, donate_argnums=(0, 1))
+    st = {"p": jax.tree.map(jnp.copy, params),
+          "o": jax.tree.map(jnp.copy, opt), "i": 0}
+
+    def once():
+        t0 = time.perf_counter()
+        st["p"], st["o"], m = jitted(st["p"], st["o"], batch, *extra)
+        jax.block_until_ready(m["loss"])
+        if metrics:
+            obs.set_context(step=st["i"])
+            obs.emit("train_step", loss=float(m["loss"]),
+                     grad_norm=float(m.get("grad_norm", 0.0)))
+            obs.emit("expert_load", load=[0.25, 0.25, 0.25, 0.25])
+        st["i"] += 1
+        return time.perf_counter() - t0
+
+    return once
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args, _ = ap.parse_known_args()
+    iters = 5 if args.smoke else 9
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    model, mesh, dims, params, opt, batch = _setup()
+    extra = (jnp.float32(1.0), jnp.float32(0.0))
+
+    # metrics-off: obs unconfigured, trace and run on the plain path
+    guarded_off = make_guarded_train_step(model, mesh, dims, opt_cfg, "s1")
+    loop_off = _step_loop(guarded_off, params, opt, batch, extra)
+
+    with tempfile.TemporaryDirectory() as td:
+        # metrics-on: the sink is live BEFORE tracing, so the program is
+        # built exactly as a --metrics-dir run builds it
+        obs.configure(td, meta={"kind": "bench"})
+        try:
+            guarded_on = make_guarded_train_step(model, mesh, dims,
+                                                 opt_cfg, "s1")
+            loop_on = _step_loop(guarded_on, params, opt, batch, extra,
+                                 metrics=True)
+            t_off, t_on = _time_pair(loop_off, loop_on, iters=iters)
+            obs.flush()
+        finally:
+            obs.close()
+
+    ratio = t_on / max(t_off, 1e-12)
+    emit("obs_off_step", 1e6 * t_off, "guarded step, no telemetry")
+    emit("obs_on_step", 1e6 * t_on,
+         "guarded step + live JSONL sink + per-step emitters")
+    emit("obs_overhead", 1e6 * (t_on - t_off),
+         f"ratio {ratio:.4f} (accept < 1.02)")
+    if args.smoke:
+        assert ratio < 1.02, \
+            f"obs overhead {ratio:.4f} exceeds the 2% acceptance bar"
+        print("OBS SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

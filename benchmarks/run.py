@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Analytic benches run
 in-process; measured multi-device benches run in subprocesses with 8 fake
 CPU devices (the main process must keep seeing 1 device).
 
-Every row is also collected into the canonical ``BENCH_pr9.json`` at the
+Every row is also collected into the canonical ``BENCH_pr10.json`` at the
 repo root — the machine-readable perf trajectory successive PRs diff
 against (schema: ``{"rows": [{"name", "us_per_call", "derived"}, ...]}``).
 """
@@ -39,10 +39,11 @@ SUBPROCESS = [
     "benchmarks.bench_serve",
     "benchmarks.bench_guards",
     "benchmarks.bench_loadbalance",
+    "benchmarks.bench_obs_overhead",
 ]
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_pr9.json")
+    os.path.abspath(__file__))), "BENCH_pr10.json")
 
 
 def _collect(rows: list, line: str) -> None:

@@ -34,6 +34,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro import obs
 from repro.core import plan as planlib
 from repro.core.perfmodel import (MoELayerShape, PerfModel, WIRE_BYTES,
                                   tpu_v5e_model)
@@ -137,6 +138,7 @@ def invalidate(reason: str = "", shape=None) -> int:
         n = len(drop)
     for cb in list(_INVALIDATION_HOOKS):
         cb(reason, n)
+    obs.emit("autosched_invalidate", reason=reason, dropped=n)
     return n
 
 
@@ -155,6 +157,10 @@ def set_placement(placement) -> int:
     global _PLACEMENT, _PLACEMENT_EPOCH
     _PLACEMENT = placement
     _PLACEMENT_EPOCH += 1
+    obs.emit("placement_epoch", epoch=_PLACEMENT_EPOCH,
+             uniform=placement is None,
+             n_phys=getattr(placement, "n_phys", None),
+             cap_frac=getattr(placement, "cap_frac", None))
     return _PLACEMENT_EPOCH
 
 
@@ -320,6 +326,13 @@ def decide(shape: MoELayerShape, *, perf_model: Optional[PerfModel] = None,
                                 wire_dtype=wire,
                                 placement_epoch=_PLACEMENT_EPOCH)
     _CACHE[key] = decision
+    # cache-fill only: the per-trace cache hits stay silent, so the
+    # metrics stream records one decision event per distinct layer line
+    obs.emit("autosched_decision", schedule=sched, n_chunks=n_chunks,
+             wire=wire, mode=mode,
+             infer=bool(getattr(shape, "infer", False)),
+             tokens=shape.B * shape.L, d_model=shape.M, E=shape.E,
+             placement_epoch=_PLACEMENT_EPOCH)
     return decision
 
 

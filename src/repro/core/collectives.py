@@ -42,12 +42,14 @@ the named axes bound.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.perfmodel import WIRE_BYTES, WIRE_DTYPES  # noqa: F401
 
 
@@ -123,20 +125,28 @@ def set_fp8_sat_injection(factor: float) -> None:
     _FP8_SAT_INJECT = float(factor)
 
 
-def _emit_sat(sat, total) -> None:
+def _emit_sat(ctx, sat, total) -> None:
     # runtime-checked too: a trace built while monitoring can outlive
     # disable_fp8_monitor(); stale callbacks must be harmless.
     if _FP8_MONITOR is not None:
         _FP8_MONITOR(int(sat), int(total))
+    if int(sat):
+        # telemetry: saturation events land in the metrics stream with
+        # the trace-time tags frozen into this callback (e.g. which MoE
+        # layer this encode belongs to) plus the live runtime context
+        # (e.g. the current train step) merged in by obs.emit.
+        obs.emit("fp8_sat", sat=int(sat), total=int(total), **ctx)
 
 
 def _monitor_sat(vals) -> None:
     """Count saturating/non-finite elements of a pre-cast fp8 payload
-    into the installed monitor (trace-time no-op when none is set)."""
-    if _FP8_MONITOR is None:
+    into the installed monitor and/or the obs event sink (trace-time
+    no-op when neither is active)."""
+    if _FP8_MONITOR is None and not obs.enabled():
         return
     sat = jnp.sum((~jnp.isfinite(vals)) | (jnp.abs(vals) > _FP8_MAX))
-    jax.debug.callback(_emit_sat, sat, vals.size)
+    jax.debug.callback(functools.partial(_emit_sat, obs.trace_context()),
+                       sat, vals.size)
 
 
 def _fp8_dtype():

@@ -38,6 +38,7 @@ routing — and the ESP-AllReduce sums in-network with no decode point).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -376,8 +377,43 @@ def execute(plan: Plan, x, wg, w1, w3, w2, info):
                placement=getattr(plan, "placement", None))
     env = {INPUT: x}
     for st in order:
-        env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)
+        # named_scope is trace-time metadata only (names the HLO ops for
+        # profilers / dumped modules); the lowered program is unchanged.
+        with jax.named_scope(f"{plan.name}.{st.name}"):
+            env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)
     if ctx.gate is None:
         raise ValueError(f"plan {plan.name!r} has no gate stage")
     g, _ = ctx.gate
     return env[plan.output], _aux_mean(g.aux, info)
+
+
+def _probe(v):
+    """DCE-proof scalar fingerprint of one stage value."""
+    if isinstance(v, tuple):             # gate stage: (GateResult, cap)
+        return jnp.sum(v[0].weights.astype(jnp.float32))
+    return jnp.sum(v.astype(jnp.float32))
+
+
+def execute_prefix(plan: Plan, x, wg, w1, w3, w2, info, n_stages: int):
+    """Run only the first ``n_stages`` stages of ``plan`` (topo order)
+    and return a replicated scalar folding a probe of every stage
+    output (so no stage is dead code).
+
+    The obs stage-timing harness (``repro.obs.trace``) times the jitted
+    prefix programs for k = 0..n and attributes ``t[k] - t[k-1]`` to
+    stage k.  Validated topo order lists every stage after its deps, so
+    any prefix is a closed subgraph; stateful context (the gate result)
+    is always populated before a consumer runs.
+    """
+    order = validate(plan)
+    ctx = _Ctx(info, wg, w1, w3, w2, getattr(plan, "comm", None), x.dtype,
+               placement=getattr(plan, "placement", None))
+    env = {INPUT: x}
+    acc = jnp.sum(x.astype(jnp.float32))
+    for st in order[:n_stages]:
+        with jax.named_scope(f"{plan.name}.{st.name}"):
+            env[st.name] = _emit(st, [env[d] for d in st.deps], ctx)
+        acc = acc + _probe(env[st.name])
+    axes = tuple(dict.fromkeys(info.ep_axes + info.esp_axes
+                               + info.mp_axes))
+    return lax.psum(acc, axes)

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+import itertools
+
+from repro import compat, obs
 from repro.core import autosched, executor
 from repro.core import plan as planlib
 from repro.core.collectives import CommConfig
@@ -144,6 +146,9 @@ def shard_pool_capacity(tokens_global: int, n_token_shard: int, n_mp: int,
     if infer:
         cap = max(cap, -(-max(s_local, 1) // align) * align)
     return s_local, cap
+
+
+_TRACE_ORDINAL = itertools.count()  # apply_moe call ordinal (trace tag)
 
 
 # --- decode fallback ---------------------------------------------------------
@@ -361,9 +366,15 @@ def apply_moe(x, params: dict, *, mesh, dims: ParallelDims, cfg: MoEConfig,
         return y.astype(x.dtype), aux
 
     xt = x.reshape(tokens_global, M)
-    y, aux = compat.shard_map(
-        shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)(xt, params["wg"], params["w1"], w3, params["w2"])
+    # trace-time telemetry tags: runtime events whose callbacks are
+    # built while tracing this layer (the fp8 saturation monitor) carry
+    # which apply_moe call / schedule / wire they belong to.
+    with obs.trace_tag(moe_call=next(_TRACE_ORDINAL), schedule=sched,
+                       wire=wire):
+        y, aux = compat.shard_map(
+            shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(xt, params["wg"], params["w1"], w3,
+                             params["w2"])
     y = y.reshape(B, L, M)
 
     if cfg.n_shared_experts:

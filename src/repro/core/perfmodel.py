@@ -367,6 +367,49 @@ class PerfModel:
             tf *= min(1.0, 1.0 / max(s.f, 1e-9))
         return fixed + tc + (n - 1) * max(tc, tf) + tf
 
+    def t_plan_stages(self, plan, s: MoELayerShape, wire_dtype=None,
+                      loads=None) -> dict:
+        """Per-stage predicted seconds for ``plan`` — the same pricing
+        as :meth:`t_plan` (same wire factor, chunk scaling, etm skew),
+        itemized instead of folded through the fill/drain closed form.
+
+        Returns ``{stage_name: seconds}`` covering *every* stage of the
+        plan: comm stages get their :meth:`_t_stage_comm` term, the
+        expert-FFN stages split the compute term ``tf`` evenly, and
+        local bookkeeping stages (gate/dispatch/combine/splits) are an
+        explicit ``0.0`` — the model claims they are free, and the
+        audit (``repro.obs.audit``) holds it to that by reporting their
+        measured times without a relative error.
+
+        Itemized serial times deliberately do NOT sum to
+        :meth:`t_plan`: the closed form credits chunk overlap
+        (``max(tc, tf)``), the per-stage view does not.  The audit
+        reports both totals side by side.
+        """
+        wf = self.wire_factor(wire_dtype)
+        pl = getattr(plan, "placement", None)
+        etm_scale = 1.0
+        if pl is not None:
+            etm_scale *= pl.pool_scale(max(int(s.T), 1))
+        if loads is not None and len(loads):
+            etm_scale *= _rank_imbalance(loads, s.n_ep, pl)
+        n = max(getattr(plan, "n_chunks", 1), 1)
+        overlap_hier = n >= 2
+        ffn = [st for st in plan.stages
+               if st.kind in ("expert_ffn", "expert_ffn_grouped")]
+        tf = self.t_ffn(s, plan.base or plan.name) * etm_scale
+        if any(st.kind == "expert_ffn_grouped" for st in plan.stages):
+            tf *= min(1.0, 1.0 / max(s.f, 1e-9))
+        out = {}
+        for st in plan.stages:
+            if st.kind in ("expert_ffn", "expert_ffn_grouped"):
+                out[st.name] = tf / len(ffn)
+            else:
+                out[st.name] = self._t_stage_comm(
+                    st, s, wf, n if st.chunk else 1, overlap_hier,
+                    etm_scale)
+        return out
+
     # --- decode latency model (repro.serve) ---------------------------------
     def t_decode(self, s: MoELayerShape, wire_dtype=None,
                  kv_bytes: float = 0.0) -> float:

@@ -123,7 +123,8 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
               pipeline_chunks: int = None, run_step: bool = False,
               reduced: bool = False, seq: int = None,
               batch_size: int = None, wire_dtype: str = None,
-              dump_plan: bool = False, guards: bool = False) -> dict:
+              dump_plan: bool = False, guards: bool = False,
+              audit: bool = False) -> dict:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -245,6 +246,32 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         p = build_plan(UNCHUNKED_OF.get(sched_pick, sched_pick), winfo)
         plan_dump = plan_summary(p)
         print(format_plan(p), flush=True)
+
+    audit_reports = None
+    if audit and cfg.moe is not None:
+        # predicted-vs-measured schedule audit on a small subset of the
+        # fake-device farm: compile + run the obs prefix-timing harness
+        # and join against PerfModel.t_plan_stages.  Host-emulated
+        # timings are noisy — the point is the joined REPORT (schema,
+        # stage coverage, calibration scale), not CPU milliseconds.
+        from repro.obs.audit import DEFAULT_AUDIT_SCHEDULES, \
+            run_schedule_audit
+        from repro.obs.trace import subset_mesh
+        from repro.parallel.mesh import ParallelDims
+        a_mesh = subset_mesh((4, 2), ("data", "model"))
+        a_dims = ParallelDims(ep=("data",), esp=("model",),
+                              mp=("model",))
+        audit_reports = run_schedule_audit(
+            a_mesh, a_dims, cfg.moe, tokens_global=256,
+            schedules=DEFAULT_AUDIT_SCHEDULES, iters=3, warmup=1)
+        for rep in audit_reports:
+            worst = rep["worst"][:3]
+            print(f"[audit] {rep['schedule']}: "
+                  f"measured {rep['total_measured_s'] * 1e3:.3f} ms, "
+                  f"predicted {rep['total_predicted_s'] * 1e3:.3f} ms, "
+                  f"time_scale "
+                  f"{rep['calibration']['time_scale']:.3g}, "
+                  f"worst {worst}", flush=True)
 
     t0 = time.perf_counter()
     if shape.kind == "train":
@@ -396,6 +423,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         # process-wide autosched registry, as a JSON-ready summary
         "placement": _placement_summary(cfg),
         "plan": plan_dump,
+        "audit": audit_reports,
         "step_metrics": step_metrics,
         # guarded combos record the guard-rail outcome: step_metrics
         # carries the jitted "nonfinite" flag (0.0 = the update applied)
@@ -446,6 +474,11 @@ def main():
                     help="print the chosen schedule's plan-IR stage graph "
                          "and record it (stages, deps, wire dtypes, chunk "
                          "count) in the artifact JSON")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the predicted-vs-measured schedule audit "
+                         "(s1/s2/s1g stage timings vs the perf model) on "
+                         "a 4x2 subset mesh and record the reports in "
+                         "the artifact JSON (pair with --reduced)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="micro-chunk count for the pipelined bodies")
     ap.add_argument("--wire-dtype", default=None,
@@ -512,7 +545,8 @@ def main():
                                     batch_size=args.batch,
                                     wire_dtype=args.wire_dtype,
                                     dump_plan=args.dump_plan,
-                                    guards=args.guards)
+                                    guards=args.guards,
+                                    audit=args.audit)
                     sfx = f"__{args.schedule}" if args.schedule else ""
                     if args.tag:
                         sfx += f"__{args.tag}"

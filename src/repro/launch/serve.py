@@ -14,10 +14,12 @@ a clean run.
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import build_model
 from repro.parallel.mesh import ParallelDims, make_mesh
@@ -122,11 +124,22 @@ def main():
     ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--log-json", default=None,
                     help="write latency + robustness stats to this file")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="stream request-lifecycle telemetry (queued/"
+                         "admitted/prefilled/finished, decode rounds, "
+                         "rollups) as JSONL into this directory; file "
+                         "paths are mirrored into --log-json")
+    ap.add_argument("--trace", action="store_true",
+                    help="after serving, time the decode MoE schedule's "
+                         "plan stages and save a Chrome trace JSON into "
+                         "--metrics-dir")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny run, assert clean completion")
     args = ap.parse_args()
     if args.requests < 1:
         ap.error("--requests must be >= 1")
+    if args.trace and not args.metrics_dir:
+        ap.error("--trace requires --metrics-dir")
     if args.smoke:
         args.requests = min(args.requests, 8)
         args.gen = min(args.gen, 8)
@@ -141,6 +154,12 @@ def main():
         # MoE layers read the live placement from the autosched registry
         # at trace time; the engine drives the rebalances
         cfg = _replace(cfg, moe=_replace(cfg.moe, placement="auto"))
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir, meta={
+            "kind": "serve", "arch": args.arch,
+            "requests": args.requests, "max_batch": args.max_batch,
+            "gen": args.gen, "schedule": args.schedule,
+            "n_devices": jax.device_count(), "argv": sys.argv[1:]})
     model = build_model(cfg)
     engine, mesh, dims = build_engine(args, cfg, model)
     params = model.init(jax.random.PRNGKey(0))
@@ -181,6 +200,40 @@ def main():
     summary = autosched.cache_summary()
     if summary:
         print(summary)
+
+    trace_file = None
+    if args.trace:
+        if cfg.moe is None:
+            print("--trace: dense arch has no MoE plan stages; skipping",
+                  flush=True)
+        else:
+            import os as _os
+            from repro.obs.audit import trace_schedule
+            from repro.obs.trace import save_chrome_trace
+            sched = args.schedule
+            if sched in (None, "auto") or sched.endswith("_seqpar"):
+                sched = "s1d"   # the decode-dedicated plan
+            try:
+                st = trace_schedule(mesh, dims, cfg.moe,
+                                    engine.max_batch, sched, infer=True)
+            except Exception as e:   # tiny decode pools can be untraceable
+                print(f"--trace: {type(e).__name__}: {e}; skipping",
+                      flush=True)
+            else:
+                trace_file = _os.path.join(args.metrics_dir,
+                                           f"trace_{sched}.json")
+                save_chrome_trace(st, trace_file)
+                obs.emit("stage_trace", schedule=sched, path=trace_file,
+                         total_s=st.total_s, n_stages=st.n_stages)
+                print(f"stage trace ({sched}, {st.n_stages} stages, "
+                      f"{st.total_s * 1e3:.3f} ms) -> {trace_file}",
+                      flush=True)
+
+    metrics_files = None
+    if args.metrics_dir:
+        metrics_files = list(obs.get_sink().paths)
+        obs.close()
+
     if args.log_json:
         import json as _json
         import os as _os
@@ -188,6 +241,10 @@ def main():
                      exist_ok=True)
         rec = {"latency": stats, "engine": s,
                "statuses": {c.rid: c.status for c in done}}
+        if args.metrics_dir:
+            rec["obs"] = {"metrics_dir": args.metrics_dir,
+                          "metrics_files": metrics_files,
+                          "trace_file": trace_file}
         if args.placement == "auto":
             pl = autosched.current_placement()
             rec["placement"] = {

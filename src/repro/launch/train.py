@@ -12,10 +12,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 from dataclasses import replace
 
 import jax
 
+from repro import obs
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import dims_for, make_production_mesh
@@ -79,8 +81,19 @@ def main():
                          "(see repro.runtime.faults; implies --guards)")
     ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--log-json", default=None)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="stream run telemetry (train_step / guard / "
+                         "autosched / fp8 events) as JSONL into this "
+                         "directory; emitted file paths are mirrored "
+                         "into --log-json")
+    ap.add_argument("--trace", action="store_true",
+                    help="after training, time the resolved MoE "
+                         "schedule's plan stages and save a Chrome "
+                         "trace JSON into --metrics-dir")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
+    if args.trace and not args.metrics_dir:
+        ap.error("--trace requires --metrics-dir")
 
     cfg = get_config(args.arch)
     if cfg.moe is not None and (args.pipeline_chunks is not None
@@ -120,6 +133,13 @@ def main():
                 if cfg.moe is not None
                 else ParallelDims(dp=("data",), mp=("model",)))
 
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir, meta={
+            "kind": "train", "arch": args.arch, "steps": args.steps,
+            "seq_len": args.seq, "batch": args.batch,
+            "schedule": args.schedule, "n_devices": n_dev,
+            "argv": sys.argv[1:]})
+
     model = build_model(cfg)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                       total_steps=args.steps)
@@ -145,11 +165,44 @@ def main():
     params, opt_state, hist = tr.run(params, opt_state, data, args.steps,
                                      ckpt_every=ckpt_every if args.ckpt
                                      else 0)
+
+    trace_file = None
+    if args.trace:
+        if cfg.moe is None:
+            print("--trace: dense arch has no MoE plan stages; skipping",
+                  flush=True)
+        else:
+            from repro.obs.audit import trace_schedule
+            from repro.obs.trace import save_chrome_trace
+            sched = args.schedule
+            if sched in (None, "auto") or sched.endswith("_seqpar"):
+                sched = "s1"   # concrete, trace-compatible default
+            st = trace_schedule(mesh, dims, cfg.moe,
+                                args.batch * args.seq, sched,
+                                n_chunks=args.pipeline_chunks or 1)
+            trace_file = os.path.join(args.metrics_dir,
+                                      f"trace_{sched}.json")
+            save_chrome_trace(st, trace_file)
+            obs.emit("stage_trace", schedule=sched, path=trace_file,
+                     total_s=st.total_s, n_stages=st.n_stages)
+            print(f"stage trace ({sched}, {st.n_stages} stages, "
+                  f"{st.total_s * 1e3:.3f} ms) -> {trace_file}",
+                  flush=True)
+
+    metrics_files = None
+    if args.metrics_dir:
+        metrics_files = list(obs.get_sink().paths)
+        obs.close()
+
     if args.log_json:
         os.makedirs(os.path.dirname(os.path.abspath(args.log_json)),
                     exist_ok=True)
-        rec = hist if guards is None and placement != "auto" else {
-            "history": hist}
+        rec = hist if (guards is None and placement != "auto"
+                       and not args.metrics_dir) else {"history": hist}
+        if isinstance(rec, dict) and args.metrics_dir:
+            rec["obs"] = {"metrics_dir": args.metrics_dir,
+                          "metrics_files": metrics_files,
+                          "trace_file": trace_file}
         if isinstance(rec, dict) and guards is not None:
             rec.update({"guards": dict(tr.guard_state.counters),
                         "guard_events": tr.guard_state.events,

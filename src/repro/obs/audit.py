@@ -1,0 +1,183 @@
+"""Predicted-vs-measured schedule audits.
+
+Parm's pitch is that the alpha-beta model picks schedules *because its
+per-stage estimates are right*.  The audit closes that loop: run the
+obs stage-timing harness (:mod:`repro.obs.trace`) on real compiled
+plans, join each stage's measured wall time against
+``PerfModel.t_plan_stages``'s itemized prediction, and rank the worst
+offenders by relative error.  Surfaced by ``launch/dryrun.py --audit``
+(report saved into the dryrun artifact JSON) and usable to seed
+measured calibration: the report's ``calibration.time_scale`` is the
+one-number correction that maps the analytic total onto this machine.
+
+Report schema (locked by ``tests/test_obs.py::test_audit_report_schema``):
+
+.. code-block:: python
+
+    {"schedule": "s1", "plan": "s1", "n_stages": 7,
+     "total_predicted_s": ..., "total_measured_s": ..., "overhead_s": ...,
+     "stages": [{"name", "kind", "predicted_s", "measured_s",
+                 "rel_err"},   # rel_err None where predicted == 0
+                ...],
+     "worst": [...stage names, |rel_err| descending...],
+     "calibration": {"time_scale": measured_total / predicted_total}}
+
+Stages the model prices at zero (gate, dispatch, combine, splits — the
+"local is free" assumption) keep their measured time but get
+``rel_err: None`` and stay out of the ``worst`` ranking; their measured
+column is exactly how you falsify that assumption.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import plan as planlib
+from repro.core.collectives import CommConfig
+from repro.core.moe import (MoEConfig, init_moe_params, moe_param_specs,
+                            shard_pool_capacity)
+from repro.core.perfmodel import MoELayerShape, PerfModel, tpu_v5e_model
+from repro.core.pipeline import UNCHUNKED_OF
+from repro.core.schedules import MoEShardInfo
+from repro.obs.trace import StageTrace, time_plan_stages
+from repro.parallel.mesh import ParallelDims, axis_size
+
+DEFAULT_AUDIT_SCHEDULES = ("s1", "s2", "s1g")
+
+
+def audit_report(trace: StageTrace, predicted: dict,
+                 total_predicted_s: float) -> dict:
+    """Pure join of a measured :class:`StageTrace` against per-stage
+    predictions (``{stage_name: seconds}``) — no execution, so tests
+    can pin the schema without a mesh."""
+    stages = []
+    for s in trace.stages:
+        pred = float(predicted.get(s.name, 0.0))
+        rel = ((s.measured_s - pred) / pred) if pred > 0.0 else None
+        stages.append({"name": s.name, "kind": s.kind,
+                       "predicted_s": pred, "measured_s": s.measured_s,
+                       "rel_err": rel})
+    worst = [st["name"] for st in
+             sorted((st for st in stages if st["rel_err"] is not None),
+                    key=lambda st: abs(st["rel_err"]), reverse=True)]
+    scale = (trace.total_s / total_predicted_s
+             if total_predicted_s > 0.0 else None)
+    return {
+        "schedule": trace.schedule,
+        "plan": trace.plan,
+        "n_stages": trace.n_stages,
+        "total_predicted_s": float(total_predicted_s),
+        "total_measured_s": float(trace.total_s),
+        "overhead_s": float(trace.overhead_s),
+        "stages": stages,
+        "worst": worst,
+        "calibration": {"time_scale": scale},
+    }
+
+
+class _LayerHarness:
+    """The audited layer's operands and layout, derived exactly the way
+    ``apply_moe`` derives them, so the audited plans are the plans
+    training would run.  Shared by the multi-schedule audit and the
+    launchers' ``--trace`` single-schedule path."""
+
+    def __init__(self, mesh, dims: ParallelDims, cfg: MoEConfig,
+                 tokens_global: int, infer: bool = False, seed: int = 0):
+        sizes = dims.sizes(mesh)
+        self.mesh, self.dims, self.cfg = mesh, dims, cfg
+        self.n_ep, self.n_esp, self.n_mp = \
+            sizes["ep"], sizes["esp"], sizes["mp"]
+        self.gate_cfg = cfg.gate_config()
+        batch_ax = dims.batch_axes
+        n_token_shard = axis_size(mesh, batch_ax)
+        self.s_local, self.cap = shard_pool_capacity(
+            tokens_global, n_token_shard, self.n_mp, self.gate_cfg,
+            infer=infer)
+        self.infer = infer
+        wire = cfg.comm.wire_dtype
+        self.wire = "f32" if wire == "auto" else wire
+
+        M = cfg.d_model
+        kx, kp = jax.random.split(jax.random.PRNGKey(seed))
+        params = init_moe_params(kp, cfg)
+        xt = jax.random.normal(kx, (tokens_global, M), jnp.float32)
+        pspecs = moe_param_specs(cfg, mesh, dims)
+        w3 = params.get("w3")
+        if w3 is None:
+            w3 = jnp.zeros((0,), xt.dtype)
+            w3_spec = P(None)
+        else:
+            w3_spec = pspecs["w3"]
+        x_spec = P(tuple(batch_ax) or None, None)
+        self.in_specs = (x_spec, pspecs["wg"], pspecs["w1"], w3_spec,
+                         pspecs["w2"])
+        self.args = (xt, params["wg"], params["w1"], w3, params["w2"])
+        self.shape = MoELayerShape(
+            B=max(self.s_local, 1), L=1, M=M, H=cfg.d_ff,
+            E=cfg.n_experts, k=cfg.top_k, f=cfg.capacity_factor,
+            n_mp=self.n_mp, n_esp=self.n_esp, n_ep=self.n_ep,
+            infer=infer)
+
+    def info(self, n_chunks: int = 1) -> MoEShardInfo:
+        dims, cfg = self.dims, self.cfg
+        return MoEShardInfo(
+            ep_axes=tuple(dims.ep), esp_axes=tuple(dims.esp),
+            mp_axes=tuple(dims.mp), n_ep=self.n_ep, n_esp=self.n_esp,
+            n_mp=self.n_mp, tokens=self.s_local, cap=self.cap,
+            gate=self.gate_cfg, act=cfg.act, glu=cfg.glu,
+            saa_chunks=cfg.saa_chunks, pipeline_chunks=max(n_chunks, 1),
+            kernel=cfg.kernel,
+            comm=CommConfig(wire_dtype=self.wire,
+                            scaling=cfg.comm.scaling))
+
+    def trace(self, schedule: str, n_chunks: int = 1, iters: int = 5,
+              warmup: int = 2) -> StageTrace:
+        return time_plan_stages(schedule, self.info(n_chunks), self.mesh,
+                                self.in_specs, self.args, iters=iters,
+                                warmup=warmup, n_chunks=n_chunks)
+
+
+def trace_schedule(mesh, dims: ParallelDims, cfg: MoEConfig,
+                   tokens_global: int, schedule: str, *,
+                   infer: bool = False, n_chunks: int = 1,
+                   iters: int = 5, warmup: int = 2,
+                   seed: int = 0) -> StageTrace:
+    """Single-schedule stage trace (the launchers' ``--trace`` path:
+    the returned :class:`StageTrace` exports via
+    :func:`repro.obs.trace.save_chrome_trace`)."""
+    h = _LayerHarness(mesh, dims, cfg, tokens_global, infer=infer,
+                      seed=seed)
+    return h.trace(schedule, n_chunks=n_chunks, iters=iters,
+                   warmup=warmup)
+
+
+def run_schedule_audit(mesh, dims: ParallelDims, cfg: MoEConfig,
+                       tokens_global: int,
+                       schedules: Sequence[str] = DEFAULT_AUDIT_SCHEDULES,
+                       perf_model: Optional[PerfModel] = None,
+                       n_chunks: int = 1, iters: int = 5, warmup: int = 2,
+                       seed: int = 0) -> List[dict]:
+    """Measure + price the given schedules on ``mesh`` and return one
+    audit report per schedule.
+
+    Seqpar schedules are excluded from the default set (their
+    token-shard contract changes the operand sharding); pass them
+    explicitly if the caller's specs match.
+    """
+    h = _LayerHarness(mesh, dims, cfg, tokens_global, seed=seed)
+    pm = perf_model or tpu_v5e_model(h.n_ep, h.n_esp, h.n_mp)
+    reports = []
+    for sched in schedules:
+        trace = h.trace(sched, n_chunks=n_chunks, iters=iters,
+                        warmup=warmup)
+        base = UNCHUNKED_OF.get(sched, sched)
+        plan = planlib.build_plan(base, h.info(n_chunks),
+                                  n_chunks=n_chunks)
+        predicted = pm.t_plan_stages(plan, h.shape, wire_dtype=h.wire)
+        total_pred = pm.t_plan(plan, h.shape, wire_dtype=h.wire)
+        reports.append(audit_report(trace, predicted, total_pred))
+    return reports

@@ -28,8 +28,9 @@ pre-existing step function and none of this module is consulted.
 from __future__ import annotations
 
 import math
-from collections import deque
 from dataclasses import dataclass, field
+
+from repro.obs.registry import Histogram
 
 OK = "ok"
 SKIP = "skip"
@@ -79,7 +80,15 @@ class GuardState:
         "steps": 0, "skipped": 0, "rollbacks": 0, "loss_spikes": 0,
         "fp8_fallbacks": 0, "rollback_unavailable": 0})
     events: list = field(default_factory=list)
-    _losses: deque = field(default_factory=deque)
+    _losses: Histogram = None
+
+    def __post_init__(self):
+        # rolling finite-loss window: the obs histogram is the one
+        # quantile codepath (median == sorted[n // 2], same as the
+        # engine's p50), so the spike detector and the serve latency
+        # stats can never drift apart numerically
+        self._losses = Histogram("guard_loss",
+                                 window=self.cfg.spike_window)
 
     # --- per-step policy -----------------------------------------------------
     def observe(self, step: int, loss: float, nonfinite: bool) -> str:
@@ -102,9 +111,7 @@ class GuardState:
             return ROLLBACK
         self.streak = 0
         self.lr_scale = min(self.lr_scale * self.cfg.lr_recover, 1.0)
-        self._losses.append(loss)
-        while len(self._losses) > self.cfg.spike_window:
-            self._losses.popleft()
+        self._losses.add(loss)
         return OK
 
     def _is_spike(self, loss: float) -> bool:
@@ -112,11 +119,8 @@ class GuardState:
         folded into the window, so one spike cannot mask the next)."""
         if len(self._losses) < self.cfg.spike_min:
             return False
-        xs = sorted(self._losses)
-        med = xs[len(xs) // 2]
-        mad = sorted(abs(x - med) for x in xs)[len(xs) // 2]
-        sigma = 1.4826 * max(mad, 1e-12)
-        return loss > med + self.cfg.spike_z * sigma
+        sigma = 1.4826 * max(self._losses.mad(), 1e-12)
+        return loss > self._losses.median() + self.cfg.spike_z * sigma
 
     # --- rollback bookkeeping ------------------------------------------------
     def record_rollback(self, step: int, restored_step) -> None:
@@ -124,7 +128,7 @@ class GuardState:
         streak and the spike window — the restored state's losses belong
         to a different trajectory."""
         self.streak = 0
-        self._losses.clear()
+        self._losses.reset()
         if restored_step is None:
             self.counters["rollback_unavailable"] += 1
             self.events.append({"step": step, "kind": "rollback_unavailable"})

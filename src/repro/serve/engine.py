@@ -55,7 +55,9 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro import obs
 from repro.models import blocks as blk
+from repro.obs.registry import Registry, quantile
 from repro.serve.kvcache import KVCachePool
 from repro.serve.sampler import SamplerConfig
 from repro.train.loop import (make_engine_decode_step,
@@ -201,6 +203,9 @@ class Engine:
                       "peak_blocks": 0, "shed": 0, "shed_blocks": 0,
                       "shed_queue": 0, "expired": 0, "evicted": 0}
         self._rid = 0
+        # request-latency rollup instruments (one quantile codepath:
+        # the same obs histogram the guard rails and latency_stats use)
+        self.registry = Registry()
         # --- robustness knobs (all off by default) ---
         self.queue_slo = float(queue_slo)        # max queue wait, seconds
         self.watchdog_rounds = int(watchdog_rounds)
@@ -233,6 +238,8 @@ class Engine:
                       max_new_tokens=int(max_new_tokens), sampler=sampler,
                       arrival=float(arrival), deadline=float(deadline))
         self.queue.append((req, time.perf_counter()))
+        obs.emit("req_queued", rid=rid, prompt_len=len(prompt),
+                 max_new_tokens=int(max_new_tokens))
         return rid
 
     # --- load shedding / cancellation ---------------------------------------
@@ -246,6 +253,8 @@ class Engine:
         self._cancelled.append(Completion(
             rid=req.rid, prompt=req.prompt, tokens=[], text="",
             timing={"queued": t - t_submit}, status="shed", reason=reason))
+        obs.emit("req_shed", rid=req.rid, reason=reason,
+                 queued_s=t - t_submit)
 
     def _cancel(self, s, status: str, reason: str = "") -> None:
         """Cancel an in-flight request mid-decode/prefill: its KV pages
@@ -264,6 +273,9 @@ class Engine:
             rid=s.req.rid, prompt=s.req.prompt, tokens=list(s.generated),
             text=self.detokenize(s.generated), timing=timing,
             status=status, reason=reason))
+        obs.emit("req_cancelled", rid=s.req.rid, status=status,
+                 reason=reason, tokens=len(s.generated),
+                 latency_s=timing["latency"])
 
     def _infeasible_blocks(self, req) -> bool:
         """True when the request's worst-case page demand exceeds the
@@ -344,6 +356,9 @@ class Engine:
                 st.delay_left = self.faults.req_delay_rounds(req.rid)
             self.filling.append(st)
             self.stats["admitted"] += 1
+            obs.emit("req_admitted", rid=req.rid,
+                     queued_s=st.t_admit - st.t_submit,
+                     prefix_hit_tokens=shared_toks)
         if self.filling and (self._fill_turn or not self.active):
             self._prefill_chunk_round(params)
             self._fill_turn = False
@@ -382,6 +397,8 @@ class Engine:
             if not finished and not self.active and not self.filling \
                     and self.queue:
                 time.sleep(0.001)       # all arrivals in the future
+        if obs.enabled():
+            self.emit_rollup()
         return sorted(done, key=lambda c: c.rid)
 
     # --- internals ----------------------------------------------------------
@@ -460,6 +477,9 @@ class Engine:
             self.pool.commit_prefix(s.req.rid, s.req.prompt)
             self.active[s.slot] = s
             finished_fill.add(id(s))
+            obs.emit("req_prefilled", rid=s.req.rid,
+                     prompt_len=len(s.req.prompt),
+                     ttft_s=s.t_first - s.t_submit)
         self.filling = [s for s in self.filling
                         if id(s) not in finished_fill]
         self.stats["prefill_calls"] += 1
@@ -499,6 +519,8 @@ class Engine:
         pl = autosched.current_placement()
         desc = pl.summary() if pl is not None else "uniform"
         self._jit_steps()
+        obs.emit("serve_rebalance", epoch=epoch, placement=desc,
+                 tick=self._tick)
         print(f"serve REBALANCE -> placement epoch {epoch}: {desc}",
               flush=True)
 
@@ -556,6 +578,11 @@ class Engine:
             s.stall_rounds = 0
         self.stats["decode_calls"] += 1
         self.stats["decode_tokens"] += len(states)
+        if obs.enabled():
+            obs.emit("decode_round", tick=self._tick, rows=len(states),
+                     active=len(self.active),
+                     block_occupancy=self.pool.alloc_blocks.n_live
+                     / max(self.pool.n_blocks, 1))
         self._maybe_rebalance()
 
     def _collect_finished(self) -> list:
@@ -570,14 +597,33 @@ class Engine:
             s.t_done = time.perf_counter()
             del self.active[slot]
             self.pool.release(s.req.rid)            # pages back to the arena
+            timing = {"ttft": s.t_first - s.t_submit,
+                      "latency": s.t_done - s.t_submit,
+                      "queued": s.t_admit - s.t_submit}
+            self.registry.histogram("latency_s").add(timing["latency"])
+            self.registry.histogram("ttft_s").add(timing["ttft"])
+            obs.emit("req_finished", rid=s.req.rid,
+                     tokens=len(s.generated), ttft_s=timing["ttft"],
+                     latency_s=timing["latency"])
             done.append(Completion(
                 rid=s.req.rid, prompt=s.req.prompt,
                 tokens=list(s.generated),
-                text=self.detokenize(s.generated),
-                timing={"ttft": s.t_first - s.t_submit,
-                        "latency": s.t_done - s.t_submit,
-                        "queued": s.t_admit - s.t_submit}))
+                text=self.detokenize(s.generated), timing=timing))
         return done
+
+    def emit_rollup(self) -> dict:
+        """Snapshot the engine's rolling latency instruments + counters
+        into one ``serve_rollup`` event (emitted when a sink is active)
+        and return the snapshot."""
+        admitted = max(self.stats["admitted"], 1)
+        snap = self.registry.snapshot()
+        snap.update(self.stats)
+        snap["prefix_hit_rate"] = self.stats["prefix_hits"] / admitted
+        snap["block_occupancy"] = (self.pool.alloc_blocks.n_live
+                                   / max(self.pool.n_blocks, 1))
+        snap.pop("per_expert_load", None)   # vector: too wide for rollup
+        obs.emit("serve_rollup", **snap)
+        return snap
 
 
 def latency_stats(completions) -> dict:
@@ -609,8 +655,10 @@ def latency_stats(completions) -> dict:
     ttft = sorted(c.timing["ttft"] for c in ok if "ttft" in c.timing)
 
     def pct(xs, p):
-        # single-sample safe: index clamps into [0, len-1]
-        return xs[min(int(p / 100.0 * len(xs)), len(xs) - 1)] if xs else 0.0
+        # the obs quantile (nearest-rank, single-sample safe: the index
+        # clamps into [0, len-1]); empty reads as 0.0 here — "nothing
+        # to measure", matching the zero-filled default key set
+        return quantile(xs, p) if xs else 0.0
 
     n_tok = sum(len(c.tokens) for c in ok)
     span = max(max(lat), 1e-9)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.models.model import Model
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
                                opt_state_specs)
@@ -320,6 +321,18 @@ class Trainer:
             if float(el.sum()) > 0:      # all-zero = no routing signal
                 self.load_ema.update(el)
 
+    def _emit_train_step(self, m):
+        """One ``train_step`` event per history row (loss, grad norm,
+        LR scale, imbalance, ...), plus the per-expert load vector when
+        the EMA is live — the streaming twin of ``history``."""
+        if not obs.enabled():
+            return
+        obs.emit("train_step", **m)
+        if self.load_ema.ready:
+            obs.emit("expert_load", step=m.get("step"),
+                     load=[round(float(v), 3)
+                           for v in self.load_ema.value()])
+
     def _maybe_rebalance(self, step):
         """Every ``rebalance_every`` steps, ask autosched whether a
         placement derived from the load EMA beats uniform under the
@@ -344,6 +357,8 @@ class Trainer:
         pl = autosched.current_placement()
         desc = pl.summary() if pl is not None else "uniform"
         self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+        obs.emit("train_rebalance", step=step, epoch=epoch,
+                 placement=desc)
         print(f"step {step:5d}  REBALANCE -> placement epoch {epoch}: "
               f"{desc}", flush=True)
 
@@ -356,6 +371,8 @@ class Trainer:
         bx = tuple(self.dims.batch_axes)
         t0 = time.perf_counter()
         for step in range(n_steps):
+            if obs.enabled():
+                obs.set_context(step=step)
             batch = data.sharded_batch(step, self.mesh, bx)
             params, opt_state, metrics = self._step(params, opt_state, batch)
             if step == 0:
@@ -372,6 +389,7 @@ class Trainer:
                 if self.load_ema.ready:
                     m["load_imbalance"] = self.load_ema.imbalance()
                 history.append(m)
+                self._emit_train_step(m)
                 print(f"step {step:5d}  loss {m['loss']:.4f}  "
                       f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "
                       f"lr {m['lr']:.2e}", flush=True)
@@ -406,6 +424,8 @@ class Trainer:
         bx = tuple(self.dims.batch_axes)
         t0 = time.perf_counter()
         for step in range(n_steps):
+            if obs.enabled():
+                obs.set_context(step=step)
             batch = data.sharded_batch(step, self.mesh, bx)
             gf = self.faults.grad_fault(step) if self.faults else 0.0
             # donated-in params/opt_state come back as the OLD values on a
@@ -424,12 +444,18 @@ class Trainer:
                 if res is None:
                     # nothing restorable: limp on with the backed-off LR
                     state.record_rollback(step, None)
+                    obs.emit("guard_rollback", restored_step=None,
+                             loss=loss)
                 else:
                     params, opt_state, rstep = res
                     state.record_rollback(step, rstep)
+                    obs.emit("guard_rollback", restored_step=rstep,
+                             loss=loss)
                     print(f"step {step:5d}  ROLLBACK -> re-anchored to "
                           f"checkpoint step {rstep}", flush=True)
             elif action == guardlib.SKIP:
+                obs.emit("guard_skip", streak=state.streak,
+                         lr_scale=state.lr_scale)
                 print(f"step {step:5d}  SKIPPED (non-finite, streak "
                       f"{state.streak}, lr_scale {state.lr_scale:.3g})",
                       flush=True)
@@ -441,6 +467,9 @@ class Trainer:
                 autosched.set_wire_ceiling(state.cfg.fp8_fallback)
                 n = autosched.invalidate("fp8 wire overflow fallback")
                 self._step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+                obs.emit("fp8_fallback",
+                         sat_rate=guardlib.fp8_sat_rate(),
+                         wire=state.cfg.fp8_fallback, invalidated=n)
                 print(f"fp8 wire overflow (sat rate "
                       f"{guardlib.fp8_sat_rate():.2e}): falling back to "
                       f"{state.cfg.fp8_fallback} wire "
@@ -454,6 +483,7 @@ class Trainer:
                 if self.load_ema.ready:
                     m["load_imbalance"] = self.load_ema.imbalance()
                 history.append(m)
+                self._emit_train_step(m)
                 print(f"step {step:5d}  loss {m['loss']:.4f}  "
                       f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}  "
                       f"lr {m['lr']:.2e}", flush=True)

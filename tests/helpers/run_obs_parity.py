@@ -1,0 +1,134 @@
+"""Subprocess helper: telemetry must never change the numbers.
+
+Run as:  python tests/helpers/run_obs_parity.py <mode>
+  mode = merged   : mesh (4, 2) data/model, ESP == MP (production mapping)
+  mode = distinct : mesh (2, 2, 2) ep/esp/mp
+
+For each mode the same MoE layer (schedule s1, then s2) runs three ways:
+
+  1. obs unconfigured — the plain baseline path,
+  2. obs sink configured — every emitter live (trace_tag, debug
+     callbacks armed),
+  3. after the timed prefix harness (``time_plan_stages`` via
+     ``trace_schedule``) compiled and ran on the same mesh + schedule,
+
+and the forward output + aux scalars must be BITWISE identical across
+all three — the observability layer is read-only by construction, and
+this is the proof.  The merged mode additionally runs a real
+``run_schedule_audit`` and checks the joined report, and pushes
+saturating fp8 traffic through the wire to assert the ``fp8_sat``
+events arrive in the sink with schedule/wire/moe_call trace context.
+
+Prints "OK <mode>" on success; asserts otherwise.
+"""
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.collectives import CommConfig
+from repro.core.moe import MoEConfig, apply_moe, init_moe_params
+from repro.obs.audit import run_schedule_audit, trace_schedule
+from repro.obs.sink import read_events
+from repro.obs.trace import chrome_trace_events
+from repro.parallel.mesh import ParallelDims, make_mesh
+
+
+def _forward(mesh, dims, cfg, params, x, sched):
+    """Fresh trace every call: the claim is that traces built with obs
+    enabled produce identical programs, so never reuse a jit cache
+    entry across obs states."""
+    def f(p, x):
+        return apply_moe(x, p, mesh=mesh, dims=dims, cfg=cfg,
+                         schedule=sched)
+    y, aux = jax.jit(f)(params, x)
+    return np.asarray(y), {k: float(v) for k, v in aux.items()
+                           if getattr(v, "ndim", 0) == 0}
+
+
+def _assert_bitwise(tag, ref, got):
+    y0, a0 = ref
+    y1, a1 = got
+    assert y0.dtype == y1.dtype, tag
+    np.testing.assert_array_equal(y0, y1, err_msg=tag)
+    assert a0 == a1, (tag, a0, a1)
+
+
+def main(mode: str):
+    if mode == "merged":
+        mesh = make_mesh((4, 2), ("data", "model"))
+        dims = ParallelDims(ep=("data",), esp=("model",), mp=("model",))
+    else:
+        mesh = make_mesh((2, 2, 2), ("ep", "esp", "mp"))
+        dims = ParallelDims(ep=("ep",), esp=("esp",), mp=("mp",))
+
+    cfg = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                    capacity_factor=8.0, schedule="s1")
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 16, 32))
+
+    for sched in ("s1", "s2"):
+        ref = _forward(mesh, dims, cfg, params, x, sched)
+
+        with tempfile.TemporaryDirectory() as td:
+            obs.configure(td, meta={"kind": "parity"})
+            try:
+                got = _forward(mesh, dims, cfg, params, x, sched)
+            finally:
+                obs.close()
+        _assert_bitwise(f"{sched} sink-on", ref, got)
+
+        st = trace_schedule(mesh, dims, cfg, x.shape[0] * x.shape[1],
+                            sched, iters=2, warmup=1)
+        assert st.n_stages > 0 and st.total_s >= 0.0
+        assert all(t.measured_s >= 0.0 for t in st.stages)
+        assert len(chrome_trace_events(st)) > st.n_stages
+        got = _forward(mesh, dims, cfg, params, x, sched)
+        _assert_bitwise(f"{sched} post-timing", ref, got)
+
+    if mode == "merged":
+        # real joined audit on the live mesh: schema + stage coverage
+        import json
+        [rep] = run_schedule_audit(mesh, dims, cfg,
+                                   tokens_global=x.shape[0] * x.shape[1],
+                                   schedules=("s1",), iters=2, warmup=1)
+        json.dumps(rep)
+        assert rep["schedule"] == "s1"
+        assert rep["n_stages"] == len(rep["stages"]) > 0
+        assert rep["total_measured_s"] > 0.0
+        assert rep["worst"], "no priced stage in the audit"
+
+        # fp8 wire saturation events reach the sink with trace context
+        # (scaling="none" casts directly, so the 1e3-scaled activations
+        # genuinely clip at +-448 — per_chunk absmax never saturates)
+        cfg8 = replace(cfg, comm=CommConfig(wire_dtype="fp8_e4m3",
+                                            scaling="none"))
+        with tempfile.TemporaryDirectory() as td:
+            obs.configure(td, meta={"kind": "fp8"})
+            try:
+                _forward(mesh, dims, cfg8, params, x * 1e3, "s1")
+                obs.flush()
+                evs = read_events(obs.get_sink().paths)
+            finally:
+                obs.close()
+        sat = [e for e in evs if e["event"] == "fp8_sat"]
+        assert sat, f"no fp8_sat events in {[e['event'] for e in evs]}"
+        for e in sat:
+            assert e["sat"] > 0 and e["total"] > 0
+            assert e["schedule"] == "s1"
+            assert e["wire"] == "fp8_e4m3"
+            assert "moe_call" in e
+
+    print("OK", mode)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "merged")

@@ -1,0 +1,370 @@
+"""Observability tests: the one quantile codepath (registry units), the
+JSONL sink round-trip + rotation contract, the obs module facade
+(context planes, no-op when unconfigured), the audit report schema, the
+timed-executor bitwise-parity matrix (subprocess, 8 fake devices), and
+the serve engine's lifecycle event ordering."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro import obs
+from repro.obs.audit import audit_report
+from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
+                                quantile)
+from repro.obs.sink import JsonlSink, read_events
+from repro.obs.trace import StageTime, StageTrace, chrome_trace_events
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+
+def _run(script, *args, n_devices=8, timeout=900):
+    env = subprocess_env(n_devices)
+    env["PYTHONPATH"] = HELPERS + os.pathsep + env["PYTHONPATH"]
+    r = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(autouse=True)
+def obs_reset():
+    """No test leaks a configured sink or context into the next."""
+    obs.close()
+    yield
+    obs.close()
+
+
+class TestQuantile:
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            quantile([], 50)
+
+    def test_single_sample_every_p(self):
+        for p in (0, 50, 95, 99, 100):
+            assert quantile([7.0], p) == 7.0
+
+    def test_median_matches_legacy_convention(self):
+        """p50 == sorted[n // 2]: the exact element the guard-rail spike
+        detector and the serve engine's pct() used before unification —
+        delegating cannot shift either by a single sample."""
+        for n in (1, 2, 3, 8, 9, 31, 32):
+            xs = sorted(float(v) for v in np.random.RandomState(n)
+                        .randn(n))
+            assert quantile(xs, 50) == xs[n // 2]
+
+    def test_upper_percentiles(self):
+        xs = [float(i) for i in range(100)]
+        assert quantile(xs, 95) == 95.0
+        assert quantile(xs, 99) == 99.0
+        assert quantile(xs, 100) == 99.0    # clamped to the last element
+        assert quantile(xs, 0) == 0.0
+
+
+class TestHistogram:
+    def test_window_trims_oldest(self):
+        h = Histogram("h", window=4)
+        for v in range(10):
+            h.add(float(v))
+        assert len(h) == 4
+        assert h.sorted_values() == [6.0, 7.0, 8.0, 9.0]
+
+    def test_median_and_mad(self):
+        h = Histogram("h")
+        for v in (1.0, 9.0, 2.0, 8.0, 5.0):
+            h.add(v)
+        assert h.median() == 5.0
+        devs = sorted(abs(v - 5.0) for v in (1.0, 9.0, 2.0, 8.0, 5.0))
+        assert h.mad() == devs[len(devs) // 2]
+
+    def test_summary_schema_and_empty(self):
+        h = Histogram("h")
+        s = h.summary()
+        assert s == {"count": 0, "min": 0.0, "max": 0.0, "mean": 0.0,
+                     "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        h.add(3.0)
+        h.add(1.0)
+        s = h.summary()
+        assert s["count"] == 2 and s["min"] == 1.0 and s["max"] == 3.0
+        assert s["mean"] == 2.0 and s["p50"] == 3.0
+
+    def test_reset(self):
+        h = Histogram("h")
+        h.add(1.0)
+        h.reset()
+        assert len(h) == 0 and h.summary()["count"] == 0
+
+
+class TestRegistry:
+    def test_counter_gauge_histogram(self):
+        r = Registry()
+        r.counter("steps").inc()
+        r.counter("steps").inc(2)
+        r.gauge("lr").set(0.5)
+        r.histogram("lat").add(1.0)
+        snap = r.snapshot()
+        assert snap["steps"] == 3
+        assert snap["lr"] == 0.5
+        assert snap["lat.count"] == 1 and snap["lat.p50"] == 1.0
+
+    def test_units_standalone(self):
+        c = Counter("c")
+        c.inc(5)
+        assert c.value == 5
+        g = Gauge("g")
+        g.set(2.5)
+        assert g.value == 2.5
+
+
+class TestJsonlSink:
+    def test_round_trip_with_meta_header(self, tmp_path):
+        with JsonlSink(tmp_path, meta={"arch": "x", "mesh": [4, 2]}) as s:
+            s.emit("a", v=1)
+            s.emit("b", v=2.5, tag="t")
+        evs = read_events(s.paths)
+        assert [e["event"] for e in evs] == ["meta", "a", "b"]
+        assert evs[0]["arch"] == "x" and evs[0]["mesh"] == [4.0, 2.0]
+        assert evs[1]["v"] == 1 and evs[2]["tag"] == "t"
+        assert [e["seq"] for e in evs] == [0, 1, 2]
+        assert all(e["t"] >= 0.0 for e in evs)
+
+    def test_rotation_recarries_header_and_global_seq(self, tmp_path):
+        s = JsonlSink(tmp_path, meta={"run": "r"}, rotate_bytes=256,
+                      buffer_events=1)
+        for i in range(20):
+            s.emit("tick", i=i)
+        s.close()
+        assert len(s.paths) > 1
+        for p in s.paths:
+            first = json.loads(open(p).readline())
+            assert first["event"] == "meta" and first["run"] == "r"
+        evs = read_events(s.paths)
+        seqs = [e["seq"] for e in evs]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        ticks = [e["i"] for e in evs if e["event"] == "tick"]
+        assert ticks == list(range(20))
+
+    def test_reserved_keys_win_on_collision(self, tmp_path):
+        with JsonlSink(tmp_path, meta={"seq": 999, "kind": "k"}) as s:
+            s.emit("e", seq=888, t=-1.0, ok=1)
+        evs = read_events(s.paths)
+        assert evs[0]["seq"] == 0 and evs[0]["kind"] == "k"
+        assert evs[1]["event"] == "e" and evs[1]["seq"] == 1
+        assert evs[1]["t"] >= 0.0 and evs[1]["ok"] == 1
+
+    def test_numpy_scalars_coerced(self, tmp_path):
+        with JsonlSink(tmp_path) as s:
+            s.emit("e", a=np.float32(1.5), b=np.int64(3),
+                   c=np.array([1, 2]))
+        e = read_events(s.paths)[1]
+        assert e["a"] == 1.5 and e["b"] == 3 and e["c"] == [1, 2]
+
+    def test_emit_after_close_is_noop(self, tmp_path):
+        s = JsonlSink(tmp_path)
+        s.close()
+        s.emit("late")     # must not raise or write
+        assert len(read_events(s.paths)) == 1
+
+
+class TestObsFacade:
+    def test_unconfigured_is_noop(self):
+        assert not obs.enabled()
+        obs.emit("anything", x=1)    # must not raise
+        obs.flush()
+
+    def test_configure_emit_close(self, tmp_path):
+        obs.configure(tmp_path, meta={"kind": "t"})
+        assert obs.enabled()
+        obs.emit("e", v=1)
+        paths = obs.get_sink().paths
+        obs.close()
+        assert not obs.enabled()
+        evs = read_events(paths)
+        assert [e["event"] for e in evs] == ["meta", "e"]
+
+    def test_runtime_context_merged_and_cleared(self, tmp_path):
+        obs.configure(tmp_path)
+        obs.set_context(step=3, run="r")
+        obs.emit("a")
+        obs.set_context(run=None)          # None removes the key
+        obs.emit("b", step=9)              # explicit field wins
+        paths = obs.get_sink().paths
+        obs.close()
+        a, b = [e for e in read_events(paths) if e["event"] in "ab"]
+        assert a["step"] == 3 and a["run"] == "r"
+        assert b["step"] == 9 and "run" not in b
+
+    def test_close_clears_context(self, tmp_path):
+        obs.configure(tmp_path)
+        obs.set_context(step=1)
+        obs.close()
+        obs.configure(tmp_path)
+        obs.emit("e")
+        paths = obs.get_sink().paths
+        obs.close()
+        assert "step" not in read_events(paths)[-1]
+
+    def test_trace_tag_nests_and_restores(self):
+        assert obs.trace_context() == {}
+        with obs.trace_tag(moe_call=1, schedule="s1"):
+            assert obs.trace_context() == {"moe_call": 1,
+                                           "schedule": "s1"}
+            with obs.trace_tag(schedule="s2"):
+                assert obs.trace_context()["schedule"] == "s2"
+                assert obs.trace_context()["moe_call"] == 1
+            assert obs.trace_context()["schedule"] == "s1"
+        assert obs.trace_context() == {}
+
+
+class TestAuditReport:
+    def _trace(self):
+        return StageTrace(
+            plan="s1", schedule="s1", total_s=7e-3, overhead_s=1e-4,
+            stages=(StageTime("gate", "gate", 1e-4),
+                    StageTime("a2a_d", "dispatch_a2a", 3e-3),
+                    StageTime("ffn", "expert_ffn", 2e-3),
+                    StageTime("a2a_c", "combine_a2a", 1.9e-3)))
+
+    def test_schema_locked(self):
+        rep = audit_report(self._trace(),
+                           {"a2a_d": 1e-3, "ffn": 2e-3, "a2a_c": 1e-3},
+                           total_predicted_s=4e-3)
+        json.dumps(rep)     # artifact JSONs embed it verbatim
+        assert set(rep) == {"schedule", "plan", "n_stages",
+                            "total_predicted_s", "total_measured_s",
+                            "overhead_s", "stages", "worst",
+                            "calibration"}
+        assert rep["n_stages"] == 4 == len(rep["stages"])
+        for st in rep["stages"]:
+            assert set(st) == {"name", "kind", "predicted_s",
+                               "measured_s", "rel_err"}
+
+    def test_rel_err_and_worst_ranking(self):
+        rep = audit_report(self._trace(),
+                           {"a2a_d": 1e-3, "ffn": 2e-3, "a2a_c": 1e-3},
+                           total_predicted_s=4e-3)
+        by = {s["name"]: s for s in rep["stages"]}
+        assert by["gate"]["rel_err"] is None       # priced at zero
+        assert by["ffn"]["rel_err"] == pytest.approx(0.0)
+        assert by["a2a_d"]["rel_err"] == pytest.approx(2.0)
+        assert by["a2a_c"]["rel_err"] == pytest.approx(0.9)
+        assert rep["worst"] == ["a2a_d", "a2a_c", "ffn"]
+        assert rep["calibration"]["time_scale"] == pytest.approx(7 / 4)
+
+    def test_zero_predicted_total(self):
+        rep = audit_report(self._trace(), {}, total_predicted_s=0.0)
+        assert rep["calibration"]["time_scale"] is None
+        assert rep["worst"] == []
+
+    def test_chrome_trace_export(self, tmp_path):
+        from repro.obs.trace import save_chrome_trace
+        path = tmp_path / "trace.json"
+        save_chrome_trace(self._trace(), path)
+        doc = json.load(open(path))
+        evs = doc["traceEvents"]
+        slices = [e for e in evs if e["ph"] == "X"]
+        assert [s["name"] for s in slices] == ["gate", "a2a_d", "ffn",
+                                               "a2a_c"]
+        # slices tile the measured timeline back-to-back in order
+        assert slices[1]["ts"] == pytest.approx(slices[0]["dur"])
+        assert sum(s["dur"] for s in slices) == pytest.approx(7e-3 * 1e6)
+
+
+class TestTimedExecutorParity:
+    """Telemetry on, telemetry off, and after the prefix-timing harness:
+    bitwise-identical forward outputs (subprocess, 8 fake devices).
+    The merged mode also locks the live audit-report pipeline and the
+    fp8 saturation event flow."""
+
+    def test_merged(self):
+        assert "OK merged" in _run("run_obs_parity.py", "merged")
+
+    def test_distinct_axes(self):
+        assert "OK distinct" in _run("run_obs_parity.py", "distinct")
+
+
+class TestServeLifecycle:
+    def test_event_ordering_and_rollup(self, tmp_path):
+        import jax
+
+        from repro.models import build_model
+        from repro.parallel.mesh import ParallelDims, make_mesh
+        from repro.serve import Engine
+        from test_serve import tiny_dense_cfg
+
+        cfg = tiny_dense_cfg()
+        model = build_model(cfg)
+        mesh = make_mesh((1, 1), ("data", "model"))
+        dims = ParallelDims(dp=("data",), mp=("model",))
+        params = model.init(jax.random.PRNGKey(0))
+
+        obs.configure(tmp_path, meta={"kind": "serve-test"})
+        eng = Engine(model, mesh, dims, max_batch=2, max_len=64)
+        rng = np.random.RandomState(0)
+        for _ in range(3):
+            eng.submit(rng.randint(0, cfg.vocab_size, 5), 4)
+        eng.run(params, progress=False)
+        rollup = eng.emit_rollup()
+        paths = obs.get_sink().paths
+        obs.close()
+
+        evs = read_events(paths)
+        per_rid = {}
+        for e in evs:
+            if e["event"].startswith("req_"):
+                per_rid.setdefault(e["rid"], []).append(e["event"])
+        assert set(per_rid) == {0, 1, 2}
+        for rid, seq in per_rid.items():
+            assert seq == ["req_queued", "req_admitted",
+                           "req_prefilled", "req_finished"], (rid, seq)
+        fin = [e for e in evs if e["event"] == "req_finished"]
+        assert all(e["tokens"] == 4 and e["latency_s"] >= e["ttft_s"] >= 0
+                   for e in fin)
+        assert any(e["event"] == "decode_round" for e in evs)
+
+        # the run-end rollup mirrors the registry through ONE quantile
+        # codepath: its p50 is exactly quantile() of the event latencies
+        lats = sorted(e["latency_s"] for e in fin)
+        assert rollup["latency_s.p50"] == quantile(lats, 50)
+        assert rollup["latency_s.count"] == 3
+        assert "prefix_hit_rate" in rollup
+        roll_evs = [e for e in evs if e["event"] == "serve_rollup"]
+        assert len(roll_evs) >= 1
+
+    def test_latency_stats_uses_quantile(self):
+        """Engine.latency_stats' percentiles delegate to the registry
+        quantile — same element, not an interpolated neighbour."""
+        from types import SimpleNamespace
+
+        from repro.serve.engine import latency_stats
+        done = [SimpleNamespace(status="ok", tokens=[1] * 4,
+                                timing={"latency": float(v),
+                                        "ttft": float(v) / 2})
+                for v in (5.0, 1.0, 3.0, 2.0, 4.0)]
+        st = latency_stats(done)
+        assert st["p50_ms"] == 3.0 * 1e3
+        assert st["p95_ms"] == 5.0 * 1e3
+        assert st["ttft_p50_ms"] == 1.5 * 1e3
+
+
+class TestGuardHistogramDelegation:
+    def test_spike_window_median_unchanged(self):
+        """The guard spike detector now rides the obs Histogram; its
+        median/MAD must be the identical elements the old deque+sorted
+        code produced."""
+        from repro.runtime.guards import GuardConfig, GuardState
+
+        gs = GuardState(cfg=GuardConfig(spike_min=4, spike_window=8))
+        losses = [2.0, 2.1, 1.9, 2.05, 2.0, 1.95]
+        for i, v in enumerate(losses):
+            assert gs.observe(i, v, False) == "ok"
+        window = sorted(losses)
+        assert gs._losses.median() == window[len(window) // 2]
+        # a 10-sigma excursion over the rolling median still fires
+        assert gs.observe(9, 50.0, False) == "rollback"
